@@ -1,0 +1,35 @@
+"""Tables 5–6 reproduction: sparse_ratio (τ) and recent_ratio ablations —
+accuracy + cache memory per setting, expecting the paper's pattern
+(diminishing returns in τ; a sweet spot near recent_ratio=0.3)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks import common
+
+
+def run(csv: common.CsvOut) -> None:
+    task = "recall"
+    model, params = common.train_model(task)
+    seq = common.RECALL.seq_len
+    cap = max(16, int(seq * 0.4))
+
+    base = common.make_policy_for("lethe", cap)
+    for tau in (1.2, 2.0, 4.0, 10.0, 100.0):   # paper: 20..1000
+        pol = dataclasses.replace(base, sparse_ratio=tau)
+        t0 = time.time()
+        r = common.eval_answer_accuracy(model, params, pol, task,
+                                        n_batches=3)
+        csv.add(f"ablation/sparse_ratio/{tau}",
+                (time.time() - t0) * 1e6 / r["n"],
+                f"acc={r['accuracy']:.3f};capacity={cap}")
+
+    for rr in (0.1, 0.2, 0.3, 0.4):
+        pol = dataclasses.replace(base, recent_ratio=rr)
+        t0 = time.time()
+        r = common.eval_answer_accuracy(model, params, pol, task,
+                                        n_batches=3)
+        csv.add(f"ablation/recent_ratio/{rr}",
+                (time.time() - t0) * 1e6 / r["n"],
+                f"acc={r['accuracy']:.3f};capacity={cap}")

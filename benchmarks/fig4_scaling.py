@@ -1,0 +1,35 @@
+"""Figure 4 reproduction: latency / generation memory / throughput vs
+generated-token count. The paper shows FullKV latency+memory growing with
+length while Lethe plateaus after the first pruning rounds."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.serving.engine import Engine
+
+
+def run(csv: common.CsvOut) -> None:
+    model, params = common.train_model("reasoning")
+    seq0 = 64
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, model.cfg.vocab_size, size=(2, seq0)).astype(
+        np.int32)
+    for kind in ("fullkv", "lethe"):
+        for gen in (64, 128, 256):
+            cap = seq0 + gen + 8 if kind == "fullkv" else 48
+            pol = common.make_policy_for(kind, cap)
+            eng = Engine(model, params, pol)
+            res = eng.generate({"tokens": jnp.asarray(toks)}, gen,
+                               trace_live=True)
+            live_end = (res.live_token_trace[-1]
+                        if res.live_token_trace else 0)
+            csv.add(f"fig4/{kind}/gen{gen}",
+                    res.decode_seconds * 1e6 / (2 * gen),
+                    f"decode_s={res.decode_seconds:.2f};"
+                    f"cache_mb={res.cache_bytes/2**20:.2f};"
+                    f"live_tokens_final={live_end};"
+                    f"tput={res.tokens_per_second:.1f}")

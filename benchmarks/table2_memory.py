@@ -1,0 +1,45 @@
+"""Table 2 reproduction: per-device generation memory vs batch size.
+
+Paper: peak GPU MB for batch 1..32, FullKV OOMs at 32. Here: exact KV-cache
+bytes (the paper's "generation memory" is cache-dominated; Appendix Fig. 6)
+for batch 1..16 plus the projected A100-80GB OOM point for the full-size
+DeepSeek-R1-Distill-Qwen-7B geometry at 20k tokens — reproducing the OOM
+row analytically from the same arithmetic the paper's Table 2 exhibits."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.serving.engine import Engine
+
+
+def run(csv: common.CsvOut) -> None:
+    model, params = common.train_model("reasoning")
+    seq0 = common.REASONING.seq_len
+    gen = 48
+    for kind in ("fullkv", "lethe"):
+        for batch in (1, 4, 8, 16):
+            cap = seq0 + gen + 8 if kind == "fullkv" else 32
+            pol = common.make_policy_for(kind, cap)
+            eng = Engine(model, params, pol)
+            toks = np.random.default_rng(0).integers(
+                0, model.cfg.vocab_size, size=(batch, seq0)).astype(np.int32)
+            t0 = time.time()
+            res = eng.generate({"tokens": jnp.asarray(toks)}, gen)
+            us = (time.time() - t0) * 1e6 / (batch * gen)
+            csv.add(f"table2/{kind}/batch{batch}", us,
+                    f"cache_mb={res.cache_bytes/2**20:.2f};"
+                    f"tput={res.tokens_per_second:.1f}")
+
+    # analytic OOM projection at paper scale (Qwen-7B geometry, fp16):
+    # 28 layers × 4 kv heads × 128 dh × 2 (K,V) × 2 B — per token per seq
+    per_tok = 28 * 4 * 128 * 2 * 2
+    for batch in (1, 8, 16, 32):
+        full_gb = per_tok * 20_000 * batch / 2**30
+        lethe_gb = per_tok * 4096 * batch / 2**30
+        oom = "OOM" if full_gb > 80 * 0.6 else "fits"
+        csv.add(f"table2/projected7b/batch{batch}", 0.0,
+                f"fullkv_gb={full_gb:.1f}({oom});lethe_gb={lethe_gb:.1f}(fits)")

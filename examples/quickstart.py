@@ -1,0 +1,47 @@
+"""Quickstart: build a model, generate with FullKV vs Lethe, watch the cache
+stay bounded.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core.policy import make_policy
+from repro.models.api import build_model
+from repro.serving.engine import Engine
+
+
+def main():
+    # any of the 10 assigned architectures; reduced() = CPU-sized variant
+    cfg = get_arch("mixtral-8x7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32),
+                                           0, cfg.vocab_size)}
+
+    print(f"model: {cfg.name} ({cfg.family}), reduced to "
+          f"{cfg.n_layers}L d={cfg.d_model}")
+
+    full = Engine(model, params, make_policy("fullkv", capacity=160))
+    lethe = Engine(model, params, make_policy(
+        "lethe", capacity=48, sink_len=4, sparse_ratio=4.0,
+        recent_ratio=0.3))
+
+    for name, eng in [("FullKV", full), ("Lethe", lethe)]:
+        res = eng.generate(prompt, 96, trace_live=True)
+        tr = res.live_token_trace
+        print(f"{name:8s} cache={res.cache_bytes/2**20:6.2f} MiB  "
+              f"tokens/s={res.tokens_per_second:7.1f}  "
+              f"live tokens start={tr[0]} peak={max(tr)} end={tr[-1]}")
+    print("Lethe's live-token count plateaus; FullKV grows linearly —"
+          " that is the paper, in one print statement.")
+
+
+if __name__ == "__main__":
+    main()

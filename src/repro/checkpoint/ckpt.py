@@ -1,0 +1,70 @@
+"""Minimal pytree checkpointing (npz + structure manifest) — no orbax in
+this environment. Handles nested dict/list/tuple/NamedTuple pytrees of
+jnp/np arrays plus scalar leaves."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(path: str, tree, step: int | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves = _flatten_with_paths(tree)
+    arrays = {f"a{i}": np.asarray(leaf) for i, (_, leaf) in enumerate(leaves)}
+    manifest = {
+        "keys": [k for k, _ in leaves],
+        "step": step,
+    }
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+
+
+def restore(path: str, tree_like):
+    """Restore into the structure of ``tree_like`` (shape donor)."""
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(path + ".npz")
+    flat_like = _flatten_with_paths(tree_like)
+    by_key = {k: data[f"a{i}"] for i, k in enumerate(manifest["keys"])}
+    leaves = []
+    for key, leaf in flat_like:
+        if key not in by_key:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = by_key[key]
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype)
+                      if hasattr(leaf, "dtype") else arr.item())
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(path: str) -> int | None:
+    try:
+        with open(path + ".json") as f:
+            return json.load(f).get("step")
+    except FileNotFoundError:
+        return None

@@ -1,0 +1,22 @@
+"""Config registry: importing this package registers all assigned archs."""
+from repro.configs.base import ArchConfig, get_arch, list_archs, register
+from repro.configs.shapes import SHAPES, InputShape, get_shape
+
+# Side-effect registration of the 10 assigned architectures.
+from repro.configs import (  # noqa: F401
+    rwkv6_7b,
+    arctic_480b,
+    recurrentgemma_2b,
+    command_r_35b,
+    mixtral_8x7b,
+    qwen2_5_32b,
+    gemma2_27b,
+    granite_20b,
+    qwen2_vl_2b,
+    whisper_large_v3,
+)
+
+__all__ = [
+    "ArchConfig", "get_arch", "list_archs", "register",
+    "SHAPES", "InputShape", "get_shape",
+]

@@ -1,0 +1,21 @@
+"""Snowflake Arctic 480B — dense-MoE hybrid: 128-expert top-2 MoE with a
+parallel dense residual MLP [hf:Snowflake/snowflake-arctic-base]."""
+from repro.configs.base import ArchConfig, register
+
+ARCTIC_480B = register(ArchConfig(
+    name="arctic-480b",
+    family="moe",
+    source="hf:Snowflake/snowflake-arctic-base",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,            # GQA kv=8
+    d_head=128,
+    d_ff=4864,
+    vocab_size=32000,
+    n_experts=128,
+    n_experts_per_tok=2,
+    moe_d_ff=4864,
+    dense_residual_d_ff=4864,
+    rope_theta=1e6,
+))

@@ -1,0 +1,216 @@
+"""Architecture configuration system.
+
+Every assigned architecture is a frozen ``ArchConfig`` registered under its
+``--arch`` id. ``reduced()`` produces the CPU smoke-test variant of the same
+family (≤2 layers, d_model ≤ 512, ≤4 experts) as required by the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# Block kinds used by heterogeneous stacks.
+ATTN = "attn"          # global self-attention
+LOCAL_ATTN = "local"   # sliding-window self-attention
+RGLRU = "rglru"        # RecurrentGemma RG-LRU recurrent block
+RWKV = "rwkv"          # RWKV6 time-mix block
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    source: str                      # citation for the config numbers
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0                  # 0 -> d_model // n_heads
+
+    # --- attention options -------------------------------------------------
+    qkv_bias: bool = False
+    attn_logit_softcap: Optional[float] = None   # gemma2
+    final_logit_softcap: Optional[float] = None  # gemma2
+    sliding_window: Optional[int] = None         # mixtral SWA / local layers
+    local_global_period: int = 0     # gemma2: 2 -> alternate local/global
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    mrope: bool = False              # qwen2-vl M-RoPE (3 position streams)
+    mrope_sections: Tuple[int, ...] = ()
+
+    # --- MoE ----------------------------------------------------------------
+    n_experts: int = 0
+    n_experts_per_tok: int = 0
+    moe_d_ff: int = 0                # expert hidden dim (arctic differs)
+    dense_residual_d_ff: int = 0     # arctic: parallel dense FFN
+    moe_capacity_factor: float = 1.25  # GShard-style capacity (drops excess)
+
+    # --- recurrent / hybrid -------------------------------------------------
+    block_pattern: Tuple[str, ...] = ()  # per-layer kinds; () -> all ATTN
+    lru_width: int = 0               # rglru recurrence width (0 -> d_model)
+    conv_width: int = 4              # rglru temporal conv
+    rwkv_head_size: int = 64
+
+    # --- encoder-decoder ----------------------------------------------------
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq_len: int = 1500      # whisper native frame count
+
+    # --- misc ----------------------------------------------------------------
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = False
+    norm_style: str = "rmsnorm"      # rmsnorm | layernorm
+    act: str = "silu"                # silu | gelu | relu_sq
+    gated_mlp: bool = True           # SwiGLU/GeGLU (3 mats) vs plain (2 mats)
+    parallel_block: bool = False     # command-r style parallel attn+ffn
+    sandwich_norm: bool = False      # gemma2 post-sublayer norms
+    emb_scale_by_sqrt_dim: bool = False  # gemma-style input scaling
+    frontend: str = "none"           # none | audio_stub | vision_stub
+
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        if self.block_pattern:
+            pat = self.block_pattern
+            return tuple(pat[i % len(pat)] for i in range(self.n_layers))
+        if self.local_global_period:
+            # gemma2: layer 0 local, 1 global, ... (period 2)
+            return tuple(
+                LOCAL_ATTN if (i % self.local_global_period) != self.local_global_period - 1
+                else ATTN
+                for i in range(self.n_layers)
+            )
+        return tuple(ATTN for _ in range(self.n_layers))
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(k == RWKV for k in self.layer_kinds)
+
+    @property
+    def has_kv_cache(self) -> bool:
+        return any(k in (ATTN, LOCAL_ATTN) for k in self.layer_kinds)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when a 500k-token decode is natively feasible (no unbounded
+        full-attention cache)."""
+        kinds = self.layer_kinds
+        if all(k in (RWKV, RGLRU, LOCAL_ATTN) for k in kinds):
+            return True
+        if self.local_global_period:
+            return False  # global layers are full attention (gemma2)
+        # archs whose attention layers are all windowed (mixtral SWA)
+        return all(
+            (k != ATTN) or (self.sliding_window is not None) for k in kinds
+        )
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for MODEL_FLOPS roofline term)."""
+        d, L = self.d_model, self.n_layers
+        dh, hq, hkv = self.d_head, self.n_heads, self.n_kv_heads
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        for kind in self.layer_kinds:
+            if kind in (ATTN, LOCAL_ATTN):
+                per_layer += d * dh * (hq + 2 * hkv) + hq * dh * d
+            elif kind == RGLRU:
+                w = self.lru_width or d
+                per_layer += 2 * d * w + self.conv_width * w + 2 * w * w // 8 + w * d
+            elif kind == RWKV:
+                per_layer += 4 * d * d + 2 * d  # time-mix r,k,v,o + decay
+            # FFN
+            if self.n_experts:
+                per_layer += self.n_experts * 3 * d * self.moe_d_ff / len(self.layer_kinds) * 0
+        # FFN counted uniformly below
+        ffn = 0
+        if self.n_experts:
+            ffn = L * (self.n_experts * 3 * d * (self.moe_d_ff or self.d_ff)
+                       + self.n_experts * d)
+            if self.dense_residual_d_ff:
+                ffn += L * 3 * d * self.dense_residual_d_ff
+        else:
+            mult = 3 if self.gated_mlp else 2
+            ffn = L * mult * d * self.d_ff
+        enc = 0
+        if self.is_encoder_decoder:
+            enc = self.n_encoder_layers * (4 * d * d + 2 * d * self.d_ff)
+            # decoder cross-attention
+            enc += L * (d * dh * (hq + 2 * hkv) + hq * dh * d)
+        return int(emb + per_layer + ffn + enc)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        full = self.param_count()
+        all_experts = L * self.n_experts * 3 * d * (self.moe_d_ff or self.d_ff)
+        active_experts = L * self.n_experts_per_tok * 3 * d * (self.moe_d_ff or self.d_ff)
+        return int(full - all_experts + active_experts)
+
+    def reduced(self) -> "ArchConfig":
+        """CPU smoke-test variant of the same family."""
+        n_layers = min(self.n_layers, 2)
+        if self.block_pattern:
+            n_layers = min(self.n_layers, len(self.block_pattern))
+        d_model = min(self.d_model, 128)
+        n_heads = min(self.n_heads, 4)
+        n_kv = max(1, min(self.n_kv_heads, n_heads, 2))
+        changes = dict(
+            n_layers=n_layers,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            d_head=d_model // n_heads,
+            d_ff=min(self.d_ff, 256),
+            vocab_size=min(self.vocab_size, 512),
+            sliding_window=min(self.sliding_window, 32) if self.sliding_window else None,
+            lru_width=min(self.lru_width, d_model) if self.lru_width else 0,
+            rwkv_head_size=min(self.rwkv_head_size, d_model // n_heads),
+            encoder_seq_len=32,
+        )
+        if self.n_experts:
+            changes.update(
+                n_experts=min(self.n_experts, 4),
+                # no token dropping at toy scale: keeps incremental decode
+                # exactly equal to the parallel forward (test invariant)
+                moe_capacity_factor=float(self.n_experts),
+                moe_d_ff=min(self.moe_d_ff or self.d_ff, 128),
+                dense_residual_d_ff=min(self.dense_residual_d_ff, 128)
+                if self.dense_residual_d_ff else 0,
+            )
+        if self.is_encoder_decoder:
+            changes["n_encoder_layers"] = min(self.n_encoder_layers, 2)
+        if self.mrope:
+            sec = self.d_head // n_heads  # keep sections summing to d_head//2
+            dh = d_model // n_heads
+            changes["mrope_sections"] = (dh // 4, dh // 8, dh // 8)
+        return dataclasses.replace(self, **changes)
+
+
+_REGISTRY: dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_arch(name: str) -> ArchConfig:
+    # import side-effect registration
+    from repro import configs as _c  # noqa: F401
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    from repro import configs as _c  # noqa: F401
+    return sorted(_REGISTRY)

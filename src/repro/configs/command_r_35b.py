@@ -1,0 +1,21 @@
+"""Cohere Command-R 35B — dense GQA, parallel attention+FFN block, no bias
+[hf:CohereForAI/c4ai-command-r-v01]."""
+from repro.configs.base import ArchConfig, register
+
+COMMAND_R_35B = register(ArchConfig(
+    name="command-r-35b",
+    family="dense",
+    source="hf:CohereForAI/c4ai-command-r-v01",
+    n_layers=40,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=22528,
+    vocab_size=256000,
+    qkv_bias=False,
+    parallel_block=True,
+    norm_style="layernorm",
+    rope_theta=8e6,
+    tie_embeddings=True,
+))

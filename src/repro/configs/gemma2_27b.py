@@ -1,0 +1,24 @@
+"""Gemma2 27B — alternating local/global attention with logit softcaps
+[arXiv:2408.00118]."""
+from repro.configs.base import ArchConfig, register
+
+GEMMA2_27B = register(ArchConfig(
+    name="gemma2-27b",
+    family="dense",
+    source="Gemma 2 [arXiv:2408.00118]",
+    n_layers=46,
+    d_model=4608,
+    n_heads=32,
+    n_kv_heads=16,
+    d_head=128,
+    d_ff=36864,
+    vocab_size=256000,
+    local_global_period=2,     # local, global, local, global, ...
+    sliding_window=4096,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    act="gelu",
+    sandwich_norm=True,
+    emb_scale_by_sqrt_dim=True,
+    tie_embeddings=True,
+))

@@ -1,0 +1,16 @@
+"""IBM Granite 20B (code) — llama-style dense with MQA (kv=1)
+[arXiv:2405.04324]."""
+from repro.configs.base import ArchConfig, register
+
+GRANITE_20B = register(ArchConfig(
+    name="granite-20b",
+    family="dense",
+    source="Granite Code Models [arXiv:2405.04324]",
+    n_layers=52,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,            # MQA
+    d_head=128,
+    d_ff=24576,
+    vocab_size=49152,
+))

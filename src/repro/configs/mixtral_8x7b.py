@@ -1,0 +1,21 @@
+"""Mixtral 8x7B — 8-expert top-2 MoE with sliding-window attention
+[arXiv:2401.04088]."""
+from repro.configs.base import ArchConfig, register
+
+MIXTRAL_8X7B = register(ArchConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    source="Mixtral of Experts [arXiv:2401.04088]",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=14336,
+    vocab_size=32000,
+    n_experts=8,
+    n_experts_per_tok=2,
+    moe_d_ff=14336,
+    sliding_window=4096,
+    rope_theta=1e6,
+))

@@ -1,0 +1,17 @@
+"""Qwen2.5 32B — dense GQA with QKV bias [hf:Qwen/Qwen2.5-0.5B family]."""
+from repro.configs.base import ArchConfig, register
+
+QWEN2_5_32B = register(ArchConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    source="hf:Qwen/Qwen2.5-0.5B (family card)",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=27648,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1e6,
+))

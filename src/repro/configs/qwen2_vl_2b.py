@@ -1,0 +1,23 @@
+"""Qwen2-VL 2B — VLM text backbone with M-RoPE and dynamic-resolution vision
+frontend (stubbed: ``input_specs`` supplies precomputed patch embeddings)
+[arXiv:2409.12191]."""
+from repro.configs.base import ArchConfig, register
+
+QWEN2_VL_2B = register(ArchConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    source="Qwen2-VL [arXiv:2409.12191]",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    d_head=128,
+    d_ff=8960,
+    vocab_size=151936,
+    qkv_bias=True,
+    mrope=True,
+    mrope_sections=(16, 24, 24),   # temporal/height/width, sums to d_head//2
+    rope_theta=1e6,
+    frontend="vision_stub",
+    tie_embeddings=True,
+))

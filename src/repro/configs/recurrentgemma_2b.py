@@ -1,0 +1,22 @@
+"""RecurrentGemma 2B (Griffin) — RG-LRU recurrent blocks + local attention,
+2:1 pattern [arXiv:2402.19427]."""
+from repro.configs.base import LOCAL_ATTN, RGLRU, ArchConfig, register
+
+RECURRENTGEMMA_2B = register(ArchConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    source="RecurrentGemma / Griffin [arXiv:2402.19427]",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,            # GQA kv=1 (MQA) on the local-attention layers
+    d_head=256,
+    d_ff=7680,
+    vocab_size=256000,
+    block_pattern=(RGLRU, RGLRU, LOCAL_ATTN),
+    lru_width=2560,
+    conv_width=4,
+    sliding_window=2048,
+    act="gelu",
+    emb_scale_by_sqrt_dim=True,
+))

@@ -1,0 +1,22 @@
+"""RWKV6 "Finch" 7B — attention-free SSM with data-dependent decay
+[arXiv:2404.05892]. No KV cache exists; Lethe is inapplicable (see
+DESIGN.md §Arch-applicability) — included as the attention-free reference."""
+from repro.configs.base import RWKV, ArchConfig, register
+
+RWKV6_7B = register(ArchConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    source="Finch: RWKV-6 [arXiv:2404.05892]",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,              # wkv heads = d_model / head_size
+    n_kv_heads=64,
+    d_head=64,
+    d_ff=14336,
+    vocab_size=65536,
+    block_pattern=(RWKV,),
+    rwkv_head_size=64,
+    use_rope=False,
+    act="relu_sq",           # RWKV channel-mix uses squared ReLU
+    norm_style="layernorm",
+))

@@ -1,0 +1,26 @@
+"""Whisper large-v3 — encoder-decoder audio backbone; mel+conv frontend is
+stubbed (``input_specs`` supplies precomputed frame embeddings)
+[arXiv:2212.04356]."""
+from repro.configs.base import ArchConfig, register
+
+WHISPER_LARGE_V3 = register(ArchConfig(
+    name="whisper-large-v3",
+    family="audio",
+    source="Whisper [arXiv:2212.04356]",
+    n_layers=32,               # decoder layers
+    n_encoder_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,             # full MHA
+    d_head=64,
+    d_ff=5120,
+    vocab_size=51866,
+    is_encoder_decoder=True,
+    encoder_seq_len=1500,
+    use_rope=False,            # learned absolute positions
+    norm_style="layernorm",
+    act="gelu",
+    gated_mlp=False,           # plain 2-matrix MLP
+    frontend="audio_stub",
+    tie_embeddings=True,
+))

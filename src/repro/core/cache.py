@@ -1,0 +1,199 @@
+"""Fixed-capacity slotted KV cache — the TPU-native form of Lethe's
+dynamically-pruned cache.
+
+GPU Lethe reallocates tensors on every eviction; under XLA that would
+recompile. Here every layer owns a *static* buffer of ``capacity`` slots and
+eviction is in-place compaction (mask -> argsort -> gather). All adaptivity
+(occupancy, per-layer budget, the dynamic eviction threshold L_evict, the
+layerwise sparsity estimate) is carried as traced values inside the pytree,
+so data-dependent pruning decisions survive jit.
+
+Layout (stacked over layers so models can ``lax.scan`` the stack):
+  k, v      [L, B, H_kv, C, Dh]
+  pos       [L, B, C]  int32, original token position; -1 = invalid slot
+  score     [L, B, C]  f32, RASR accumulated attention mass (Eq. 5)
+  length    [L, B]     int32, occupancy; valid slots are [0, length)
+  budget    [L]        int32, spatial-allocator target (Sec. "Spatial ...")
+  evict_at  [L]        int32, dynamic L_evict threshold (Algorithm 1)
+  sparsity  [L]        f32, layerwise Hoyer sparsity EMA
+
+Invariant: valid slots are packed at the front in increasing ``pos`` order.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.tree_util import register_dataclass
+
+from repro.core.policy import PolicyConfig
+
+
+def _onehot_append() -> bool:
+    """Append via a one-hot masked select (default) instead of per-row
+    dynamic_update_slice. The scatter form makes GSPMD replicate the whole
+    sharded cache around the write (§Perf, command-r decode_32k:
+    ~10.7 GB/step of involuntary all-gather); the masked select is elementwise
+    and preserves any sharding. REPRO_ONEHOT_APPEND=0 restores the scatter
+    (the paper-faithful §Perf baseline)."""
+    return os.environ.get("REPRO_ONEHOT_APPEND", "1") == "1"
+
+
+@register_dataclass
+@dataclass
+class KVCache:
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array
+    score: jax.Array
+    length: jax.Array
+    budget: jax.Array
+    evict_at: jax.Array
+    sparsity: jax.Array
+
+    @property
+    def n_layers(self) -> int:
+        return self.k.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[-2]
+
+    def layer(self, l: int) -> "KVCache":
+        return jax.tree.map(lambda x: x[l], self)
+
+    def memory_bytes(self) -> int:
+        return sum(x.size * x.dtype.itemsize
+                   for x in (self.k, self.v, self.pos, self.score))
+
+
+def init_cache(*, n_layers: int, batch: int, n_kv_heads: int, capacity: int,
+               d_head: int, policy: PolicyConfig,
+               dtype=jnp.bfloat16) -> KVCache:
+    shape = (n_layers, batch, n_kv_heads, capacity, d_head)
+    nominal = min(policy.nominal_budget, capacity)
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        pos=jnp.full((n_layers, batch, capacity), -1, jnp.int32),
+        score=jnp.zeros((n_layers, batch, capacity), jnp.float32),
+        length=jnp.zeros((n_layers, batch), jnp.int32),
+        budget=jnp.full((n_layers,), nominal, jnp.int32),
+        evict_at=jnp.full((n_layers,), nominal, jnp.int32),
+        sparsity=jnp.zeros((n_layers,), jnp.float32),
+    )
+
+
+# --------------------------------------------------------------------------
+# Single-layer slice operations (no leading L axis) — used inside layer scans.
+# --------------------------------------------------------------------------
+
+def valid_mask(pos: jax.Array) -> jax.Array:
+    """[B, C] bool — slot holds a live token."""
+    return pos >= 0
+
+
+def append_token(layer: KVCache, k_new: jax.Array, v_new: jax.Array,
+                 cur_pos: jax.Array, init_score: float) -> KVCache:
+    """Append one decoded token's K/V to a layer slice.
+
+    ``k_new``/``v_new``: [B, H_kv, Dh]; written at each row's ``length`` slot.
+    If a row is (pathologically) full the write clamps onto the last slot —
+    the pruning trigger guarantees this cannot drop a protected token.
+    """
+    B, Hkv, C, Dh = layer.k.shape
+    idx = jnp.minimum(layer.length, C - 1)  # [B]
+    pos_val = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (B,))
+
+    if _onehot_append():
+        hot = (jnp.arange(C, dtype=jnp.int32)[None, :] == idx[:, None])
+        k = jnp.where(hot[:, None, :, None],
+                      k_new.astype(layer.k.dtype)[:, :, None, :], layer.k)
+        v = jnp.where(hot[:, None, :, None],
+                      v_new.astype(layer.v.dtype)[:, :, None, :], layer.v)
+        pos = jnp.where(hot, pos_val[:, None], layer.pos)
+        score = jnp.where(hot, jnp.float32(init_score), layer.score)
+        length = jnp.minimum(layer.length + 1, C)
+        return KVCache(k=k, v=v, pos=pos, score=score, length=length,
+                       budget=layer.budget, evict_at=layer.evict_at,
+                       sparsity=layer.sparsity)
+
+    def write_row(buf, upd, i):
+        return jax.lax.dynamic_update_slice(buf, upd[:, None, :], (0, i, 0))
+
+    k = jax.vmap(write_row)(layer.k, k_new.astype(layer.k.dtype), idx)
+    v = jax.vmap(write_row)(layer.v, v_new.astype(layer.v.dtype), idx)
+
+    def write_scalar(buf, val, i):
+        return jax.lax.dynamic_update_slice(buf, val[None], (i,))
+
+    pos = jax.vmap(write_scalar)(layer.pos, pos_val, idx)
+    score = jax.vmap(write_scalar)(
+        layer.score, jnp.full((B,), init_score, jnp.float32), idx)
+    length = jnp.minimum(layer.length + 1, C)
+    return KVCache(k=k, v=v, pos=pos, score=score, length=length,
+                   budget=layer.budget, evict_at=layer.evict_at,
+                   sparsity=layer.sparsity)
+
+
+def compact(layer: KVCache, keep: jax.Array) -> KVCache:
+    """Evict all slots where ``keep`` [B, C] is False, packing survivors to
+    the front in increasing position order (static shapes throughout)."""
+    B, Hkv, C, Dh = layer.k.shape
+    INT_MAX = jnp.iinfo(jnp.int32).max
+    live = keep & valid_mask(layer.pos)
+    # Sort key: kept slots by original position, evicted slots to the back.
+    sort_key = jnp.where(live, layer.pos, INT_MAX)          # [B, C]
+    order = jnp.argsort(sort_key, axis=-1)                  # [B, C]
+    n_kept = jnp.sum(live, axis=-1).astype(jnp.int32)       # [B]
+
+    pos = jnp.take_along_axis(jnp.where(live, layer.pos, -1), order, axis=-1)
+    score = jnp.take_along_axis(jnp.where(live, layer.score, 0.0), order,
+                                axis=-1)
+    gather_kv = jax.vmap(lambda buf, o: jnp.take(buf, o, axis=1))  # over B
+    k = gather_kv(layer.k, order)
+    v = gather_kv(layer.v, order)
+    return KVCache(k=k, v=v, pos=pos, score=score, length=n_kept,
+                   budget=layer.budget, evict_at=layer.evict_at,
+                   sparsity=layer.sparsity)
+
+
+def fill_from_prefill(*, k: jax.Array, v: jax.Array, scores: jax.Array,
+                      capacity: int, layer_budget: jax.Array | None = None
+                      ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                                 jax.Array]:
+    """Initialise a layer slice from prefill K/V ([B, Hkv, S, Dh]) and prefill
+    RASR scores ([B, S]).
+
+    If S > capacity, keeps the ``capacity`` highest-priority tokens (the
+    proper policy-specific prune round runs immediately afterwards through the
+    shared machinery). Priority protects the final token unconditionally (it
+    is the query's own position).
+
+    Returns (k, v, pos, score, length) with the static ``capacity`` slot axis.
+    """
+    B, Hkv, S, Dh = k.shape
+    if S <= capacity:
+        pad = capacity - S
+        k_c = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_c = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
+        score = jnp.pad(scores.astype(jnp.float32), ((0, 0), (0, pad)))
+        length = jnp.full((B,), S, jnp.int32)
+        return k_c, v_c, pos, score, length
+
+    # S > capacity: select top-`capacity` by score with the last token pinned.
+    prio = scores.astype(jnp.float32)
+    prio = prio.at[:, -1].set(jnp.inf)
+    _, top_idx = jax.lax.top_k(prio, capacity)               # [B, capacity]
+    top_idx = jnp.sort(top_idx, axis=-1)                     # temporal order
+    take = jax.vmap(lambda buf, o: jnp.take(buf, o, axis=1))
+    k_c = take(k, top_idx)
+    v_c = take(v, top_idx)
+    pos = top_idx.astype(jnp.int32)
+    score = jnp.take_along_axis(scores.astype(jnp.float32), top_idx, axis=-1)
+    length = jnp.full((B,), capacity, jnp.int32)
+    return k_c, v_c, pos, score, length

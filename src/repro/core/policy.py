@@ -1,0 +1,104 @@
+"""Unified cache-management policy configuration.
+
+All five methods of the paper's evaluation grid — FullKV, H2O, StreamingLLM,
+PyramidKV and Lethe — are expressed through one ``PolicyConfig`` so that the
+cache/compaction machinery is shared ("all baselines are re-implemented within
+a unified framework", §Experimental Setup).
+
+Paper-hyperparameter mapping:
+  * ``sparse_ratio`` (paper default 400)  -> ``sparse_ratio`` = τ of Eq. 4 /
+    Algorithm 1. Larger τ ⇒ later breakpoints ⇒ more conservative pruning.
+  * ``recent_ratio`` (paper default 0.3) -> fraction of the per-layer budget
+    reserved for the most recent tokens, always retained.
+  * γ of Eq. 5 -> ``gamma`` (RASR score decay).
+  * D of Algorithm 1 -> ``n_segments``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+FULLKV = "fullkv"
+LETHE = "lethe"
+H2O = "h2o"
+STREAMING = "streaming"
+PYRAMIDKV = "pyramidkv"
+
+KINDS = (FULLKV, LETHE, H2O, STREAMING, PYRAMIDKV)
+
+
+@dataclass(frozen=True)
+class PolicyConfig:
+    kind: str = LETHE
+    capacity: int = 1024         # static slots per layer (C); the HBM bound
+    sink_len: int = 4            # attention-sink tokens always kept
+    recent_ratio: float = 0.3    # fraction of budget kept as recent window
+    sparse_ratio: float = 400.0  # τ (Algorithm 1); aka sparse_ratio ablation
+    n_segments: int = 8          # D segment probes in Algorithm 1
+    gamma: float = 0.95          # RASR EMA decay (Eq. 5)
+    target_fill: float = 0.5     # nominal budget = target_fill * capacity
+    min_budget_ratio: float = 0.25  # spatial-allocator per-layer floor
+    obs_window: int = 32         # prefill observation window (exact colsums)
+    init_score: float = 1.0      # RASR score of a freshly appended token
+    sparsity_ema: float = 0.9    # decode-time layerwise sparsity EMA
+    # PyramidKV schedule endpoints as fractions of nominal budget
+    pyramid_top_ratio: float = 0.4
+    pyramid_bottom_ratio: float = 1.6
+
+    def __post_init__(self):
+        assert self.kind in KINDS, self.kind
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def nominal_budget(self) -> int:
+        if self.kind == FULLKV:
+            return self.capacity
+        return max(self.sink_len + 8, int(self.capacity * self.target_fill))
+
+    @property
+    def recent_len(self) -> int:
+        return max(1, int(self.recent_ratio * self.nominal_budget))
+
+    @property
+    def prunes(self) -> bool:
+        return self.kind != FULLKV
+
+    def with_capacity(self, capacity: int) -> "PolicyConfig":
+        return replace(self, capacity=capacity)
+
+
+def fullkv(capacity: int, **kw) -> PolicyConfig:
+    kw = {k: v for k, v in kw.items()
+          if k in ("sink_len", "obs_window")}  # rest is irrelevant to FullKV
+    return PolicyConfig(kind=FULLKV, capacity=capacity, **kw)
+
+
+def lethe(capacity: int = 1024, **kw) -> PolicyConfig:
+    return PolicyConfig(kind=LETHE, capacity=capacity, **kw)
+
+
+def h2o(capacity: int = 1024, **kw) -> PolicyConfig:
+    # H2O accumulates raw attention mass without decay.
+    kw.setdefault("gamma", 1.0)
+    return PolicyConfig(kind=H2O, capacity=capacity, **kw)
+
+
+def streaming(capacity: int = 1024, **kw) -> PolicyConfig:
+    return PolicyConfig(kind=STREAMING, capacity=capacity, **kw)
+
+
+def pyramidkv(capacity: int = 1024, **kw) -> PolicyConfig:
+    kw.setdefault("gamma", 1.0)
+    return PolicyConfig(kind=PYRAMIDKV, capacity=capacity, **kw)
+
+
+PRESETS = {
+    FULLKV: fullkv,
+    LETHE: lethe,
+    H2O: h2o,
+    STREAMING: streaming,
+    PYRAMIDKV: pyramidkv,
+}
+
+
+def make_policy(kind: str, capacity: int, **kw) -> PolicyConfig:
+    return PRESETS[kind](capacity, **kw)

@@ -1,0 +1,190 @@
+"""Segmented attention-based token shrinking (Algorithm 1) and the unified
+keep-rule/compaction machinery shared by Lethe and the re-implemented
+baselines (H2O, StreamingLLM, PyramidKV).
+
+Faithfulness note (see DESIGN.md): the breakpoint is the first segment
+cut-point where the score ratio v_top[0]/v_top[c] *exceeds* τ — the evident
+intent of Eq. 4/Algorithm 1 ("the first segment where attention drops
+sharply"), under which a larger ``sparse_ratio`` retains more tokens,
+matching the paper's Table 6 ablation. If no cut ratio exceeds τ the layer
+is attention-dense, no breakpoint exists, and pruning is delayed by doubling
+L_evict (Algorithm 1 line 18).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cache as cache_lib
+from repro.core.policy import (FULLKV, H2O, LETHE, PYRAMIDKV, STREAMING,
+                               PolicyConfig)
+
+_EPS = 1e-9
+_NEG = -jnp.inf
+
+
+class PruneDecision(NamedTuple):
+    keep: jax.Array        # [B, C] bool
+    breakpoint: jax.Array  # [B] int32; -1 = none found
+    new_evict_at: jax.Array  # scalar int32
+
+
+def algorithm1_breakpoint(scores: jax.Array, length: jax.Array, *,
+                          n_segments: int, tau: float) -> tuple[jax.Array,
+                                                                jax.Array]:
+    """Algorithm 1 lines 1–11 for one batch row.
+
+    ``scores``: [C] RASR scores (invalid slots must be -inf).
+    ``length``: scalar valid count K (traced).
+    Returns (breakpoint, salient_mask): breakpoint = -1 if no sharp drop;
+    salient_mask [C] marks the top-`breakpoint` scored slots.
+    """
+    C = scores.shape[0]
+    order = jnp.argsort(-scores)                    # descending
+    top_values = scores[order]                      # sorted desc
+    K = jnp.maximum(length, 1)
+    d = jnp.arange(1, n_segments, dtype=jnp.int32)  # 1..D-1
+    cuts = jnp.clip((K * d) // n_segments, 1, C - 1)  # [D-1]
+    v_head = top_values[0]
+    v_cut = top_values[cuts]                        # gather, [D-1]
+    ratio = v_head / jnp.maximum(v_cut, _EPS)
+    # Invalid (-inf) or non-positive cut values mean we're past the valid
+    # prefix -> that cut certainly qualifies as "dropped".
+    dropped = (ratio > tau) | (v_cut <= 0) | ~jnp.isfinite(v_cut)
+    exists = jnp.any(dropped)
+    first = jnp.argmax(dropped)                     # first True index
+    breakpoint = jnp.where(exists, cuts[first], -1).astype(jnp.int32)
+
+    # rank of each slot in score-descending order
+    ranks = jnp.zeros((C,), jnp.int32).at[order].set(jnp.arange(C, dtype=jnp.int32))
+    salient = ranks < jnp.maximum(breakpoint, 0)
+    return breakpoint, salient
+
+
+def _protected_mask(pos: jax.Array, cur_pos: jax.Array, *, sink_len: int,
+                    recent_len: jax.Array) -> jax.Array:
+    """Sink tokens (position < sink_len) and the trailing recency window."""
+    sink = (pos >= 0) & (pos < sink_len)
+    recent = pos >= (cur_pos - recent_len + 1)
+    return sink | recent
+
+
+def _topk_mask(priority: jax.Array, n: jax.Array) -> jax.Array:
+    """[C] bool marking the ``n`` (traced) highest-priority slots."""
+    C = priority.shape[0]
+    order = jnp.argsort(-priority)
+    ranks = jnp.zeros((C,), jnp.int32).at[order].set(jnp.arange(C, dtype=jnp.int32))
+    return ranks < n
+
+
+def decide_row(scores: jax.Array, pos: jax.Array, length: jax.Array,
+               cur_pos: jax.Array, *, policy: PolicyConfig,
+               budget: jax.Array, evict_at: jax.Array,
+               window: jax.Array | None = None) -> PruneDecision:
+    """Keep/evict decision for one layer, one batch row.
+
+    ``scores``/``pos``: [C]; ``length``: scalar; ``budget``/``evict_at``:
+    scalar traced; ``window``: optional sliding-attention window (slots whose
+    position fell out of a local layer's window are dead for every policy).
+    """
+    C = scores.shape[0]
+    valid = pos >= 0
+    masked_scores = jnp.where(valid, scores, _NEG)
+    recent_len = jnp.maximum(
+        (budget.astype(jnp.float32) * policy.recent_ratio).astype(jnp.int32), 1)
+    protected = _protected_mask(pos, cur_pos, sink_len=policy.sink_len,
+                                recent_len=recent_len) & valid
+    if window is not None:
+        in_window = pos >= (cur_pos - window + 1)
+        sink = (pos >= 0) & (pos < policy.sink_len)
+        valid_w = valid & (in_window | sink)
+    else:
+        valid_w = valid
+
+    kind = policy.kind
+    breakpoint = jnp.full((), -1, jnp.int32)
+    if kind == STREAMING:
+        keep = protected & valid_w
+        new_evict = budget
+    elif kind in (H2O, PYRAMIDKV):
+        # heavy-hitter top-k within (budget - protected count)
+        n_protected = jnp.sum(protected & valid_w)
+        n_hh = jnp.maximum(budget - n_protected, 0)
+        hh_prio = jnp.where(valid_w & ~protected, masked_scores, _NEG)
+        heavy = _topk_mask(hh_prio, n_hh) & valid_w & ~protected
+        keep = (protected | heavy) & valid_w
+        new_evict = budget
+    elif kind == LETHE:
+        bp, salient = algorithm1_breakpoint(
+            jnp.where(valid_w, masked_scores, _NEG), length,
+            n_segments=policy.n_segments, tau=policy.sparse_ratio)
+        breakpoint = bp
+        found = bp >= 0
+        keep_found = (protected | salient) & valid_w
+        keep_not = valid_w                      # delay pruning: keep all
+        keep = jnp.where(found, keep_found, keep_not)
+        new_evict = jnp.where(
+            found,
+            jnp.maximum(evict_at, bp + recent_len),
+            evict_at * 2,
+        )
+        new_evict = jnp.clip(new_evict, 1, policy.capacity).astype(jnp.int32)
+    else:  # FULLKV
+        keep = valid
+        new_evict = jnp.asarray(policy.capacity, jnp.int32)
+
+    # Hard capacity backstop: if the keep-set would leave (almost) no room
+    # for subsequent appends, truncate down to the layer *budget* (protected
+    # slots win ties). This turns the Algorithm-1 "delay" path into a proper
+    # multi-round sawtooth instead of riding at full capacity.
+    cap_target = jnp.asarray(max(1, (C * 15) // 16), jnp.int32)
+    if kind != FULLKV:
+        n_protected = jnp.sum(protected & valid_w)
+        trunc_to = jnp.clip(jnp.maximum(budget, n_protected + 1), 1,
+                            cap_target)
+        n_keep = jnp.sum(keep)
+        over = n_keep > cap_target
+        prio = jnp.where(keep, masked_scores, _NEG) + jnp.where(
+            protected, 1e30, 0.0)
+        forced = _topk_mask(prio, trunc_to) & keep
+        keep = jnp.where(over, forced, keep)
+    return PruneDecision(keep=keep, breakpoint=breakpoint,
+                         new_evict_at=new_evict)
+
+
+def prune_layer(layer: cache_lib.KVCache, cur_pos: jax.Array, *,
+                policy: PolicyConfig,
+                window: jax.Array | None = None,
+                force: bool = False) -> cache_lib.KVCache:
+    """One pruning round for a layer slice (all batch rows).
+
+    Triggered (lax.cond) when any row's occupancy reaches min(L_evict,
+    capacity·15/16) — or unconditionally when ``force``.
+    """
+    C = layer.capacity
+    if policy.kind == FULLKV:
+        return layer
+
+    def do_prune(l: cache_lib.KVCache) -> cache_lib.KVCache:
+        dec = jax.vmap(
+            lambda s, p, n: decide_row(
+                s, p, n, cur_pos, policy=policy, budget=l.budget,
+                evict_at=l.evict_at, window=window)
+        )(l.score, l.pos, l.length)
+        compacted = cache_lib.compact(l, dec.keep)
+        # evict threshold: rows agree up to data-dependence; take the max so
+        # the most conservative row governs the next trigger.
+        new_evict = jnp.max(dec.new_evict_at).astype(jnp.int32)
+        return cache_lib.KVCache(
+            k=compacted.k, v=compacted.v, pos=compacted.pos,
+            score=compacted.score, length=compacted.length,
+            budget=l.budget, evict_at=new_evict, sparsity=l.sparsity)
+
+    if force:
+        return do_prune(layer)
+
+    trigger_at = jnp.minimum(layer.evict_at, (C * 15) // 16)
+    triggered = jnp.any(layer.length >= trigger_at)
+    return jax.lax.cond(triggered, do_prune, lambda l: l, layer)

@@ -1,0 +1,43 @@
+"""Recency-Aware Selective Retention (RASR) — the temporal half of Lethe.
+
+Maintains the Eq. 5 per-token utility score during decode:
+
+    s_t = γ · s_{t−1} + Σ_h Σ_i Σ_j A_h^{(t)}(i, j)
+
+The attention mass Σ_h Σ_q A[b,h,q,k] per cached key is produced *inside* the
+fused decode-attention kernel (per-key probability column-sums), so scoring
+adds no extra HBM pass. Recency enters through the protected window in
+``pruning.decide_row`` and through the decay γ, which gradually forgets
+historically-hot tokens — exactly the paper's critique of pure H2O-style
+accumulation ("overemphasis on historically high-attention tokens can mislead
+later predictions").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cache as cache_lib
+
+
+def update_scores(layer: cache_lib.KVCache, probsum: jax.Array,
+                  gamma: float) -> cache_lib.KVCache:
+    """EMA-update RASR scores of a layer slice with this step's attention
+    column-sums (``probsum``: [B, C], aligned with cache slots)."""
+    valid = cache_lib.valid_mask(layer.pos)
+    new_score = gamma * layer.score + probsum.astype(jnp.float32)
+    new_score = jnp.where(valid, new_score, 0.0)
+    return cache_lib.KVCache(
+        k=layer.k, v=layer.v, pos=layer.pos, score=new_score,
+        length=layer.length, budget=layer.budget, evict_at=layer.evict_at,
+        sparsity=layer.sparsity)
+
+
+def prefill_scores(colsums: jax.Array, obs_window: int) -> jax.Array:
+    """Initial RASR scores from prefill observation-window column sums.
+
+    ``colsums``: [B, S] = Σ_h Σ_{q ∈ window} A[b,h,q,s]. Normalised by the
+    window length so magnitudes are comparable with decode-step updates
+    (each decode step adds Σ_h A ≈ H_q mass in total).
+    """
+    return colsums.astype(jnp.float32) * (1.0 / max(obs_window, 1))

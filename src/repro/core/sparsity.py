@@ -1,0 +1,83 @@
+"""Hoyer attention sparsity (Eq. 1) and the layerwise budget allocator.
+
+The spatial half of Lethe: measure per-layer attention sparsity at runtime and
+allocate per-layer token budgets from estimated redundancy, replacing uniform
+(H2O) or pyramidal (PyramidKV) schedules.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-9
+
+
+def hoyer_sparsity(a: jax.Array, axis: int = -1, where: jax.Array | None = None,
+                   n_valid: jax.Array | None = None) -> jax.Array:
+    """Hoyer sparsity (Eq. 1) of non-negative vectors along ``axis``.
+
+    Sparsity(a) = (sqrt(n) - ||a||_1 / ||a||_2) / (sqrt(n) - 1), in [0, 1].
+    1 = one-hot (maximally selective attention), 0 = uniform.
+
+    ``where`` masks invalid entries; ``n_valid`` overrides n (traced count of
+    valid entries, needed for partially-filled caches).
+    """
+    a = a.astype(jnp.float32)
+    if where is not None:
+        a = jnp.where(where, a, 0.0)
+        if n_valid is None:
+            n_valid = jnp.sum(where, axis=axis)
+    if n_valid is None:
+        n = jnp.asarray(a.shape[axis], jnp.float32)
+    else:
+        n = jnp.maximum(n_valid.astype(jnp.float32), 2.0)
+    l1 = jnp.sum(a, axis=axis)
+    l2 = jnp.sqrt(jnp.sum(a * a, axis=axis))
+    sqrt_n = jnp.sqrt(n)
+    s = (sqrt_n - l1 / jnp.maximum(l2, _EPS)) / jnp.maximum(sqrt_n - 1.0, _EPS)
+    return jnp.clip(s, 0.0, 1.0)
+
+
+def layer_sparsity_from_probs(probs: jax.Array,
+                              where: jax.Array | None = None,
+                              n_valid: jax.Array | None = None) -> jax.Array:
+    """Mean Hoyer sparsity of an attention-prob tensor [..., K] -> scalar.
+
+    Reduces over every leading axis (batch, heads, query rows), matching the
+    paper's per-(layer, step) heatmap statistic (Fig. 1).
+    """
+    s = hoyer_sparsity(probs, axis=-1, where=where, n_valid=n_valid)
+    return jnp.mean(s)
+
+
+def allocate_budgets(sparsity: jax.Array, *, capacity: int, nominal: int,
+                     min_budget: int, sink_len: int, recent_len: int) -> jax.Array:
+    """Layerwise sparsity-aware budget allocation (spatial dimension).
+
+    ``sparsity``: [L] per-layer Hoyer estimates. Denser layers (low sparsity)
+    receive proportionally larger budgets; the total budget is conserved at
+    ``L * nominal`` so Lethe is iso-memory with a uniform allocator.
+
+    Returns int32 budgets [L], each in [min_budget, ~capacity).
+    """
+    sparsity = jnp.clip(sparsity.astype(jnp.float32), 0.0, 1.0)
+    density = 1.0 - sparsity
+    L = sparsity.shape[0]
+    total = jnp.asarray(L * nominal, jnp.float32)
+    weights = density / jnp.maximum(jnp.sum(density), _EPS)
+    raw = weights * total
+    floor = jnp.asarray(max(min_budget, sink_len + recent_len + 1), jnp.float32)
+    ceil = jnp.asarray(int(capacity * 15 / 16), jnp.float32)
+    budgets = jnp.clip(raw, floor, ceil)
+    # Re-distribute clipping slack proportionally (one correction pass).
+    slack = total - jnp.sum(budgets)
+    room = jnp.where(slack >= 0, ceil - budgets, budgets - floor)
+    room_total = jnp.maximum(jnp.sum(room), _EPS)
+    budgets = jnp.clip(budgets + slack * room / room_total, floor, ceil)
+    return budgets.astype(jnp.int32)
+
+
+def update_sparsity_ema(prev: jax.Array, observed: jax.Array,
+                        ema: float) -> jax.Array:
+    """Temporal smoothing of the layerwise sparsity estimate ([L] arrays)."""
+    return ema * prev + (1.0 - ema) * observed

@@ -1,0 +1,223 @@
+"""Synthetic reasoning-style data pipeline.
+
+Two deterministic, seedable sources:
+
+* ``lm_stream`` — a Zipfian token stream with local n-gram structure
+  (compressible enough that a small model's loss visibly decreases), used by
+  training examples/tests.
+
+* ``reasoning_task`` — a synthetic multi-step "chain-of-thought" task in the
+  spirit of Math500: the prompt encodes a chain of modular-arithmetic steps,
+  the model must track running state across many tokens, and *early* tokens
+  (the operand table — an analogue of the problem statement / attention
+  sinks) stay relevant while intermediate scratch tokens go stale. This is
+  the workload family where Lethe's claims live, and it gives the accuracy
+  benchmarks a measurable task signal.
+
+Both yield fixed-shape jnp batches, stateless-by-seed (no external data —
+everything is built in-framework per the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    ngram: int = 3
+
+
+def _zipf_probs(vocab: int, a: float) -> np.ndarray:
+    r = np.arange(1, vocab + 1, dtype=np.float64)
+    p = r ** (-a)
+    return p / p.sum()
+
+
+def lm_stream(cfg: DataConfig) -> Iterator[dict]:
+    """Infinite iterator of {"tokens": [B, S+1]} (inputs ++ next-token
+    labels are produced by shifting)."""
+    rng = np.random.default_rng(cfg.seed)
+    base = _zipf_probs(cfg.vocab_size, cfg.zipf_a)
+    # fixed random bigram mixing table for structure
+    shift = rng.integers(1, cfg.vocab_size, size=cfg.vocab_size)
+    while True:
+        toks = np.empty((cfg.batch_size, cfg.seq_len + 1), np.int32)
+        cur = rng.choice(cfg.vocab_size, size=cfg.batch_size, p=base)
+        for t in range(cfg.seq_len + 1):
+            # 60%: deterministic successor (learnable), 40%: zipf noise
+            det = (cur + shift[cur]) % cfg.vocab_size
+            noise = rng.choice(cfg.vocab_size, size=cfg.batch_size, p=base)
+            take_det = rng.random(cfg.batch_size) < 0.6
+            cur = np.where(take_det, det, noise).astype(np.int32)
+            toks[:, t] = cur
+        yield {"tokens": jnp.asarray(toks)}
+
+
+# --------------------------------------------------------------------------
+# Synthetic chain-of-thought reasoning task
+# --------------------------------------------------------------------------
+
+# token layout: [0, R) = values, [R, R+4) = control tokens
+_CTRL_START, _CTRL_STEP, _CTRL_ANS, _CTRL_PAD = 0, 1, 2, 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ReasoningConfig:
+    n_values: int = 64           # modulus / value vocabulary
+    n_steps: int = 24            # chain length (drives sequence length)
+    batch_size: int = 8
+    seed: int = 0
+
+    @property
+    def vocab_size(self) -> int:
+        return self.n_values + 4
+
+    @property
+    def seq_len(self) -> int:
+        # start v0 [table] (step op arg res)*n ans answer
+        return 2 + self.n_steps * 4 + 2
+
+    def ctrl(self, c: int) -> int:
+        return self.n_values + c
+
+
+def reasoning_batch(cfg: ReasoningConfig, step: int) -> dict:
+    """One batch of chained modular arithmetic.
+
+    Sequence: START v0  (STEP op arg res)*  ANS answer
+    where res_{i} = (res_{i-1} + arg_i) % M for op 0 (add) and
+          res_{i} = (res_{i-1} * arg_i) % M for op 1 (mul, arg odd),
+    and answer = (res_n + v0) % M — the final answer needs BOTH the end of
+    the chain (recency) and the initial value v0 from the sink region, so a
+    policy that drops early tokens cannot answer. All `res` tokens are also
+    supervised (stepwise CoT supervision).
+    """
+    rng = np.random.default_rng(cfg.seed + 7919 * step)
+    M = cfg.n_values
+    B, n = cfg.batch_size, cfg.n_steps
+    v0 = rng.integers(0, M, size=B)
+    ops = rng.integers(0, 2, size=(B, n))
+    args = rng.integers(1, M, size=(B, n))
+    args = np.where(ops == 1, args | 1, args)  # odd multipliers
+
+    toks = np.full((B, cfg.seq_len), cfg.ctrl(_CTRL_PAD), np.int32)
+    weights = np.zeros((B, cfg.seq_len), np.float32)
+    toks[:, 0] = cfg.ctrl(_CTRL_START)
+    toks[:, 1] = v0
+    res = v0.copy()
+    p = 2
+    for i in range(n):
+        toks[:, p] = cfg.ctrl(_CTRL_STEP)
+        toks[:, p + 1] = ops[:, i]            # op encoded as value token 0/1
+        toks[:, p + 2] = args[:, i]
+        res = np.where(ops[:, i] == 0, (res + args[:, i]) % M,
+                       (res * args[:, i]) % M)
+        toks[:, p + 3] = res
+        weights[:, p + 3] = 1.0               # supervise each CoT result
+        p += 4
+    answer = (res + v0) % M
+    toks[:, p] = cfg.ctrl(_CTRL_ANS)
+    toks[:, p + 1] = answer
+    weights[:, p + 1] = 4.0                   # final answer weighted higher
+    return {"tokens": jnp.asarray(toks), "loss_weights": jnp.asarray(weights),
+            "answers": jnp.asarray(answer[:, None]),
+            "answer_positions": np.array([p + 1]),
+            "prefill_len": 2,
+            # back-compat aliases
+            "answer": jnp.asarray(answer), "answer_pos": p + 1}
+
+
+def reasoning_stream(cfg: ReasoningConfig) -> Iterator[dict]:
+    step = 0
+    while True:
+        yield reasoning_batch(cfg, step)
+        step += 1
+
+
+# --------------------------------------------------------------------------
+# Long-range recall task (the anti-StreamingLLM workload)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RecallConfig:
+    """Key-value recall across a long CoT filler: k/v pairs appear *early*,
+    then a long scratch chain, then a query for one early key. Recency-only
+    policies (StreamingLLM) lose the pairs; attention-aware retention (H2O /
+    Lethe) must keep them — the workload family behind Table 1's MMLU
+    long-range-context subjects."""
+    n_values: int = 64
+    n_pairs: int = 8
+    filler_steps: int = 24
+    n_queries: int = 4
+    batch_size: int = 8
+    seed: int = 0
+
+    @property
+    def vocab_size(self) -> int:
+        return self.n_values + 4
+
+    @property
+    def seq_len(self) -> int:
+        # START (k v)*p  (STEP op arg res)*f  (ANS key answer)*q
+        return 1 + 2 * self.n_pairs + 4 * self.filler_steps \
+            + 3 * self.n_queries
+
+    def ctrl(self, c: int) -> int:
+        return self.n_values + c
+
+
+def recall_batch(cfg: RecallConfig, step: int) -> dict:
+    rng = np.random.default_rng(cfg.seed + 104729 * step)
+    M, B, P, F = cfg.n_values, cfg.batch_size, cfg.n_pairs, cfg.filler_steps
+    keys = np.stack([rng.choice(M, size=P, replace=False) for _ in range(B)])
+    vals = rng.integers(0, M, size=(B, P))
+    toks = np.full((B, cfg.seq_len), cfg.ctrl(_CTRL_PAD), np.int32)
+    weights = np.zeros((B, cfg.seq_len), np.float32)
+    toks[:, 0] = cfg.ctrl(_CTRL_START)
+    p = 1
+    for i in range(P):
+        toks[:, p] = keys[:, i]
+        toks[:, p + 1] = vals[:, i]
+        p += 2
+    # filler chain (same modular-arithmetic grammar as the reasoning task)
+    res = rng.integers(0, M, size=B)
+    for i in range(F):
+        ops = rng.integers(0, 2, size=B)
+        args = rng.integers(1, M, size=B)
+        args = np.where(ops == 1, args | 1, args)
+        toks[:, p] = cfg.ctrl(_CTRL_STEP)
+        toks[:, p + 1] = ops
+        toks[:, p + 2] = args
+        res = np.where(ops == 0, (res + args) % M, (res * args) % M)
+        toks[:, p + 3] = res
+        weights[:, p + 3] = 0.25
+        p += 4
+    answers, answer_positions = [], []
+    for q in range(cfg.n_queries):
+        qi = rng.integers(0, P, size=B)
+        q_keys = keys[np.arange(B), qi]
+        q_vals = vals[np.arange(B), qi]
+        toks[:, p] = cfg.ctrl(_CTRL_ANS)
+        toks[:, p + 1] = q_keys
+        toks[:, p + 2] = q_vals
+        weights[:, p + 2] = 4.0
+        answers.append(q_vals)
+        answer_positions.append(p + 2)
+        p += 3
+    answers = np.stack(answers, axis=1)        # [B, n_queries]
+    return {"tokens": jnp.asarray(toks), "loss_weights": jnp.asarray(weights),
+            "answers": jnp.asarray(answers),
+            "answer_positions": np.array(answer_positions),
+            "prefill_len": 1 + 2 * P,
+            "answer": jnp.asarray(answers[:, -1]),
+            "answer_pos": answer_positions[-1]}

@@ -1,0 +1,150 @@
+"""Fused decode attention over a slotted pruned KV cache (Pallas TPU).
+
+The paper reads attention probabilities back out of the attention op to
+update RASR scores (Eq. 5). On TPU, re-materialising the prob matrix would
+cost an extra HBM round-trip per step, so this kernel *fuses* the Eq. 2/Eq. 5
+bookkeeping into flash-decode: alongside the attention output it emits the
+per-key probability column-sums Σ_g probs[g, c] for each KV head.
+
+Design (TPU-native, see DESIGN.md §2):
+  grid = (B, H_kv, C // block_c) — the C axis is innermost and sequential,
+  so online-softmax statistics live in VMEM scratch across C-blocks:
+    m, l   [G, 1]    running row max / denominator (G = H_q/H_kv group)
+    acc    [G, Dh]   output accumulator
+    psum   [G, C]    unnormalised prob column accumulator, rescaled online
+  K/V stream through VMEM in (block_c × Dh) tiles. GQA is native — the
+  group dim G rides the MXU's row axis and keys are never repeated
+  (Eq. 3's ``repeat`` is purely logical).
+
+Masking (validity of pruned slots, causality, sliding window) is folded into
+an additive bias [B, C] computed by the wrapper — one vector per row, not a
+matrix.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, bias_ref, out_ref, psum_ref,
+            m_s, l_s, acc_s, ps_s, *, scale: float, softcap: float | None,
+            block_c: int):
+    c = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(c == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+        ps_s[...] = jnp.zeros_like(ps_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)                   # [G, Dh]
+    kb = k_ref[0, 0].astype(jnp.float32)                  # [BC, Dh]
+    vb = v_ref[0, 0].astype(jnp.float32)                  # [BC, Dh]
+    bias = bias_ref[0].astype(jnp.float32)                # [BC]
+
+    s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = s + bias[None, :]                                  # [G, BC]
+
+    m_old = m_s[:, 0]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_old - m_new)                         # [G]
+    p = jnp.exp(s - m_new[:, None])                        # [G, BC]
+
+    l_s[:, 0] = l_s[:, 0] * alpha + jnp.sum(p, axis=-1)
+    acc_s[...] = acc_s[...] * alpha[:, None] + jax.lax.dot_general(
+        p, vb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    # online rescale of every previously-accumulated prob column, then store
+    # this block's unnormalised probs into its slice.
+    ps_s[...] = ps_s[...] * alpha[:, None]
+    ps_s[:, pl.ds(c * block_c, block_c)] = (
+        ps_s[:, pl.ds(c * block_c, block_c)] + p)
+    m_s[:, 0] = m_new
+
+    @pl.when(c == nc - 1)
+    def _finalize():
+        denom = jnp.maximum(l_s[:, 0], 1e-30)              # [G]
+        out_ref[0, 0] = (acc_s[...] / denom[:, None]).astype(out_ref.dtype)
+        psum_ref[0, 0] = jnp.sum(ps_s[...] / denom[:, None], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "block_c",
+                                             "interpret"))
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            bias: jax.Array, *, scale: float,
+                            softcap: float | None = None,
+                            block_c: int = 512,
+                            interpret: bool = False
+                            ) -> tuple[jax.Array, jax.Array]:
+    """q: [B, Hq, Dh]; k, v: [B, Hkv, C, Dh]; bias: [B, C] additive mask.
+
+    Returns (out [B, Hq, Dh], probsum [B, C]). C is padded to block_c inside.
+    """
+    B, Hq, Dh = q.shape
+    _, Hkv, C, _ = k.shape
+    G = Hq // Hkv
+    assert G * Hkv == Hq, (Hq, Hkv)
+
+    block_c = min(block_c, max(C, 8))
+    pad = (-C) % block_c
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, pad)), constant_values=NEG_INF)
+    Cp = C + pad
+    nc = Cp // block_c
+
+    qg = q.reshape(B, Hkv, G, Dh)
+    kernel = functools.partial(_kernel, scale=scale, softcap=softcap,
+                               block_c=block_c)
+    out, psum = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_c, Dh), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, block_c, Dh), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, block_c), lambda b, h, c: (b, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Cp), lambda b, h, c: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, Cp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, Dh), jnp.float32),
+            pltpu.VMEM((G, Cp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, bias)
+
+    out = out.reshape(B, Hq, Dh)
+    probsum = jnp.sum(psum, axis=1)[:, :C]                 # Σ over KV heads
+    return out, probsum
+
+
+def make_decode_bias(pos: jax.Array, cur_pos: jax.Array,
+                     window: int | None = None) -> jax.Array:
+    """Additive mask bias [B, C] from slot positions: invalid slots, future
+    positions and (optionally) out-of-window positions get NEG_INF."""
+    B = pos.shape[0]
+    cur = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (B,))[:, None]
+    ok = (pos >= 0) & (pos <= cur)
+    if window is not None:
+        ok &= pos >= (cur - window + 1)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)

@@ -1,0 +1,162 @@
+"""Flash prefill attention (Pallas TPU): causal/sliding-window GQA forward
+with per-row LSE output.
+
+grid = (B, H_kv, S//block_q, T//block_k); the key axis is innermost, so the
+online-softmax state for one query tile lives in VMEM scratch:
+    m, l  [G·BQ, 1]   running max / denominator
+    acc   [G·BQ, Dh]  output accumulator
+Causal/out-of-window key tiles are skipped with ``pl.when`` (no wasted MXU
+work below the diagonal). The LSE output feeds the exact observation-window
+column-sum pass (see kernels/ops.py) that initialises Lethe's RASR scores.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, lse_ref, m_s, l_s, acc_s, *,
+            scale: float, softcap: float | None, causal: bool,
+            window: int | None, block_q: int, block_k: int, q_offset: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q_start = iq * block_q + q_offset
+    k_start = ik * block_k
+
+    # Tile-level skip: entirely above the causal diagonal or entirely left of
+    # every query's window.
+    needed = jnp.asarray(True)
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window is not None:
+        # newest query in tile is q_start+block_q-1; oldest allowed key is
+        # (q_start) - window + 1; skip tiles entirely older than that.
+        needed = jnp.logical_and(
+            needed, (k_start + block_k - 1) >= (q_start - window + 1))
+
+    @pl.when(needed)
+    def _compute():
+        G, BQ, Dh = q_ref.shape[2], q_ref.shape[3], q_ref.shape[4]
+        q = q_ref[0, 0].astype(jnp.float32).reshape(G * BQ, Dh)
+        kb = k_ref[0, 0].astype(jnp.float32)               # [BK, Dh]
+        vb = v_ref[0, 0].astype(jnp.float32)
+
+        s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (G, BQ), 1
+                                                   ).reshape(G * BQ)
+        k_pos = k_start + jax.lax.iota(jnp.int32, block_k)
+        ok = jnp.ones((G * BQ, block_k), bool)
+        if causal:
+            ok &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            ok &= k_pos[None, :] >= (q_pos[:, None] - window + 1)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_old = m_s[:, 0]
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(ok, p, 0.0)
+        l_s[:, 0] = l_s[:, 0] * alpha + jnp.sum(p, axis=-1)
+        acc_s[...] = acc_s[...] * alpha[:, None] + jax.lax.dot_general(
+            p, vb, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_s[:, 0] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        G, BQ, Dh = q_ref.shape[2], q_ref.shape[3], q_ref.shape[4]
+        denom = jnp.maximum(l_s[:, 0], 1e-30)
+        out_ref[0, 0] = (acc_s[...] / denom[:, None]).reshape(
+            G, BQ, Dh).astype(out_ref.dtype)
+        lse = m_s[:, 0] + jnp.log(denom)
+        lse_ref[0, 0] = lse.reshape(G, BQ).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "softcap", "causal", "window", "block_q", "block_k",
+    "q_offset", "interpret"))
+def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         scale: float, softcap: float | None = None,
+                         causal: bool = True, window: int | None = None,
+                         block_q: int = 256, block_k: int = 512,
+                         q_offset: int = 0, interpret: bool = False
+                         ) -> tuple[jax.Array, jax.Array]:
+    """q: [B, Hq, S, Dh]; k, v: [B, Hkv, T, Dh].
+    Returns (out [B, Hq, S, Dh], lse [B, Hq, S])."""
+    B, Hq, S, Dh = q.shape
+    _, Hkv, T, _ = k.shape
+    G = Hq // Hkv
+    assert G * Hkv == Hq
+
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    pad_q = (-S) % block_q
+    pad_k = (-T) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # padded keys are masked out by the causal test (their positions
+        # exceed every real query position when causal; for non-causal we
+        # mask via window... safest: pad then rely on causal; non-causal
+        # unpadded T is required.
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    if pad_k and not causal:
+        raise ValueError("non-causal prefill requires T % block_k == 0")
+    Sp, Tp = S + pad_q, T + pad_k
+
+    qg = q.reshape(B, Hkv, G, Sp, Dh)
+    kernel = functools.partial(
+        _kernel, scale=scale, softcap=softcap, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, q_offset=q_offset)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, Sp // block_q, Tp // block_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, block_q, Dh),
+                         lambda b, h, iq, ik: (b, h, 0, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh),
+                         lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh),
+                         lambda b, h, iq, ik: (b, h, ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, block_q, Dh),
+                         lambda b, h, iq, ik: (b, h, 0, iq, 0)),
+            pl.BlockSpec((1, 1, G, block_q),
+                         lambda b, h, iq, ik: (b, h, 0, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, G, Sp, Dh), q.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, G, Sp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G * block_q, 1), jnp.float32),
+            pltpu.VMEM((G * block_q, 1), jnp.float32),
+            pltpu.VMEM((G * block_q, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v)
+
+    out = out.reshape(B, Hq, Sp, Dh)[:, :, :S]
+    lse = lse.reshape(B, Hq, Sp)[:, :, :S]
+    return out, lse

@@ -1,0 +1,92 @@
+"""Jit'd public wrappers around the attention kernels.
+
+``impl`` selection:
+  "pallas"    — pl.pallas_call targeting TPU (the production path).
+  "interpret" — same kernel body, executed via Pallas interpret mode
+                (CPU correctness validation; what the tests sweep).
+  "ref"       — pure-jnp oracle. Used on CPU runs and inside the multi-pod
+                dry-run lowering so cost_analysis reflects XLA-native
+                attention (FLOP/byte-equivalent to the kernel).
+  "auto"      — "pallas" on TPU backends, "ref" elsewhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_impl
+from repro.kernels.decode_attention import (decode_attention_pallas,
+                                            make_decode_bias)
+from repro.kernels.flash_prefill import flash_prefill_pallas
+
+_DEFAULT = {"impl": "auto"}
+
+
+def set_default_impl(impl: str) -> None:
+    assert impl in ("auto", "pallas", "interpret", "ref")
+    _DEFAULT["impl"] = impl
+
+
+def _resolve(impl: str | None) -> str:
+    impl = impl or _DEFAULT["impl"]
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array, cur_pos, *, window: int | None = None,
+                     softcap: float | None = None, scale: float | None = None,
+                     impl: str | None = None) -> tuple[jax.Array, jax.Array]:
+    """Masked single-token attention over a slotted cache + RASR column-sums.
+
+    q [B,Hq,Dh]; k,v [B,Hkv,C,Dh]; pos [B,C] (−1 = invalid).
+    Returns (out [B,Hq,Dh], probsum [B,C])."""
+    impl = _resolve(impl)
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    if impl == "ref":
+        return ref_impl.decode_attention_ref(
+            q, k, v, pos, cur_pos, window=window, softcap=softcap,
+            scale=scale)
+    bias = make_decode_bias(pos, cur_pos, window)
+    return decode_attention_pallas(
+        q, k, v, bias, scale=scale, softcap=softcap,
+        interpret=(impl == "interpret"))
+
+
+def prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int | None = None,
+                      softcap: float | None = None,
+                      scale: float | None = None, q_offset: int = 0,
+                      impl: str | None = None) -> jax.Array:
+    """Flash prefill forward. q [B,Hq,S,Dh]; k,v [B,Hkv,T,Dh].
+    Returns out [B,Hq,S,Dh] (LSE is an internal detail here)."""
+    impl = _resolve(impl)
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    if impl == "ref":
+        import os
+        chunk = int(os.environ.get("REPRO_PREFILL_CHUNKED", "0"))
+        if chunk and q_offset == 0 and q.shape[2] > chunk:
+            return ref_impl.prefill_attention_chunked_ref(
+                q, k, v, chunk=chunk, causal=causal, window=window,
+                softcap=softcap, scale=scale)
+        out, _ = ref_impl.prefill_attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, q_offset=q_offset)
+        return out
+    out, _ = flash_prefill_pallas(
+        q, k, v, scale=scale, softcap=softcap, causal=causal, window=window,
+        q_offset=q_offset, interpret=(impl == "interpret"))
+    return out
+
+
+def obs_colsums(q_win: jax.Array, k: jax.Array, *, win_start,
+                window: int | None = None, softcap: float | None = None,
+                scale: float | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Observation-window exact column sums + probs (prefill RASR init and
+    layerwise Hoyer estimate). Small (W ≤ 64 rows), always XLA-native."""
+    scale = scale if scale is not None else q_win.shape[-1] ** -0.5
+    return ref_impl.obs_colsums_ref(
+        q_win, k, win_start=win_start, window=window, softcap=softcap,
+        scale=scale)

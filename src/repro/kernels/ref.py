@@ -1,0 +1,172 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references (tests assert allclose against them) and
+the XLA-native implementation used on CPU and inside the dry-run lowering
+(`impl="ref"` — XLA's own fusion stands in for the hand-written TPU kernel;
+FLOP/byte counts for the roofline are equivalent).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30  # finite sentinel: keeps fully-masked rows NaN-free
+
+
+def _softcap(s: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return s
+    return cap * jnp.tanh(s / cap)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         pos: jax.Array, cur_pos: jax.Array, *,
+                         window: int | None = None,
+                         softcap: float | None = None,
+                         scale: float | None = None
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Single-token decode attention over a slotted (possibly pruned) cache,
+    emitting the RASR per-key probability column-sums.
+
+    q:   [B, Hq, Dh]      (one new token per row)
+    k,v: [B, Hkv, C, Dh]  slotted cache
+    pos: [B, C]           original positions; -1 marks invalid slots
+    cur_pos: scalar or [B] — the query token's position
+
+    Returns (out [B, Hq, Dh], probsum [B, C] = Σ_h probs — Eq. 2 head-invariant
+    scoring; GQA handled by group reshape, no repeated-key materialisation).
+    """
+    B, Hq, Dh = q.shape
+    _, Hkv, C, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else Dh ** -0.5
+    cur = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (B,))
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Dh)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhcd->bhgc", qf, kf) * scale      # [B,Hkv,G,C]
+    s = _softcap(s, softcap)
+
+    valid = pos >= 0
+    mask = valid & (pos <= cur[:, None])
+    if window is not None:
+        mask &= pos >= (cur[:, None] - window + 1)
+    s = jnp.where(mask[:, None, None, :], s, _NEG_INF)
+
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    probs = p / jnp.maximum(denom, 1e-30)                   # [B,Hkv,G,C]
+    out = jnp.einsum("bhgc,bhcd->bhgd", probs, v.astype(jnp.float32))
+    probsum = jnp.sum(probs, axis=(1, 2))                   # [B, C]
+    return out.reshape(B, Hq, Dh).astype(q.dtype), probsum
+
+
+def prefill_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          causal: bool = True,
+                          window: int | None = None,
+                          softcap: float | None = None,
+                          scale: float | None = None,
+                          q_offset: int | jax.Array = 0
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Full prefill attention (the flash-kernel oracle).
+
+    q: [B, Hq, S, Dh]; k, v: [B, Hkv, T, Dh].
+    Returns (out [B, Hq, S, Dh], lse [B, Hq, S]).
+    ``q_offset`` positions q row i at absolute position q_offset + i (for
+    chunked prefill); keys are at absolute positions 0..T-1.
+    """
+    B, Hq, S, Dh = q.shape
+    _, Hkv, T, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else Dh ** -0.5
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, S, Dh)
+    s = jnp.einsum("bhgsd,bhtd->bhgst", qf, k.astype(jnp.float32)) * scale
+    s = _softcap(s, softcap)
+
+    q_pos = jnp.arange(S) + q_offset
+    k_pos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] >= (q_pos[:, None] - window + 1)
+    s = jnp.where(mask[None, None, None], s, _NEG_INF)
+
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", p / jnp.maximum(denom, 1e-30),
+                     v.astype(jnp.float32))
+    lse = (m[..., 0] + jnp.log(jnp.maximum(denom[..., 0], 1e-30)))
+    return (out.reshape(B, Hq, S, Dh).astype(q.dtype),
+            lse.reshape(B, Hq, S))
+
+
+def prefill_attention_chunked_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                                  *, chunk: int = 1024,
+                                  causal: bool = True,
+                                  window: int | None = None,
+                                  softcap: float | None = None,
+                                  scale: float | None = None
+                                  ) -> jax.Array:
+    """Query-chunked prefill oracle: identical math to
+    ``prefill_attention_ref`` but scores for only one q-chunk are ever
+    resident (lax.map over chunks) — the HBM-residency shape of the Pallas
+    flash kernel, expressible in pure jnp. Used by the dry-run when
+    REPRO_PREFILL_CHUNKED is set (§Perf, prefill memory term)."""
+    B, Hq, S, Dh = q.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        pad = (-S) % chunk
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        S_p = S + pad
+    else:
+        S_p = S
+    n = S_p // chunk
+    qc = q.reshape(B, Hq, n, chunk, Dh)
+
+    def one(i):
+        out, _ = prefill_attention_ref(
+            qc[:, :, i], k, v, causal=causal, window=window,
+            softcap=softcap, scale=scale, q_offset=i * chunk)
+        return out
+
+    outs = jax.lax.map(one, jnp.arange(n))        # [n, B, Hq, chunk, Dh]
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, Hq, S_p, Dh)
+    return out[:, :, :S]
+
+
+def obs_colsums_ref(q_win: jax.Array, k: jax.Array, *,
+                    win_start: int | jax.Array,
+                    window: int | None = None,
+                    softcap: float | None = None,
+                    scale: float | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Exact attention-mass column sums over an observation window.
+
+    q_win: [B, Hq, W, Dh] — the last W prefill queries (absolute positions
+    win_start .. win_start+W-1); k: [B, Hkv, S, Dh].
+
+    Returns (colsums [B, S] = Σ_h Σ_{q∈win} probs, probs [B, Hq, W, S]) —
+    the probs feed the layerwise Hoyer sparsity estimator.
+    """
+    B, Hq, W, Dh = q_win.shape
+    _, Hkv, S, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else Dh ** -0.5
+
+    qf = q_win.astype(jnp.float32).reshape(B, Hkv, G, W, Dh)
+    s = jnp.einsum("bhgwd,bhsd->bhgws", qf, k.astype(jnp.float32)) * scale
+    s = _softcap(s, softcap)
+
+    q_pos = jnp.arange(W) + win_start
+    k_pos = jnp.arange(S)
+    mask = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] >= (q_pos[:, None] - window + 1)
+    s = jnp.where(mask[None, None, None], s, _NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)                      # [B,Hkv,G,W,S]
+    colsums = jnp.sum(probs, axis=(1, 2, 3))                # [B, S]
+    return colsums, probs.reshape(B, Hq, W, S)

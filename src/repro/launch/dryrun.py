@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove that every (architecture × input shape × mesh)
+combination lowers AND compiles under the production sharding config, and
+dump the roofline raw numbers (FLOPs, bytes, per-device memory, collective
+traffic) for EXPERIMENTS.md.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the dry-run needs 512 host placeholder devices. (Smoke tests and
+benchmarks run in separate processes and see 1 device.)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+      --shape decode_32k [--multipod] [--policy lethe|fullkv] \
+      [--out experiments/dryrun.jsonl]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, get_shape, list_archs, SHAPES
+from repro.kernels import ops as kernel_ops
+from repro.launch import shardings, specs, steps
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import build_model
+from repro.optim import adamw
+from repro.roofline import analysis
+
+
+def lower_case(case: specs.DryrunCase, mesh,
+               layers_override: int | None = None) -> dict:
+    """Lower + compile one case under ``mesh``; return roofline raw record.
+
+    ``layers_override`` replaces the layer count (keeping full width) — the
+    roofline sweep lowers unrolled at two small L values and extrapolates
+    linearly, which is *exact* because every per-layer cost is identical
+    (see roofline/sweep.py).
+    """
+    import dataclasses as _dc
+    cfg = get_arch(case.arch)
+    if layers_override is not None:
+        reps = {"n_layers": layers_override}
+        if cfg.is_encoder_decoder:
+            reps["n_encoder_layers"] = layers_override
+        cfg = _dc.replace(cfg, **reps)
+    model = build_model(cfg)
+    shape = case.shape
+    p_sds = specs.params_sds(model, shape)
+    p_spec = shardings.param_specs(p_sds, cfg, mesh)
+    p_sh = shardings.to_named(p_spec, mesh)
+
+    if case.kind == "train":
+        opt_sds = specs.opt_state_sds(p_sds)
+        opt_sh = shardings.to_named(shardings.opt_specs(p_spec), mesh)
+        b_sds = specs.batch_sds(cfg, shape, with_labels=True)
+        b_sh = shardings.to_named(
+            shardings.batch_specs(b_sds, mesh, shape.global_batch), mesh)
+        fn = steps.make_train_step(
+            model, adamw.AdamWConfig(),
+            label_offset=(b_sds.get("img_embeds").shape[1]
+                          if "img_embeds" in b_sds else 0))
+        jfn = jax.jit(fn, in_shardings=(p_sh, opt_sh, b_sh))
+        args = (p_sds, opt_sds, b_sds)
+    elif case.kind == "prefill":
+        b_sds = specs.batch_sds(cfg, shape, with_labels=False)
+        b_sh = shardings.to_named(
+            shardings.batch_specs(b_sds, mesh, shape.global_batch), mesh)
+        fn = steps.make_prefill(model, case.policy, case.policy.capacity)
+        jfn = jax.jit(fn, in_shardings=(p_sh, b_sh))
+        args = (p_sds, b_sds)
+    else:  # decode
+        st_sds = specs.decode_state_sds(model, shape, case.policy)
+        st_sh = shardings.to_named(
+            shardings.state_specs(st_sds, cfg, mesh, shape.global_batch),
+            mesh)
+        tok_sds, pos_sds = specs.decode_inputs_sds(shape)
+        tok_sh = jax.sharding.NamedSharding(
+            mesh, shardings.token_spec(mesh, shape.global_batch))
+        pos_sh = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+        fn = steps.make_serve_step(model, case.policy)
+        donate = ((1,) if os.environ.get("REPRO_DONATE_STATE") == "1"
+                  else ())
+        jfn = jax.jit(fn, in_shardings=(p_sh, st_sh, tok_sh, pos_sh),
+                      donate_argnums=donate)
+        args = (p_sds, st_sds, tok_sds, pos_sds)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+
+    n_chips = mesh.size
+    hlo = compiled.as_text()
+    coll = analysis.collective_bytes(hlo)
+    rec = {
+        "layers_used": cfg.n_layers,
+        "arch": case.arch,
+        "shape": shape.name,
+        "policy": case.policy.kind,
+        "capacity": case.policy.capacity,
+        "kind": case.kind,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "n_chips": n_chips,
+        "flops": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "collective_bytes": coll,
+        "mem": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "ok": True,
+    }
+    return rec
+
+
+def run_case(arch: str, shape_name: str, policy_kind: str,
+             multi_pod: bool, out_path: str | None) -> dict:
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    case = specs.case_for(cfg, shape, policy_kind)
+    if case.skip_reason:
+        rec = {"arch": arch, "shape": shape_name, "policy": policy_kind,
+               "mesh": "multipod" if multi_pod else "pod",
+               "ok": False, "skipped": True, "reason": case.skip_reason}
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        try:
+            rec = lower_case(case, mesh)
+        except Exception as e:  # a failure here is a bug in the system
+            rec = {"arch": arch, "shape": shape_name, "policy": policy_kind,
+                   "mesh": "multipod" if multi_pod else "pod",
+                   "ok": False, "skipped": False,
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+    if out_path:
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--policy", default="lethe")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    # kernels lower through the XLA-native reference on host platforms
+    kernel_ops.set_default_impl("ref")
+
+    if args.all:
+        combos = [(a, s) for a in list_archs() for s in SHAPES]
+    else:
+        combos = [(args.arch, args.shape)]
+    for arch, shape in combos:
+        rec = run_case(arch, shape, args.policy, args.multipod, args.out)
+        status = ("OK" if rec.get("ok")
+                  else ("SKIP" if rec.get("skipped") else "FAIL"))
+        print(f"[{status}] {arch} × {shape} × "
+              f"{'multipod' if args.multipod else 'pod'} "
+              + (f"flops={rec.get('flops', 0):.3e} "
+                 f"temp={rec.get('mem', {}).get('temp_bytes', 0)/2**30:.2f}GiB "
+                 f"compile={rec.get('compile_s', 0)}s"
+                 if rec.get("ok") else rec.get("reason",
+                                               rec.get("error", ""))))
+        if not rec.get("ok") and not rec.get("skipped"):
+            print(rec.get("trace", ""))
+
+
+if __name__ == "__main__":
+    main()

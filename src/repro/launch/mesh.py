@@ -1,0 +1,38 @@
+"""Production mesh definitions (TPU v5e numbers).
+
+Single pod: (data=16, model=16) = 256 chips.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+``xla_force_host_platform_device_count`` before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW_PER_LINK = 50e9          # bytes/s per link
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(data: int = 2, model: int = 4):
+    """Small mesh over however many (possibly fake) devices exist — used by
+    sharding unit tests."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,259 @@
+"""Sharding rules: map every parameter / state / batch leaf to a
+PartitionSpec on the production mesh.
+
+Baseline scheme (Megatron-style tensor parallel on ``model``, batch data
+parallel on ``(pod, data)``) with *divisibility-aware fallbacks* — jit input
+shardings must divide exactly, so each rule carries a priority chain of
+candidate axes and the first divisible one wins:
+
+  * attention q/k/v projections — output (flattened head) axis on ``model``
+  * attention output proj       — input axis on ``model``
+  * MLP up/gate | down          — d_ff out | in on ``model``
+  * MoE experts [E, D, F]       — expert axis on ``model`` when E divides
+    (expert parallel: arctic 128e), else F (tensor parallel inside experts:
+    mixtral 8e on a 16-way axis)
+  * embed [V, D]                — vocab on ``model``, falling back to D
+    (whisper's 51866 vocab is not 16-divisible)
+  * KV cache [L,B,Hkv,C,Dh]     — batch on ``data``; on ``model``: KV heads
+    when divisible (gemma2 kv=16), else capacity C (key-parallel
+    flash-decode — GQA/MQA archs), else head dim
+  * long_500k (B=1)             — capacity sharded over every mesh axis
+    (sequence-parallel decode)
+  * recurrent states            — batch on ``data``, width/heads on ``model``
+
+Perf iterations on top of this baseline are logged in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.cache import KVCache
+
+
+def _kv_priority() -> tuple[int, ...]:
+    """Model-axis placement priority for the KV cache [Hkv, C, Dh] dims.
+
+    Baseline "heads,cap,dh": prefer KV heads, fall back to capacity.
+    §Perf finding (command-r decode_32k): capacity sharding makes every
+    append/compact/argsort a cross-shard op (~10.9 GB/step of all-gather);
+    "heads,dh,cap" keeps the C axis local — slot bookkeeping is free and
+    attention pays only small partial-softmax all-reduces.
+    """
+    order = os.environ.get("REPRO_KV_SHARD_PRIORITY", "heads,cap,dh")
+    idx = {"heads": 0, "cap": 1, "dh": 2}
+    return tuple(idx[x] for x in order.split(","))
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _data_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in _data_axes(mesh)]))
+
+
+def _pick_axis(shape: Sequence[int], priority: Sequence[int],
+               m: int) -> Optional[int]:
+    """First axis in ``priority`` whose length divides m-way sharding."""
+    for ax in priority:
+        ax = ax % len(shape) if shape else 0
+        if len(shape) > ax and shape[ax] % m == 0 and shape[ax] >= m:
+            return ax
+    return None
+
+
+def _spec(ndim: int, axis: Optional[int], name) -> P:
+    spec = [None] * ndim
+    if axis is not None:
+        spec[axis] = name
+    return P(*spec)
+
+
+# -- parameter rules: leaf name -> axis priority (negative = from the end) --
+_PARAM_PRIORITY = {
+    "unembed": (-1, -2),
+    "wq": (-1,), "wk": (-1,), "wv": (-1,), "wo": (-2, -1),
+    "bq": (-1,), "bk": (-1,), "bv": (-1,),
+    "w_up": (-1,), "w_gate": (-1,), "w_down": (-2, -1),
+    # rwkv6
+    "wr": (-1,), "wg": (-1,),
+    "cm_k": (-1,), "cm_v": (-2, -1), "cm_r": (-1,),
+    # rglru
+    "w_y": (-1,), "w_out": (-2, -1), "wa": (-1,), "wx": (-1,),
+    "conv_b": (-1,), "ba": (-1,), "bx": (-1,), "lam": (-1,),
+}
+_MOE_TENSORS = {"w_up", "w_gate", "w_down"}
+_REPLICATED = {"router", "pos_embed", "ddl_a", "ddl_b", "wd1", "wd2",
+               "conv_w", "mu", "mu_x", "mu_ck", "mu_cr", "u", "w0",
+               "gn_scale", "gn_bias"}
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+    return ""
+
+
+def _path_has(path, name: str) -> bool:
+    return any(getattr(p, "key", None) == name for p in path)
+
+
+def _spec_for_param(path, leaf, m: int) -> P:
+    name = _leaf_name(path)
+    nd = leaf.ndim
+    if nd == 0 or name in _REPLICATED:
+        return P()
+    if name == "embed":
+        ax = _pick_axis(leaf.shape, (0, 1), m)
+        return _spec(nd, ax, "model")
+    if _path_has(path, "moe") and name in _MOE_TENSORS and nd >= 3:
+        ax = _pick_axis(leaf.shape, (nd - 3, nd - 1, nd - 2), m)
+        return _spec(nd, ax, "model")
+    pri = _PARAM_PRIORITY.get(name)
+    if pri is None:
+        return P()
+    ax = _pick_axis(leaf.shape, [p % nd for p in pri if -nd <= p < nd], m)
+    return _spec(nd, ax, "model")
+
+
+def param_specs(params: Any, cfg: ArchConfig, mesh: Mesh) -> Any:
+    m = _model_size(mesh)
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [_spec_for_param(path, leaf, m) for path, leaf in paths_leaves]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_specs(p_spec: Any) -> Any:
+    from repro.optim.adamw import AdamWState
+    return AdamWState(step=P(), mu=p_spec,
+                      nu=jax.tree.map(lambda s: s, p_spec,
+                                      is_leaf=lambda x: isinstance(x, P)))
+
+
+# --------------------------------------------------------------------------
+# Decode-state shardings
+# --------------------------------------------------------------------------
+
+def _cache_specs(cache: KVCache, mesh: Mesh, batch_size: int) -> KVCache:
+    m = _model_size(mesh)
+    daxes = _data_axes(mesh)
+    dsz = _data_size(mesh)
+    L, B, Hkv, C, Dh = cache.k.shape
+
+    if batch_size >= dsz and batch_size % dsz == 0:
+        b_ax = daxes if len(daxes) > 1 else daxes[0]
+        # model axis placement: priority chain over (Hkv, C, Dh)
+        target = _pick_axis((Hkv, C, Dh), _kv_priority(), m)
+        model_on = {0: "heads", 1: "cap", 2: "dh"}.get(target, None)
+        kv = {
+            "heads": P(None, b_ax, "model", None, None),
+            "cap": P(None, b_ax, None, "model", None),
+            "dh": P(None, b_ax, None, None, "model"),
+            None: P(None, b_ax, None, None, None),
+        }[model_on]
+        vec = (P(None, b_ax, "model") if model_on == "cap"
+               else P(None, b_ax, None))
+        ln = P(None, b_ax)
+    else:
+        # sequence-parallel decode (long_500k, B=1): C over every axis
+        all_axes = tuple(mesh.axis_names)
+        total = int(np.prod([mesh.shape[a] for a in all_axes]))
+        if C % total == 0:
+            kv = P(None, None, None, all_axes, None)
+            vec = P(None, None, all_axes)
+        elif C % m == 0:
+            kv = P(None, None, None, "model", None)
+            vec = P(None, None, "model")
+        else:
+            kv = P(None, None, None, None, None)
+            vec = P(None, None, None)
+        ln = P(None, None)
+    return KVCache(k=kv, v=kv, pos=vec, score=vec, length=ln,
+                   budget=P(None), evict_at=P(None), sparsity=P(None))
+
+
+def state_specs(state: Any, cfg: ArchConfig, mesh: Mesh,
+                batch_size: int) -> Any:
+    m = _model_size(mesh)
+    daxes = _data_axes(mesh)
+    dsz = _data_size(mesh)
+    data_ok = batch_size >= dsz and batch_size % dsz == 0
+    b_ax = (daxes if len(daxes) > 1 else daxes[0]) if data_ok else None
+
+    def leaf_spec(path, leaf):
+        nd = leaf.ndim
+        name = _leaf_name(path)
+        if name in ("cross_k", "cross_v"):        # [L,B,H,S,Dh]
+            ax = _pick_axis(leaf.shape[2:], (0, 1, 2), m)
+            spec = [None, b_ax, None, None, None]
+            if ax is not None:
+                spec[2 + ax] = "model"
+            return P(*spec)
+        if name == "wkv":                          # [L,B,H,N,N]
+            ax = _pick_axis(leaf.shape[2:], (0, 1, 2), m)
+            spec = [None, b_ax, None, None, None]
+            if ax is not None:
+                spec[2 + ax] = "model"
+            return P(*spec)
+        if name == "h":                            # [L,B,W]
+            ax = _pick_axis(leaf.shape[2:], (0,), m)
+            return P(None, b_ax, "model" if ax is not None else None)
+        if name == "conv":                         # [L,B,cw-1,W]
+            ax = _pick_axis(leaf.shape[3:], (0,), m)
+            return P(None, b_ax, None, "model" if ax is not None else None)
+        if name in ("x_tm", "x_cm"):               # [L,B,D]
+            return P(None, b_ax, None)
+        if nd >= 2:
+            return P(*([None, b_ax] + [None] * (nd - 2)))
+        return P()
+
+    def spec_one(sub):
+        if isinstance(sub, KVCache):
+            return _cache_specs(sub, mesh, batch_size)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(sub)
+        return jax.tree_util.tree_unflatten(
+            treedef, [leaf_spec(p, l) for p, l in flat])
+
+    if isinstance(state, KVCache):
+        return spec_one(state)
+    if isinstance(state, dict):
+        return {k: spec_one(v) for k, v in state.items()}
+    return spec_one(state)
+
+
+def batch_specs(batch: dict, mesh: Mesh, batch_size: int) -> dict:
+    daxes = _data_axes(mesh)
+    dsz = _data_size(mesh)
+    data_ok = batch_size >= dsz and batch_size % dsz == 0
+    b = (daxes if len(daxes) > 1 else daxes[0]) if data_ok else None
+    out = {}
+    for k, v in batch.items():
+        if v is None:
+            continue
+        out[k] = P(*([b] + [None] * (v.ndim - 1)))
+    return out
+
+
+def token_spec(mesh: Mesh, batch_size: int) -> P:
+    daxes = _data_axes(mesh)
+    dsz = _data_size(mesh)
+    if batch_size >= dsz and batch_size % dsz == 0:
+        return P(daxes if len(daxes) > 1 else daxes[0])
+    return P()
+
+
+def to_named(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,124 @@
+"""ShapeDtypeStruct stand-ins for every (architecture × input-shape) pair —
+weak-type-correct, shardable, zero allocation. The dry-run lowers against
+these.
+
+Capacity policy for decode shapes (see DESIGN.md):
+  * decode_32k  — Lethe capacity 4096 slots (87.5% reduction vs the 32k
+    FullKV cache, the paper's operating regime); FullKV variant capacity
+    32768 for comparison runs.
+  * long_500k   — Lethe capacity 16384. FullKV at 500k exists only for
+    natively sub-quadratic archs; for pure full-attention archs the pruned
+    cache IS the sub-quadratic mechanism (whisper is skipped outright:
+    enc-dec cross-attention is O(dec·enc) regardless).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import InputShape
+from repro.core.policy import PolicyConfig, make_policy
+from repro.models.api import ModelAPI, build_model
+from repro.optim import adamw
+
+SDS = jax.ShapeDtypeStruct
+
+VLM_IMG_TOKENS = 1024
+LETHE_CAP_DECODE = 4096
+LETHE_CAP_LONG = 16384
+PREFILL_CAP = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class DryrunCase:
+    arch: str
+    shape: InputShape
+    policy: PolicyConfig
+    kind: str                   # train | prefill | decode
+    skip_reason: str | None = None
+
+
+def decode_capacity(cfg: ArchConfig, shape: InputShape,
+                    policy_kind: str) -> int:
+    if policy_kind == "fullkv":
+        if cfg.sliding_window and cfg.sub_quadratic:
+            return min(shape.seq_len, cfg.sliding_window)
+        return shape.seq_len
+    return LETHE_CAP_LONG if shape.seq_len > 100_000 else LETHE_CAP_DECODE
+
+
+def case_for(cfg: ArchConfig, shape: InputShape,
+             policy_kind: str = "lethe") -> DryrunCase:
+    skip = None
+    if shape.name == "long_500k":
+        if cfg.is_encoder_decoder:
+            skip = ("whisper: enc-dec full attention; no sub-quadratic "
+                    "decode variant (DESIGN.md §Arch-applicability)")
+        elif (policy_kind == "fullkv" and not cfg.sub_quadratic
+              and cfg.has_kv_cache):
+            skip = "FullKV@500k unsupported for full-attention archs (OOM "\
+                   "by construction — the paper's motivating failure)"
+    cap = (decode_capacity(cfg, shape, policy_kind)
+           if cfg.has_kv_cache else 8)
+    if shape.kind == "prefill":
+        cap = PREFILL_CAP if policy_kind != "fullkv" else shape.seq_len
+    policy = make_policy(policy_kind, capacity=cap)
+    return DryrunCase(arch=cfg.name, shape=shape, policy=policy,
+                      kind=shape.kind, skip_reason=skip)
+
+
+# --------------------------------------------------------------------------
+# SDS builders
+# --------------------------------------------------------------------------
+
+def batch_sds(cfg: ArchConfig, shape: InputShape, *,
+              with_labels: bool) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    extra = 1 if with_labels else 0
+    out: dict[str, Any] = {}
+    if cfg.family == "vlm":
+        s_img = min(VLM_IMG_TOKENS, S // 4)
+        out["tokens"] = SDS((B, S - s_img + extra), jnp.int32)
+        out["img_embeds"] = SDS((B, s_img, cfg.d_model), jnp.bfloat16)
+    elif cfg.family == "audio":
+        out["tokens"] = SDS((B, S + extra), jnp.int32)
+        out["enc_frames"] = SDS((B, cfg.encoder_seq_len, cfg.d_model),
+                                jnp.bfloat16)
+    else:
+        out["tokens"] = SDS((B, S + extra), jnp.int32)
+    return out
+
+
+def model_init_kwargs(cfg: ArchConfig, shape: InputShape) -> dict:
+    if cfg.is_encoder_decoder:
+        return {"max_positions": max(shape.seq_len + 8, 4096)}
+    return {}
+
+
+def params_sds(model: ModelAPI, shape: InputShape,
+               dtype=jnp.bfloat16) -> Any:
+    kw = model_init_kwargs(model.cfg, shape)
+    return jax.eval_shape(
+        lambda k: model.init(k, dtype=dtype, **kw), jax.random.PRNGKey(0))
+
+
+def opt_state_sds(p_sds: Any) -> Any:
+    return jax.eval_shape(adamw.init, p_sds)
+
+
+def decode_state_sds(model: ModelAPI, shape: InputShape,
+                     policy: PolicyConfig, dtype=jnp.bfloat16) -> Any:
+    B = shape.global_batch
+    kw = {}
+    if model.cfg.is_encoder_decoder:
+        kw["enc_len"] = model.cfg.encoder_seq_len
+    return jax.eval_shape(
+        lambda: model.init_decode_state(policy, B, dtype=dtype, **kw))
+
+
+def decode_inputs_sds(shape: InputShape) -> tuple[Any, Any]:
+    return (SDS((shape.global_batch,), jnp.int32), SDS((), jnp.int32))

@@ -1,0 +1,75 @@
+"""Step functions lowered by the launcher and the multi-pod dry-run:
+``train_step`` (train_4k), ``prefill`` (prefill_32k) and ``serve_step``
+(decode_32k / long_500k — ONE new token against a KV cache)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import PolicyConfig
+from repro.models.api import ModelAPI
+from repro.optim import adamw
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  weights: jax.Array | None = None) -> jax.Array:
+    """Mean next-token CE. logits [B,S,V] (f32 upcast inside)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if weights is not None:
+        return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+    return jnp.mean(nll)
+
+
+def make_train_step(model: ModelAPI, opt_cfg: adamw.AdamWConfig,
+                    *, aux_weight: float = 0.01,
+                    label_offset: int = 0) -> Callable:
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics). ``label_offset`` skips image-prefix logits
+    for VLM training (logits cover img+text; labels are text-only)."""
+
+    def train_step(params, opt_state, batch):
+        tokens = batch["tokens"]
+
+        def loss_fn(p):
+            logits, aux = model.forward_train(p, batch)
+            if label_offset:
+                logits = logits[:, label_offset:]
+            w = batch.get("loss_weights")
+            w = None if w is None else w[:, 1:]
+            loss = cross_entropy(logits[:, :-1], tokens[:, 1:], w)
+            return loss + aux_weight * aux, loss
+
+        (total, loss), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params)
+        new_params, new_opt, metrics = adamw.update(grads, opt_state, params,
+                                                    opt_cfg)
+        metrics = dict(metrics, loss=loss, total_loss=total)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(model: ModelAPI, policy: PolicyConfig) -> Callable:
+    """serve_step(params, state, token, cur_pos) -> (logits, state):
+    one decoded token against the (possibly pruned) cache."""
+
+    def serve_step(params, state, token, cur_pos):
+        return model.module.decode_step(params, state, token, cur_pos,
+                                        model.cfg, policy)
+
+    return serve_step
+
+
+def make_prefill(model: ModelAPI, policy: PolicyConfig,
+                 capacity: int) -> Callable:
+    def prefill_fn(params, batch):
+        return model.prefill(params, batch, policy, capacity=capacity,
+                             cache_dtype=jnp.bfloat16)
+    return prefill_fn

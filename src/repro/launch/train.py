@@ -1,0 +1,89 @@
+"""Training launcher.
+
+On real hardware this drives the pjit'd train_step over the production mesh;
+on CPU it runs reduced configs end-to-end. The dry-run path (launch/dryrun)
+proves the full-scale mesh lowering; this driver proves the loop.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch granite-20b --reduced \
+      --steps 200 --seq-len 64 --batch 8 [--ckpt experiments/run1]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.configs import get_arch
+from repro.data import pipeline
+from repro.launch import steps
+from repro.models.api import build_model
+from repro.optim import adamw
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced smoke-scale variant (CPU)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--vocab", type=int, default=0,
+                    help="override vocab (smaller = faster CPU training)")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.vocab:
+        cfg = dataclasses.replace(cfg, vocab_size=args.vocab)
+    model = build_model(cfg)
+    init_kw = ({"max_positions": args.seq_len + 8}
+               if cfg.is_encoder_decoder else {})
+    params = model.init(jax.random.PRNGKey(0), **init_kw)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} family={cfg.family} params={n_params/1e6:.2f}M")
+
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=args.steps // 10,
+                                total_steps=args.steps)
+    offset = 0
+    extras = {}
+    if cfg.family == "vlm":
+        offset = 8
+        extras["img_embeds"] = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(5), (args.batch, 8, cfg.d_model))
+    if cfg.family == "audio":
+        extras["enc_frames"] = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(5), (args.batch, 16, cfg.d_model))
+    train_step = jax.jit(steps.make_train_step(model, opt_cfg,
+                                               label_offset=offset))
+    opt_state = adamw.init(params)
+    data = pipeline.lm_stream(pipeline.DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        batch_size=args.batch))
+
+    t0 = time.time()
+    for i, batch in zip(range(args.steps), data):
+        batch.update(extras)
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            tput = args.batch * args.seq_len * (i + 1) / (time.time() - t0)
+            print(f"step {i:5d} loss={float(metrics['loss']):.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} "
+                  f"tok/s={tput:.0f}")
+    if args.ckpt:
+        ckpt.save(args.ckpt, params, step=args.steps)
+        print(f"saved checkpoint to {args.ckpt}.npz")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Uniform model API over the heterogeneous architecture families.
+
+``build_model(cfg)`` dispatches on family and returns a ``ModelAPI`` whose
+five entry points have identical signatures across all 10 assigned archs.
+``batch`` is a dict pytree: {"tokens": [B,S]} plus optional modality extras
+("enc_frames" [B,S_enc,D] for audio, "img_embeds" [B,S_img,D] for VLM).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import PolicyConfig
+from repro.models import rglru, rwkv6, transformer, vlm, whisper
+
+
+def _extras(batch: dict) -> dict:
+    return {k: v for k, v in batch.items()
+            if k in ("enc_frames", "img_embeds") and v is not None}
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    module: Any
+
+    def init(self, key, dtype=jnp.float32, **kw):
+        return self.module.init_params(self.cfg, key, dtype=dtype, **kw)
+
+    def forward_train(self, params, batch: dict):
+        return self.module.forward_train(
+            params, batch["tokens"], self.cfg, **_extras(batch))
+
+    def prefill(self, params, batch: dict, policy: PolicyConfig, *,
+                capacity: int | None = None, cache_dtype=jnp.float32):
+        return self.module.prefill(
+            params, batch["tokens"], self.cfg, policy, capacity=capacity,
+            cache_dtype=cache_dtype, **_extras(batch))
+
+    def decode_step(self, params, state, token, cur_pos,
+                    policy: PolicyConfig):
+        return self.module.decode_step(
+            params, state, token, cur_pos, self.cfg, policy)
+
+    def init_decode_state(self, policy: PolicyConfig, batch_size: int,
+                          dtype=jnp.float32, **kw):
+        return self.module.init_decode_state(
+            self.cfg, policy, batch_size, dtype=dtype, **kw)
+
+
+_FAMILY_MODULES = {
+    "ssm": rwkv6,
+    "hybrid": rglru,
+    "audio": whisper,
+    "vlm": vlm,
+    "dense": transformer,
+    "moe": transformer,
+}
+
+
+def build_model(cfg: ArchConfig) -> ModelAPI:
+    return ModelAPI(cfg=cfg, module=_FAMILY_MODULES[cfg.family])

@@ -1,0 +1,158 @@
+"""GQA attention with Lethe-managed decode cache.
+
+Three call modes:
+  * full-sequence (train / prefill compute)      -> attend_full
+  * prefill cache construction + RASR/sparsity   -> prefill_stats
+  * single-token decode over a slotted cache     -> decode_attend
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import cache as cache_lib
+from repro.core import rasr, sparsity as sparsity_lib
+from repro.core.policy import PolicyConfig
+from repro.kernels import ops
+from repro.models import common
+
+
+def init_attention(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    d, dh, hq, hkv = cfg.d_model, cfg.d_head, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(ks[0], (d, hq * dh), dtype),
+        "wk": common.dense_init(ks[1], (d, hkv * dh), dtype),
+        "wv": common.dense_init(ks[2], (d, hkv * dh), dtype),
+        "wo": common.dense_init(ks[3], (hq * dh, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def project_qkv(x: jax.Array, p: dict, cfg: ArchConfig
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x [..., D] -> q [..., Hq, Dh], k/v [..., Hkv, Dh]."""
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(*x.shape[:-1], cfg.n_heads, cfg.d_head)
+    k = k.reshape(*x.shape[:-1], cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(*x.shape[:-1], cfg.n_kv_heads, cfg.d_head)
+    return q, k, v
+
+
+def _rope(q, k, positions, cfg: ArchConfig, positions3=None):
+    """q/k: [B, S, H, Dh] rotated at ``positions`` [B, S] (or M-RoPE
+    ``positions3`` [3, B, S])."""
+    if not cfg.use_rope:
+        return q, k
+    qh = jnp.swapaxes(q, -3, -2)  # [B, H, S, Dh]
+    kh = jnp.swapaxes(k, -3, -2)
+    if cfg.mrope and positions3 is not None:
+        p3 = positions3[:, :, None, :]  # [3, B, 1, S]
+        qh = common.apply_mrope(qh, p3, cfg.rope_theta, cfg.mrope_sections)
+        kh = common.apply_mrope(kh, p3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        pos = positions[:, None, :]     # [B, 1, S]
+        qh = common.apply_rope(qh, pos, cfg.rope_theta)
+        kh = common.apply_rope(kh, pos, cfg.rope_theta)
+    return jnp.swapaxes(qh, -3, -2), jnp.swapaxes(kh, -3, -2)
+
+
+def attend_full(x: jax.Array, p: dict, cfg: ArchConfig, *,
+                window=None, positions: jax.Array | None = None,
+                positions3: jax.Array | None = None,
+                causal: bool = True,
+                return_kv: bool = False):
+    """Full-sequence attention. x [B, S, D] -> out [B, S, D].
+
+    ``window`` may be a traced per-layer scalar (gemma2's alternating
+    local/global inside one layer-scan); a sentinel >= seq_len means global.
+    """
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = project_qkv(x, p, cfg)
+    q, k = _rope(q, k, positions, cfg, positions3)
+    qh = jnp.swapaxes(q, 1, 2)   # [B, Hq, S, Dh]
+    kh = jnp.swapaxes(k, 1, 2)   # [B, Hkv, S, Dh]
+    vh = jnp.swapaxes(v, 1, 2)
+    out = ops.prefill_attention(
+        qh, kh, vh, causal=causal, window=window,
+        softcap=cfg.attn_logit_softcap, scale=cfg.d_head ** -0.5)
+    out = jnp.swapaxes(out, 1, 2).reshape(B, S, -1) @ p["wo"]
+    if return_kv:
+        return out, (kh, vh)
+    return out
+
+
+def prefill_stats(qh: jax.Array, kh: jax.Array, cfg: ArchConfig,
+                  policy: PolicyConfig, *, window=None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Observation-window RASR init scores + layerwise Hoyer sparsity.
+
+    qh [B, Hq, S, Dh], kh [B, Hkv, S, Dh] (post-RoPE).
+    Returns (scores [B, S], sparsity scalar)."""
+    B, Hq, S, Dh = qh.shape
+    W = min(policy.obs_window, S)
+    q_win = jax.lax.dynamic_slice_in_dim(qh, S - W, W, axis=2)
+    colsums, probs = ops.obs_colsums(
+        q_win, kh, win_start=S - W, window=window,
+        softcap=cfg.attn_logit_softcap, scale=cfg.d_head ** -0.5)
+    scores = rasr.prefill_scores(colsums, W)
+    spars = sparsity_lib.layer_sparsity_from_probs(probs)
+    return scores, spars
+
+
+def decode_attend(x: jax.Array, p: dict, layer: cache_lib.KVCache,
+                  cur_pos, cfg: ArchConfig, policy: PolicyConfig, *,
+                  window=None, positions3=None,
+                  prune: bool = True) -> tuple[jax.Array, cache_lib.KVCache]:
+    """One decode step for one layer. x [B, D] -> (attn_out [B, D], cache').
+
+    Appends the token's K/V, runs fused masked attention + RASR column-sums,
+    EMA-updates scores and the layerwise sparsity estimate, then runs the
+    (conditionally triggered) pruning round.
+    """
+    B, D = x.shape
+    q, k, v = project_qkv(x[:, None, :], p, cfg)   # [B, 1, H, Dh]
+    pos_b = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (B, 1))
+    q, k = _rope(q, k, pos_b, cfg,
+                 positions3 if positions3 is None else positions3[:, :, None])
+    q1 = q[:, 0]                                   # [B, Hq, Dh]
+    k1 = jnp.swapaxes(k, 1, 2)[:, :, 0]            # [B, Hkv, Dh]
+    v1 = jnp.swapaxes(v, 1, 2)[:, :, 0]
+
+    layer = cache_lib.append_token(layer, k1, v1, cur_pos, policy.init_score)
+    out, probsum = ops.decode_attention(
+        q1, layer.k, layer.v, layer.pos, cur_pos, window=window,
+        softcap=cfg.attn_logit_softcap, scale=cfg.d_head ** -0.5)
+
+    layer = rasr.update_scores(layer, probsum, policy.gamma)
+    # layerwise sparsity EMA from this step's head-aggregated attention
+    valid = cache_lib.valid_mask(layer.pos)
+    p_norm = probsum / cfg.n_heads
+    obs = sparsity_lib.layer_sparsity_from_probs(
+        p_norm, where=valid, n_valid=jnp.maximum(layer.length, 2))
+    new_spars = sparsity_lib.update_sparsity_ema(
+        layer.sparsity, obs, policy.sparsity_ema)
+    layer = cache_lib.KVCache(
+        k=layer.k, v=layer.v, pos=layer.pos, score=layer.score,
+        length=layer.length, budget=layer.budget, evict_at=layer.evict_at,
+        sparsity=new_spars)
+
+    if prune and policy.prunes:
+        from repro.core import pruning
+        layer = pruning.prune_layer(layer, cur_pos, policy=policy,
+                                    window=window)
+    attn_out = out.reshape(B, -1) @ p["wo"]
+    return attn_out, layer

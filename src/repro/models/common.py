@@ -1,0 +1,178 @@
+"""Shared model building blocks (pure JAX, no flax)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+# --------------------------------------------------------------------------
+# Initialisers
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype=jnp.float32, scale: float | None = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def apply_norm(x, norm_params: dict, cfg: ArchConfig):
+    if cfg.norm_style == "layernorm":
+        return layernorm(x, norm_params["scale"], norm_params["bias"],
+                         cfg.rms_eps)
+    return rmsnorm(x, norm_params["scale"], cfg.rms_eps)
+
+
+def init_norm(key, d: int, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    if cfg.norm_style == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.zeros((d,), dtype)}  # rmsnorm stores (scale - 1)
+
+
+# --------------------------------------------------------------------------
+# Activations
+# --------------------------------------------------------------------------
+
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu_sq":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    """[d_head//2] inverse frequencies."""
+    half = d_head // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate ``x`` [..., S, Dh] at ``positions`` [..., S] (broadcastable).
+
+    Split-halves convention: pairs are (x[..., :H], x[..., H:])."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                     # [H]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, H]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: tuple[int, ...]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. ``x``: [..., S, Dh]; ``positions3``:
+    [3, ..., S] — separate temporal/height/width position streams. Frequency
+    bands are partitioned by ``sections`` (sums to Dh//2): band j uses the
+    position stream of its section."""
+    dh = x.shape[-1]
+    half = dh // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(dh, theta)                     # [half]
+    # section id per frequency band
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections),
+        total_repeat_length=half)                     # [half]
+    # pick position stream per band: pos3 [3, ..., S] -> [..., S, half]
+    pos = jnp.take(positions3, sec_id, axis=0)        # [half, ..., S]
+    pos = jnp.moveaxis(pos, 0, -1)                    # [..., S, half]
+    ang = pos.astype(jnp.float32) * freqs             # [..., S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    """Whisper-style sinusoidal embeddings [length, dim]."""
+    half = dim // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = jnp.arange(length)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d, f), dtype),
+         "w_down": dense_init(ks[1], (f, d), dtype)}
+    if cfg.gated_mlp:
+        p["w_gate"] = dense_init(ks[2], (d, f), dtype)
+    return p
+
+
+def apply_mlp(x: jax.Array, p: dict, cfg: ArchConfig) -> jax.Array:
+    up = x @ p["w_up"]
+    if cfg.gated_mlp:
+        h = activation(x @ p["w_gate"], cfg.act) * up
+    else:
+        h = activation(up, cfg.act)
+    return h @ p["w_down"]
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def unembed(x: jax.Array, params: dict, cfg: ArchConfig) -> jax.Array:
+    """Final norm + output projection + final softcap. x [..., D] -> logits."""
+    x = apply_norm(x, params["final_norm"], cfg)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["unembed"]
+    return softcap(logits, cfg.final_logit_softcap)
+
+
+def embed_tokens(tokens: jax.Array, params: dict, cfg: ArchConfig) -> jax.Array:
+    x = params["embed"][tokens]
+    if cfg.emb_scale_by_sqrt_dim:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x

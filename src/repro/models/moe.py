@@ -1,0 +1,124 @@
+"""Mixture-of-Experts FFN with capacity-based sort-free dispatch.
+
+Top-k routing with a per-expert capacity buffer (GShard-style token dropping):
+tokens are scattered into an [E, cap, D] buffer (overflow assignments are
+dropped via out-of-bounds scatter semantics), experts run as one batched
+einsum, and results are combined back with the routing weights. FLOPs scale
+with k·N·D·F (not E·N·D·F) — honest MoE compute for the roofline.
+
+Expert-parallel sharding: the E axis of the expert weights/buffers is sharded
+over the ``model`` mesh axis (see launch/shardings.py); XLA GSPMD inserts the
+all-to-all-equivalent collectives around the scatter/gather.
+"""
+from __future__ import annotations
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+
+
+def _dispatch_mode() -> int:
+    """REPRO_MOE_SHARD_DISPATCH:
+      0 (default) — no constraint; GSPMD replicates the dispatch buffer
+        (baseline: expert FLOPs fail to shard; buffer grads all-reduce).
+      1 — buffer constrained (experts->model, capacity->data): shards the
+        einsums but the global-index scatter explodes into cross-axis
+        collectives (§Perf: refuted on arctic train_4k).
+      2 — experts->model only: the token scatter becomes an all-to-all
+        across expert shards and einsums shard over E; capacity stays
+        unsharded so scatter indices remain local per expert shard.
+    """
+    return int(os.environ.get("REPRO_MOE_SHARD_DISPATCH", "0"))
+
+
+def _constrain(x, spec):
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*spec))
+    except (ValueError, RuntimeError):
+        return x  # no mesh in scope (single-device tests)
+
+
+def init_moe(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": common.dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": common.dense_init(ks[1], (e, d, f), dtype),
+        "w_up": common.dense_init(ks[2], (e, d, f), dtype),
+        "w_down": common.dense_init(ks[3], (e, f, d), dtype),
+    }
+    if cfg.dense_residual_d_ff:
+        p["residual_mlp"] = common.init_mlp(
+            ks[4], d, cfg.dense_residual_d_ff, cfg, dtype)
+    return p
+
+
+def apply_moe(x: jax.Array, p: dict, cfg: ArchConfig, *,
+              capacity_factor: float | None = None
+              ) -> tuple[jax.Array, jax.Array]:
+    """x: [..., D]. Returns (out [..., D], aux_loss scalar).
+
+    aux_loss is the standard load-balancing loss (mean fraction · mean prob
+    per expert · E), usable by the trainer.
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xt = x.reshape(-1, d)
+    n = xt.shape[0]
+    e, k = cfg.n_experts, cfg.n_experts_per_tok
+    cf = (capacity_factor if capacity_factor is not None
+          else cfg.moe_capacity_factor)
+    cap = max(1, min(n, int(math.ceil(n * k / e * cf))))
+
+    logits = xt.astype(jnp.float32) @ p["router"]            # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                   # [N, k]
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss
+    frac = jnp.mean(
+        jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(frac * jnp.mean(probs, axis=0))
+
+    flat_e = top_i.reshape(-1)                               # [N*k]
+    flat_w = top_w.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(n), k)                    # [N*k]
+
+    # within-expert slot: rank of this assignment among same-expert ones
+    onehot = flat_e[:, None] == jnp.arange(e)[None, :]       # [N*k, E]
+    rank = (jnp.cumsum(onehot, axis=0) - 1)                  # occurrences so far
+    slot = jnp.take_along_axis(rank, flat_e[:, None], axis=1)[:, 0]
+
+    # scatter tokens into [E, cap, D]; slot >= cap drops (capacity overflow)
+    buf = jnp.zeros((e, cap, d), xt.dtype)
+    buf = buf.at[flat_e, slot].set(xt[flat_t], mode="drop")
+    mode = _dispatch_mode()
+    if mode == 1:
+        buf = _constrain(buf, ("model", "data", None))
+    elif mode == 2:
+        buf = _constrain(buf, ("model", None, None))
+
+    h_up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h_gate = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    h = common.activation(h_gate, cfg.act) * h_up
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"])           # [E, cap, D]
+    if mode == 1:
+        y = _constrain(y, ("model", "data", None))
+    elif mode == 2:
+        y = _constrain(y, ("model", None, None))
+
+    # combine: gather each assignment's expert output, weight, scatter-add
+    kept = slot < cap
+    ya = y[flat_e, jnp.minimum(slot, cap - 1)]               # [N*k, D]
+    w = jnp.where(kept, flat_w, 0.0).astype(ya.dtype)
+    out = jnp.zeros_like(xt).at[flat_t].add(w[:, None] * ya)
+
+    if "residual_mlp" in p:  # arctic: parallel dense residual MLP
+        out = out + common.apply_mlp(xt, p["residual_mlp"], cfg)
+    return out.reshape(orig_shape), aux

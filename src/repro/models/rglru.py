@@ -1,0 +1,310 @@
+"""RecurrentGemma / Griffin hybrid — RG-LRU recurrent blocks interleaved with
+local (sliding-window) attention, pattern (rglru, rglru, local_attn)
+[arXiv:2402.19427].
+
+TPU adaptation: the RG-LRU linear recurrence h_t = a_t·h_{t-1} + b_t is run
+with ``jax.lax.associative_scan`` for training/prefill (parallel, log-depth —
+the TPU-native form) and as a single fused step during decode.
+
+Lethe applicability: only the 1-in-3 local-attention layers own a KV cache,
+and that cache is already window-bounded; Lethe can shrink it further below
+the window (supported here — the attention layers use the shared slotted
+cache machinery), but the headroom is bounded by construction (DESIGN.md).
+
+Layers are heterogeneous, so this model uses a Python loop (26 layers) with
+per-kind parameter lists instead of a layer scan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LOCAL_ATTN, RGLRU, ArchConfig
+from repro.core import cache as cache_lib
+from repro.core.policy import PolicyConfig
+from repro.models import attention, common
+
+_C_CONST = 8.0
+
+
+# --------------------------------------------------------------------------
+# Params
+# --------------------------------------------------------------------------
+
+def _init_rglru_block(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": common.init_norm(ks[0], d, cfg, dtype),
+        "w_y": common.dense_init(ks[1], (d, w), dtype),
+        "w_gate": common.dense_init(ks[2], (d, w), dtype),
+        "conv_w": common.dense_init(ks[3], (cfg.conv_width, w), dtype,
+                                    scale=0.3),
+        "conv_b": jnp.zeros((w,), dtype),
+        "wa": common.dense_init(ks[4], (w, w), dtype),
+        "ba": jnp.zeros((w,), dtype),
+        "wx": common.dense_init(ks[5], (w, w), dtype),
+        "bx": jnp.zeros((w,), dtype),
+        # softplus(lambda) init so decay a^c is in a useful range
+        "lam": jnp.asarray(
+            jnp.linspace(0.3, 1.5, w), dtype),
+        "w_out": common.dense_init(ks[6], (w, d), dtype),
+        "ffn_norm": common.init_norm(ks[7], d, cfg, dtype),
+    }
+
+
+def _init_attn_block(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "norm": common.init_norm(ks[0], cfg.d_model, cfg, dtype),
+        "attn": attention.init_attention(ks[1], cfg, dtype),
+        "ffn_norm": common.init_norm(ks[2], cfg.d_model, cfg, dtype),
+    }
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    layers = []
+    for i, kind in enumerate(cfg.layer_kinds):
+        if kind == RGLRU:
+            lp = _init_rglru_block(ks[i], cfg, dtype)
+        else:
+            lp = _init_attn_block(ks[i], cfg, dtype)
+        mlp_key = jax.random.fold_in(ks[i], 999)
+        lp["mlp"] = common.init_mlp(mlp_key, cfg.d_model, cfg.d_ff, cfg,
+                                    dtype)
+        layers.append(lp)
+    return {
+        "embed": common.embed_init(ks[-3], (cfg.vocab_size, cfg.d_model),
+                                   dtype),
+        "layers": layers,
+        "final_norm": common.init_norm(ks[-2], cfg.d_model, cfg, dtype),
+        "unembed": common.dense_init(ks[-1], (cfg.d_model, cfg.vocab_size),
+                                     dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# RG-LRU pieces
+# --------------------------------------------------------------------------
+
+def _conv1d_causal(x: jax.Array, w: jax.Array, b: jax.Array,
+                   prev: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv. x [B, S, W]; w [cw, W]. ``prev`` [B, cw-1, W]
+    supplies history for decode (S == 1)."""
+    cw = w.shape[0]
+    if prev is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = prev
+    xp = jnp.concatenate([pad, x], axis=1)          # [B, S+cw-1, W]
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    return out + b
+
+
+def _rglru_gates(x: jax.Array, p: dict):
+    """a_t (decay) and gated input b_t for the linear recurrence."""
+    r = jax.nn.sigmoid(x @ p["wa"] + p["ba"])
+    i = jax.nn.sigmoid(x @ p["wx"] + p["bx"])
+    log_a = -_C_CONST * jax.nn.softplus(p["lam"]) * r    # [..., W]
+    a = jnp.exp(log_a.astype(jnp.float32))
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-9, 1.0)) * (i * x).astype(
+        jnp.float32)
+    return a, b
+
+
+def _rglru_seq(x: jax.Array, p: dict, h0: jax.Array) -> tuple[jax.Array,
+                                                              jax.Array]:
+    """Linear recurrence over a sequence via associative scan.
+    x [B, S, W]; h0 [B, W] initial state. Returns (y [B,S,W], h_last)."""
+    a, b = _rglru_gates(x, p)                        # [B, S, W] each
+    # fold h0 into the first step: b_0' = a_0*h0 + b_0
+    b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1].astype(jnp.float32)
+
+
+def _rglru_block_seq(x: jax.Array, lp: dict, cfg: ArchConfig,
+                     state: dict | None):
+    """Full recurrent block over a sequence. x [B, S, D]."""
+    h = common.apply_norm(x, lp["norm"], cfg)
+    y = h @ lp["w_y"]
+    gate = jax.nn.gelu(h @ lp["w_gate"], approximate=True)
+    prev = None if state is None else state["conv"]
+    yc = _conv1d_causal(y, lp["conv_w"], lp["conv_b"], prev)
+    h0 = (jnp.zeros((x.shape[0], y.shape[-1]), jnp.float32)
+          if state is None else state["h"])
+    yr, h_last = _rglru_seq(yc, lp, h0)
+    out = (yr * gate) @ lp["w_out"]
+    x = x + out
+    h2 = common.apply_norm(x, lp["ffn_norm"], cfg)
+    x = x + common.apply_mlp(h2, lp["mlp"], cfg)
+    cw = cfg.conv_width
+    new_state = {"h": h_last,
+                 "conv": y[:, -(cw - 1):] if y.shape[1] >= cw - 1 else
+                 jnp.concatenate([jnp.zeros((y.shape[0], cw - 1 - y.shape[1],
+                                             y.shape[2]), y.dtype), y], 1)}
+    return x, new_state
+
+
+def _rglru_block_step(x: jax.Array, lp: dict, cfg: ArchConfig, state: dict):
+    """Single decode step. x [B, D]."""
+    h = common.apply_norm(x, lp["norm"], cfg)
+    y = h @ lp["w_y"]                                 # [B, W]
+    gate = jax.nn.gelu(h @ lp["w_gate"], approximate=True)
+    # conv with ring history
+    hist = state["conv"]                              # [B, cw-1, W]
+    cw = cfg.conv_width
+    xp = jnp.concatenate([hist, y[:, None, :]], axis=1)
+    yc = sum(xp[:, i] * lp["conv_w"][i] for i in range(cw)) + lp["conv_b"]
+    a, b = _rglru_gates(yc, lp)
+    h_new = a * state["h"] + b
+    out = (h_new.astype(x.dtype) * gate) @ lp["w_out"]
+    x = x + out
+    h2 = common.apply_norm(x, lp["ffn_norm"], cfg)
+    x = x + common.apply_mlp(h2, lp["mlp"], cfg)
+    return x, {"h": h_new, "conv": xp[:, 1:]}
+
+
+def _attn_block_seq(x, lp, cfg, window):
+    h = common.apply_norm(x, lp["norm"], cfg)
+    out = attention.attend_full(h, lp["attn"], cfg, window=window)
+    x = x + out
+    h2 = common.apply_norm(x, lp["ffn_norm"], cfg)
+    return x + common.apply_mlp(h2, lp["mlp"], cfg)
+
+
+# --------------------------------------------------------------------------
+# Model entry points
+# --------------------------------------------------------------------------
+
+def _attn_layer_ids(cfg: ArchConfig) -> list[int]:
+    return [i for i, k in enumerate(cfg.layer_kinds) if k == LOCAL_ATTN]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def forward_train(params, tokens, cfg: ArchConfig, **_):
+    x = common.embed_tokens(tokens, params, cfg)
+    for i, kind in enumerate(cfg.layer_kinds):
+        lp = params["layers"][i]
+        if kind == RGLRU:
+            x, _ = _rglru_block_seq(x, lp, cfg, None)
+        else:
+            x = _attn_block_seq(x, lp, cfg, cfg.sliding_window)
+    return common.unembed(x, params, cfg), jnp.float32(0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "capacity",
+                                             "cache_dtype"))
+def prefill(params, tokens, cfg: ArchConfig, policy: PolicyConfig, *,
+            capacity=None, cache_dtype=jnp.float32, **_):
+    B, S = tokens.shape
+    C = capacity or policy.capacity
+    attn_ids = _attn_layer_ids(cfg)
+    x = common.embed_tokens(tokens, params, cfg)
+    rec_states, kv_layers = [], []
+    for i, kind in enumerate(cfg.layer_kinds):
+        lp = params["layers"][i]
+        if kind == RGLRU:
+            x, st = _rglru_block_seq(x, lp, cfg, None)
+            rec_states.append(st)
+        else:
+            h = common.apply_norm(x, lp["norm"], cfg)
+            q, k, v = attention.project_qkv(h, lp["attn"], cfg)
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+            q, k = attention._rope(q, k, positions, cfg)
+            qh, kh, vh = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+            from repro.kernels import ops
+            attn_raw = ops.prefill_attention(
+                qh, kh, vh, causal=True, window=cfg.sliding_window,
+                scale=cfg.d_head ** -0.5)
+            out = jnp.swapaxes(attn_raw, 1, 2).reshape(B, S, -1) \
+                @ lp["attn"]["wo"]
+            scores, spars = attention.prefill_stats(
+                qh, kh, cfg, policy, window=cfg.sliding_window)
+            x = x + out
+            h2 = common.apply_norm(x, lp["ffn_norm"], cfg)
+            x = x + common.apply_mlp(h2, lp["mlp"], cfg)
+            kv_layers.append((kh.astype(cache_dtype), vh.astype(cache_dtype),
+                              scores, spars))
+    logits = common.unembed(x[:, -1], params, cfg)
+
+    # Build the (attention-layers-only) slotted cache.
+    k_all = jnp.stack([t[0] for t in kv_layers])
+    v_all = jnp.stack([t[1] for t in kv_layers])
+    sc_all = jnp.stack([t[2] for t in kv_layers])
+    sp_all = jnp.stack([t[3] for t in kv_layers])
+    fill = jax.vmap(lambda k, v, s: cache_lib.fill_from_prefill(
+        k=k, v=v, scores=s, capacity=C))
+    k_c, v_c, pos_c, score_c, len_c = fill(k_all, v_all, sc_all)
+    nominal = min(policy.nominal_budget, C)
+    budgets = jnp.full((len(attn_ids),), nominal, jnp.int32)
+    kv = cache_lib.KVCache(
+        k=k_c, v=v_c, pos=pos_c, score=score_c, length=len_c,
+        budget=budgets, evict_at=budgets, sparsity=sp_all)
+    if policy.prunes:
+        from repro.core import pruning
+        cur = jnp.asarray(S - 1, jnp.int32)
+        kv = jax.vmap(lambda lay: pruning.prune_layer(
+            lay, cur, policy=policy,
+            window=jnp.asarray(cfg.sliding_window, jnp.int32),
+            force=True))(kv)
+    state = {"rec": jax.tree.map(lambda *xs: jnp.stack(xs), *rec_states),
+             "kv": kv}
+    return logits, state
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy"))
+def decode_step(params, state, token, cur_pos, cfg: ArchConfig,
+                policy: PolicyConfig, **_):
+    x = common.embed_tokens(token, params, cfg)
+    kv, rec = state["kv"], state["rec"]
+    new_kv_layers, new_rec_layers = [], []
+    ai = ri = 0
+    for i, kind in enumerate(cfg.layer_kinds):
+        lp = params["layers"][i]
+        if kind == RGLRU:
+            st = jax.tree.map(lambda a: a[ri], rec)
+            x, st2 = _rglru_block_step(x, lp, cfg, st)
+            new_rec_layers.append(st2)
+            ri += 1
+        else:
+            lay = kv.layer(ai)
+            h = common.apply_norm(x, lp["norm"], cfg)
+            attn_out, lay = attention.decode_attend(
+                h, lp["attn"], lay, cur_pos, cfg, policy,
+                window=jnp.asarray(cfg.sliding_window, jnp.int32))
+            x = x + attn_out
+            h2 = common.apply_norm(x, lp["ffn_norm"], cfg)
+            x = x + common.apply_mlp(h2, lp["mlp"], cfg)
+            new_kv_layers.append(lay)
+            ai += 1
+    new_state = {
+        "rec": jax.tree.map(lambda *xs: jnp.stack(xs), *new_rec_layers),
+        "kv": jax.tree.map(lambda *xs: jnp.stack(xs), *new_kv_layers),
+    }
+    logits = common.unembed(x, params, cfg)
+    return logits, new_state
+
+
+def init_decode_state(cfg: ArchConfig, policy: PolicyConfig, batch: int,
+                      dtype=jnp.float32) -> dict:
+    n_attn = len(_attn_layer_ids(cfg))
+    n_rec = cfg.n_layers - n_attn
+    w = cfg.lru_width or cfg.d_model
+    kv = cache_lib.init_cache(
+        n_layers=n_attn, batch=batch, n_kv_heads=cfg.n_kv_heads,
+        capacity=policy.capacity, d_head=cfg.d_head, policy=policy,
+        dtype=dtype)
+    rec = {"h": jnp.zeros((n_rec, batch, w), jnp.float32),
+           "conv": jnp.zeros((n_rec, batch, cfg.conv_width - 1, w), dtype)}
+    return {"rec": rec, "kv": kv}

@@ -1,0 +1,230 @@
+"""RWKV6 "Finch" — attention-free linear-recurrence model with
+data-dependent decay [arXiv:2404.05892].
+
+No KV cache exists: per-layer state is a fixed [B, H, N, N] matrix plus two
+token-shift vectors, so memory is O(1) in sequence length and Lethe is
+structurally inapplicable (DESIGN.md §Arch-applicability). Recurrence:
+
+    y_t[j] = Σ_i r_t[i] · (S_{t-1}[i,j] + u[i]·k_t[i]·v_t[j])
+    S_t[i,j] = w_t[i] · S_{t-1}[i,j] + k_t[i]·v_t[j]
+
+with the Finch signature feature: per-channel decay w_t = exp(-exp(·))
+computed from the *input* via a low-rank MLP (data-dependent decay), and
+DDLerp token-shift mixing for r/k/v/w/g.
+
+Training/prefill run the recurrence with ``lax.scan`` over time; decode is a
+single step of the same function.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.models.scan_config import layer_scan
+
+_DDLERP_RANK = 32
+_DECAY_RANK = 64
+_GATES = ("r", "k", "v", "w", "g")
+
+
+def _init_layer(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    n = cfg.rwkv_head_size
+    h = d // n
+    ks = jax.random.split(key, 16)
+    p = {
+        "ln_tm": common.init_norm(ks[0], d, cfg, dtype),
+        "ln_cm": common.init_norm(ks[1], d, cfg, dtype),
+        # token-shift baselines
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        "mu": jnp.full((len(_GATES), d), 0.5, dtype),
+        # DDLerp low-rank correction (shared A, per-gate B)
+        "ddl_a": common.dense_init(ks[2], (d, _DDLERP_RANK * len(_GATES)),
+                                   dtype),
+        "ddl_b": common.dense_init(
+            ks[3], (len(_GATES), _DDLERP_RANK, d), dtype),
+        # data-dependent decay
+        "w0": jnp.full((d,), -0.6, dtype),
+        "wd1": common.dense_init(ks[4], (d, _DECAY_RANK), dtype),
+        "wd2": common.dense_init(ks[5], (_DECAY_RANK, d), dtype),
+        "u": common.dense_init(ks[6], (h, n), dtype, scale=0.5),
+        "wr": common.dense_init(ks[7], (d, d), dtype),
+        "wk": common.dense_init(ks[8], (d, d), dtype),
+        "wv": common.dense_init(ks[9], (d, d), dtype),
+        "wg": common.dense_init(ks[10], (d, d), dtype),
+        "wo": common.dense_init(ks[11], (d, d), dtype),
+        "gn_scale": jnp.ones((d,), dtype),
+        "gn_bias": jnp.zeros((d,), dtype),
+        # channel mix
+        "mu_ck": jnp.full((d,), 0.5, dtype),
+        "mu_cr": jnp.full((d,), 0.5, dtype),
+        "cm_k": common.dense_init(ks[12], (d, cfg.d_ff), dtype),
+        "cm_v": common.dense_init(ks[13], (cfg.d_ff, d), dtype),
+        "cm_r": common.dense_init(ks[14], (d, d), dtype),
+    }
+    return p
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(layer_keys)
+    return {
+        "embed": common.embed_init(ks[1], (cfg.vocab_size, cfg.d_model),
+                                   dtype),
+        "layers": layers,
+        "final_norm": common.init_norm(ks[2], cfg.d_model, cfg, dtype),
+        "unembed": common.dense_init(ks[3], (cfg.d_model, cfg.vocab_size),
+                                     dtype),
+    }
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    n = cfg.rwkv_head_size
+    h = d // n
+    L = cfg.n_layers
+    return {
+        "wkv": jnp.zeros((L, batch, h, n, n), jnp.float32),
+        "x_tm": jnp.zeros((L, batch, d), dtype),
+        "x_cm": jnp.zeros((L, batch, d), dtype),
+    }
+
+
+def _ddlerp(x, x_prev, lp):
+    """Data-dependent token-shift interpolation -> per-gate mixed inputs."""
+    xx = x_prev - x
+    xxx = x + xx * lp["mu_x"]
+    lora = jnp.tanh(xxx @ lp["ddl_a"])
+    lora = lora.reshape(*lora.shape[:-1], len(_GATES), _DDLERP_RANK)
+    delta = jnp.einsum("...gr,grd->...gd", lora, lp["ddl_b"])
+    mixed = x[..., None, :] + xx[..., None, :] * (lp["mu"] + delta)
+    return tuple(mixed[..., i, :] for i in range(len(_GATES)))
+
+
+def _time_mix_step(lp, cfg: ArchConfig, x, x_prev, S):
+    """One token of the WKV6 recurrence. x [B, D]; S [B, H, N, N]."""
+    d = cfg.d_model
+    n = cfg.rwkv_head_size
+    h = d // n
+    xr, xk, xv, xw, xg = _ddlerp(x, x_prev, lp)
+    r = (xr @ lp["wr"]).reshape(-1, h, n)
+    k = (xk @ lp["wk"]).reshape(-1, h, n)
+    v = (xv @ lp["wv"]).reshape(-1, h, n)
+    g = jax.nn.silu(xg @ lp["wg"])
+    # data-dependent decay (Finch): w in (0, 1) per channel
+    decay_in = xw @ lp["wd1"]
+    w = lp["w0"] + jnp.tanh(decay_in) @ lp["wd2"]
+    w = jnp.exp(-jnp.exp(w.astype(jnp.float32))).reshape(-1, h, n)
+
+    Sf = S.astype(jnp.float32)
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    kv = kf[..., :, None] * vf[..., None, :]          # [B,H,N,N]
+    y = jnp.einsum("bhi,bhij->bhj", rf,
+                   Sf + lp["u"].astype(jnp.float32)[None, :, :, None] * kv)
+    S_new = w[..., :, None] * Sf + kv
+    y = y.reshape(-1, d)
+    # per-head group norm
+    yg = y.reshape(-1, h, n)
+    mu = jnp.mean(yg, -1, keepdims=True)
+    var = jnp.var(yg, -1, keepdims=True)
+    yg = (yg - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yg.reshape(-1, d) * lp["gn_scale"] + lp["gn_bias"]
+    out = (y.astype(x.dtype) * g) @ lp["wo"]
+    return out, S_new
+
+
+def _channel_mix_step(lp, cfg: ArchConfig, x, x_prev):
+    xx = x_prev - x
+    xk = x + xx * lp["mu_ck"]
+    xr = x + xx * lp["mu_cr"]
+    kk = jax.nn.relu(xk @ lp["cm_k"])
+    kk = kk * kk
+    return jax.nn.sigmoid(xr @ lp["cm_r"]) * (kk @ lp["cm_v"])
+
+
+def _layer_seq(lp, cfg: ArchConfig, x, state_l):
+    """Full-sequence layer via scan over time. x [B, S, D]."""
+    B, S, D = x.shape
+
+    def step(carry, xt):
+        S_wkv, x_tm, x_cm = carry
+        h = common.apply_norm(xt, lp["ln_tm"], cfg)
+        tm_out, S_new = _time_mix_step(lp, cfg, h, x_tm, S_wkv)
+        y = xt + tm_out
+        h2 = common.apply_norm(y, lp["ln_cm"], cfg)
+        cm_out = _channel_mix_step(lp, cfg, h2, x_cm)
+        y = y + cm_out
+        return (S_new, h, h2), y
+
+    (S_wkv, x_tm, x_cm), ys = jax.lax.scan(
+        step, (state_l["wkv"], state_l["x_tm"], state_l["x_cm"]),
+        jnp.swapaxes(x, 0, 1))
+    new_state = {"wkv": S_wkv, "x_tm": x_tm, "x_cm": x_cm}
+    return jnp.swapaxes(ys, 0, 1), new_state
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def forward_train(params: dict, tokens: jax.Array, cfg: ArchConfig, **_
+                  ) -> tuple[jax.Array, jax.Array]:
+    B, S = tokens.shape
+    x = common.embed_tokens(tokens, params, cfg)
+    state = init_state(cfg, B, x.dtype)
+
+    def body(carry, xs):
+        lp, st = xs
+        y, _ = _layer_seq(lp, cfg, carry, st)
+        return y, None
+
+    x, _ = layer_scan(body, x, (params["layers"], state))
+    logits = common.unembed(x, params, cfg)
+    return logits, jnp.float32(0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "capacity",
+                                             "cache_dtype"))
+def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig, policy=None,
+            *, capacity=None, cache_dtype=None, **_):
+    """Returns (last-token logits, recurrent state). Policy is ignored —
+    the state is O(1); there is nothing to prune."""
+    B, S = tokens.shape
+    x = common.embed_tokens(tokens, params, cfg)
+    state = init_state(cfg, B, x.dtype)
+
+    def body(carry, xs):
+        lp, st = xs
+        y, new_st = _layer_seq(lp, cfg, carry, st)
+        return y, new_st
+
+    x, new_state = layer_scan(body, x, (params["layers"], state))
+    logits = common.unembed(x[:, -1], params, cfg)
+    return logits, new_state
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy"))
+def decode_step(params: dict, state: dict, token: jax.Array, cur_pos,
+                cfg: ArchConfig, policy=None, **_):
+    x = common.embed_tokens(token, params, cfg)   # [B, D]
+
+    def body(carry, xs):
+        lp, st = xs
+        h = common.apply_norm(carry, lp["ln_tm"], cfg)
+        tm_out, S_new = _time_mix_step(lp, cfg, h, st["x_tm"], st["wkv"])
+        y = carry + tm_out
+        h2 = common.apply_norm(y, lp["ln_cm"], cfg)
+        cm_out = _channel_mix_step(lp, cfg, h2, st["x_cm"])
+        y = y + cm_out
+        return y, {"wkv": S_new, "x_tm": h, "x_cm": h2}
+
+    x, new_state = layer_scan(body, x, (params["layers"], state))
+    logits = common.unembed(x, params, cfg)
+    return logits, new_state
+
+
+def init_decode_state(cfg: ArchConfig, policy, batch: int,
+                      dtype=jnp.float32) -> dict:
+    return init_state(cfg, batch, dtype)

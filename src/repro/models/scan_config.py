@@ -1,0 +1,43 @@
+"""Layer-scan unroll control.
+
+XLA's ``cost_analysis`` counts a ``while``-loop body ONCE, not × trip-count,
+so roofline numbers taken from a scanned-layer model undercount FLOPs/bytes
+by ~n_layers. The dry-run proof-of-lowering keeps the compact scan (fast
+compiles); roofline measurement runs set REPRO_UNROLL_LAYERS=1 so every
+layer scan is fully unrolled (scan with unroll=length → single iteration →
+costs counted exactly once each).
+
+Time-axis scans (RWKV6 / RG-LRU recurrences over 32k+ steps) are never
+unrolled; their roofline compute term is derived analytically instead
+(EXPERIMENTS.md §Roofline notes).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def unroll_layers() -> bool:
+    return os.environ.get("REPRO_UNROLL_LAYERS", "0") == "1"
+
+
+def layer_scan(body, init, xs, length: int | None = None):
+    """lax.scan over stacked layers, honouring the unroll flag."""
+    if unroll_layers():
+        return jax.lax.scan(body, init, xs, length=length,
+                            unroll=True)
+    return jax.lax.scan(body, init, xs, length=length)
+
+
+def remat_layers() -> bool:
+    """REPRO_REMAT=1 -> per-layer activation checkpointing in train paths.
+    Trades ~+33% layer FLOPs for O(L)->O(1) activation residency — the
+    §Perf fix for activation-memory-bound training (arctic train_4k)."""
+    return os.environ.get("REPRO_REMAT", "0") == "1"
+
+
+def maybe_remat(body):
+    if remat_layers():
+        return jax.checkpoint(body)
+    return body

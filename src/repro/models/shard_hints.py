@@ -1,0 +1,45 @@
+"""Optional intra-function sharding hints (env-gated §Perf variants).
+
+REPRO_PREFILL_SEQ_SHARD=1 — context-parallel prefill attention: Q and the
+attention output are sharded along the *sequence* axis on ``model`` while the
+(small, GQA) K/V are replicated across ``model``. This kills the pathology
+found in the qwen2.5-32b × prefill_32k baseline: with a ragged head count
+(40 heads / 16-way), GSPMD shards the QK contraction (head_dim) and
+all-reduces S×S score matrices (~2.9 TB/chip). Sequence-sharded scores are
+fully local.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def seq_shard_prefill() -> bool:
+    return os.environ.get("REPRO_PREFILL_SEQ_SHARD", "0") == "1"
+
+
+def hint(x, *spec):
+    """with_sharding_constraint that degrades to a no-op outside a mesh."""
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError, NameError):
+        return x
+
+
+def prefill_attention_hints(qh, kh, vh):
+    """qh [B,Hq,S,Dh]; kh/vh [B,Hkv,S,Dh]."""
+    if not seq_shard_prefill():
+        return qh, kh, vh
+    qh = hint(qh, "data", None, "model", None)
+    kh = hint(kh, "data", None, None, None)
+    vh = hint(vh, "data", None, None, None)
+    return qh, kh, vh
+
+
+def prefill_out_hint(attn_raw):
+    """attn_raw [B,Hq,S,Dh] — keep the sequence axis model-sharded."""
+    if not seq_shard_prefill():
+        return attn_raw
+    return hint(attn_raw, "data", None, "model", None)

@@ -1,0 +1,320 @@
+"""Generic decoder-only transformer (dense / GQA / MoE / local-global),
+built for ``lax.scan`` over stacked layer parameters so that 64-layer dry-run
+lowerings stay compact.
+
+Covers: command-r-35b (parallel block), qwen2.5-32b (qkv bias), gemma2-27b
+(alternating local/global + softcaps + sandwich norms), granite-20b (MQA),
+mixtral-8x7b (MoE + SWA), arctic-480b (MoE + dense residual), qwen2-vl-2b
+(M-RoPE + stub vision embeds, via models/vlm.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN, LOCAL_ATTN, ArchConfig
+from repro.core import cache as cache_lib
+from repro.core import sparsity as sparsity_lib
+from repro.core.policy import LETHE, PYRAMIDKV, PolicyConfig
+from repro.models import attention, common, moe
+from repro.models.scan_config import layer_scan, maybe_remat
+
+GLOBAL_WINDOW = 1 << 30  # sentinel: effectively unwindowed
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    p = {
+        "attn_norm": common.init_norm(ks[0], cfg.d_model, cfg, dtype),
+        "attn": attention.init_attention(ks[1], cfg, dtype),
+    }
+    if not cfg.parallel_block:
+        p["ffn_norm"] = common.init_norm(ks[2], cfg.d_model, cfg, dtype)
+    if cfg.sandwich_norm:
+        p["post_attn_norm"] = common.init_norm(ks[3], cfg.d_model, cfg, dtype)
+        p["post_ffn_norm"] = common.init_norm(ks[4], cfg.d_model, cfg, dtype)
+    if cfg.n_experts:
+        p["moe"] = moe.init_moe(ks[5], cfg, dtype)
+    else:
+        p["mlp"] = common.init_mlp(ks[5], cfg.d_model, cfg.d_ff, cfg, dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": common.embed_init(ks[1], (cfg.vocab_size, cfg.d_model),
+                                   dtype),
+        "layers": layers,
+        "final_norm": common.init_norm(ks[2], cfg.d_model, cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = common.dense_init(
+            ks[3], (cfg.d_model, cfg.vocab_size), dtype)
+    return params
+
+
+def layer_windows(cfg: ArchConfig) -> jax.Array:
+    """Per-layer attention window ([L] int32; GLOBAL_WINDOW = full)."""
+    w = []
+    for kind in cfg.layer_kinds:
+        if kind == LOCAL_ATTN or (kind == ATTN and cfg.sliding_window
+                                  and not cfg.local_global_period):
+            w.append(cfg.sliding_window)
+        elif kind == ATTN and cfg.local_global_period:
+            w.append(GLOBAL_WINDOW)
+        elif kind == ATTN:
+            w.append(GLOBAL_WINDOW)
+        else:
+            w.append(GLOBAL_WINDOW)
+    # gemma2: local layers get cfg.sliding_window
+    if cfg.local_global_period and cfg.sliding_window:
+        w = [cfg.sliding_window if k == LOCAL_ATTN else GLOBAL_WINDOW
+             for k in cfg.layer_kinds]
+    return jnp.asarray(w, jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Layer bodies
+# --------------------------------------------------------------------------
+
+def _ffn(h: jax.Array, lp: dict, cfg: ArchConfig) -> tuple[jax.Array, jax.Array]:
+    if cfg.n_experts:
+        return moe.apply_moe(h, lp["moe"], cfg)
+    return common.apply_mlp(h, lp["mlp"], cfg), jnp.float32(0.0)
+
+
+def _layer_full(x: jax.Array, lp: dict, cfg: ArchConfig, window,
+                positions, positions3) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence layer (train/prefill compute). Returns (x, moe_aux)."""
+    h = common.apply_norm(x, lp["attn_norm"], cfg)
+    attn_out = attention.attend_full(
+        h, lp["attn"], cfg, window=window, positions=positions,
+        positions3=positions3)
+    if cfg.parallel_block:
+        ffn_out, aux = _ffn(h, lp, cfg)
+        return x + attn_out + ffn_out, aux
+    if cfg.sandwich_norm:
+        attn_out = common.apply_norm(attn_out, lp["post_attn_norm"], cfg)
+    x = x + attn_out
+    h2 = common.apply_norm(x, lp["ffn_norm"], cfg)
+    ffn_out, aux = _ffn(h2, lp, cfg)
+    if cfg.sandwich_norm:
+        ffn_out = common.apply_norm(ffn_out, lp["post_ffn_norm"], cfg)
+    return x + ffn_out, aux
+
+
+# --------------------------------------------------------------------------
+# Train forward
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def forward_train(params: dict, tokens: jax.Array, cfg: ArchConfig, *,
+                  embeds: jax.Array | None = None,
+                  positions3: jax.Array | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """tokens [B, S] -> (logits [B, S, V], moe_aux_loss scalar)."""
+    x = common.embed_tokens(tokens, params, cfg)
+    if embeds is not None:  # VLM: prepend/replace with frontend embeds
+        x = embeds.astype(x.dtype)
+    windows = layer_windows(cfg)
+
+    @maybe_remat
+    def body(carry, xs):
+        lp, w = xs
+        y, aux = _layer_full(carry, lp, cfg, w, None, positions3)
+        return y, aux
+
+    x, auxs = layer_scan(body, x, (params["layers"], windows))
+    logits = common.unembed(x, params, cfg)
+    return logits, jnp.sum(auxs)
+
+
+# --------------------------------------------------------------------------
+# Prefill: full-seq compute + cache construction + Lethe spatial allocation
+# --------------------------------------------------------------------------
+
+def _init_budgets(cfg: ArchConfig, policy: PolicyConfig) -> jax.Array:
+    L = cfg.n_layers
+    nominal = min(policy.nominal_budget, policy.capacity)
+    if policy.kind == PYRAMIDKV:
+        sched = np.linspace(policy.pyramid_bottom_ratio,
+                            policy.pyramid_top_ratio, L)
+        sched = sched / sched.mean()
+        b = np.clip((sched * nominal).astype(np.int32),
+                    policy.sink_len + 2, int(policy.capacity * 15 / 16))
+        return jnp.asarray(b, jnp.int32)
+    return jnp.full((L,), nominal, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "capacity",
+                                             "cache_dtype"))
+def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
+            policy: PolicyConfig, *, capacity: int | None = None,
+            embeds: jax.Array | None = None,
+            positions3: jax.Array | None = None,
+            cache_dtype=jnp.float32
+            ) -> tuple[jax.Array, cache_lib.KVCache]:
+    """tokens [B, S] -> (last-token logits [B, V], initialised KVCache).
+
+    Runs full-sequence attention per layer, collects per-layer K/V +
+    observation-window RASR scores + Hoyer sparsity, fills the slotted cache,
+    performs Lethe's spatial budget allocation and one forced prune round.
+    """
+    B, S = tokens.shape[0], tokens.shape[1]
+    C = capacity or policy.capacity
+    x = common.embed_tokens(tokens, params, cfg)
+    if embeds is not None:
+        x = embeds.astype(x.dtype)
+    windows = layer_windows(cfg)
+
+    def body(carry, xs):
+        lp, w = xs
+        h = common.apply_norm(carry, lp["attn_norm"], cfg)
+        q, k, v = attention.project_qkv(h, lp["attn"], cfg)
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        q, k = attention._rope(q, k, positions, cfg, positions3)
+        qh = jnp.swapaxes(q, 1, 2)
+        kh = jnp.swapaxes(k, 1, 2)
+        vh = jnp.swapaxes(v, 1, 2)
+        from repro.kernels import ops
+        from repro.models import shard_hints
+        qh, kh, vh = shard_hints.prefill_attention_hints(qh, kh, vh)
+        attn_raw = ops.prefill_attention(
+            qh, kh, vh, causal=True, window=w,
+            softcap=cfg.attn_logit_softcap, scale=cfg.d_head ** -0.5)
+        attn_raw = shard_hints.prefill_out_hint(attn_raw)
+        attn_out = jnp.swapaxes(attn_raw, 1, 2).reshape(B, S, -1) \
+            @ lp["attn"]["wo"]
+        scores, spars = attention.prefill_stats(qh, kh, cfg, policy, window=w)
+
+        if cfg.parallel_block:
+            ffn_out, _ = _ffn(h, lp, cfg)
+            y = carry + attn_out + ffn_out
+        else:
+            if cfg.sandwich_norm:
+                attn_out = common.apply_norm(attn_out, lp["post_attn_norm"],
+                                             cfg)
+            y = carry + attn_out
+            h2 = common.apply_norm(y, lp["ffn_norm"], cfg)
+            ffn_out, _ = _ffn(h2, lp, cfg)
+            if cfg.sandwich_norm:
+                ffn_out = common.apply_norm(ffn_out, lp["post_ffn_norm"], cfg)
+            y = y + ffn_out
+        return y, (kh.astype(cache_dtype), vh.astype(cache_dtype), scores,
+                   spars)
+
+    x, (k_all, v_all, scores_all, spars_all) = layer_scan(
+        body, x, (params["layers"], windows))
+
+    logits = common.unembed(x[:, -1], params, cfg)
+
+    # ---- cache construction -------------------------------------------------
+    fill = jax.vmap(lambda k, v, s: cache_lib.fill_from_prefill(
+        k=k, v=v, scores=s, capacity=C))
+    k_c, v_c, pos_c, score_c, len_c = fill(k_all, v_all, scores_all)
+
+    if policy.kind == LETHE:
+        budgets = sparsity_lib.allocate_budgets(
+            spars_all, capacity=C,
+            nominal=min(policy.nominal_budget, C),
+            min_budget=max(policy.sink_len + policy.recent_len + 2,
+                           int(policy.min_budget_ratio
+                               * min(policy.nominal_budget, C))),
+            sink_len=policy.sink_len, recent_len=policy.recent_len)
+    else:
+        budgets = _init_budgets(cfg, policy)
+    cache = cache_lib.KVCache(
+        k=k_c, v=v_c, pos=pos_c, score=score_c, length=len_c,
+        budget=budgets, evict_at=jnp.minimum(budgets, C).astype(jnp.int32),
+        sparsity=spars_all)
+
+    if policy.prunes:
+        from repro.core import pruning
+        cur = jnp.asarray(S - 1, jnp.int32)
+        prune_l = jax.vmap(
+            lambda lay, w: pruning.prune_layer(lay, cur, policy=policy,
+                                               window=w, force=True))
+        cache = prune_l(cache, windows)
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# Decode step
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy"))
+def decode_step(params: dict, cache: cache_lib.KVCache, token: jax.Array,
+                cur_pos: jax.Array, cfg: ArchConfig, policy: PolicyConfig, *,
+                positions3: jax.Array | None = None
+                ) -> tuple[jax.Array, cache_lib.KVCache]:
+    """token [B] at position ``cur_pos`` -> (logits [B, V], cache')."""
+    x = common.embed_tokens(token, params, cfg)     # [B, D]
+    windows = layer_windows(cfg)
+
+    def body(carry, xs):
+        lp, lay, w = xs
+        h = common.apply_norm(carry, lp["attn_norm"], cfg)
+        attn_out, lay = attention.decode_attend(
+            h, lp["attn"], lay, cur_pos, cfg, policy, window=w,
+            positions3=positions3)
+        if cfg.parallel_block:
+            ffn_out, _ = _ffn(h, lp, cfg)
+            y = carry + attn_out + ffn_out
+        else:
+            if cfg.sandwich_norm:
+                attn_out = common.apply_norm(attn_out, lp["post_attn_norm"],
+                                             cfg)
+            y = carry + attn_out
+            h2 = common.apply_norm(y, lp["ffn_norm"], cfg)
+            ffn_out, _ = _ffn(h2, lp, cfg)
+            if cfg.sandwich_norm:
+                ffn_out = common.apply_norm(ffn_out, lp["post_ffn_norm"], cfg)
+            y = y + ffn_out
+        return y, lay
+
+    x, new_cache = layer_scan(body, x, (params["layers"], cache, windows))
+
+    # Temporal re-allocation of spatial budgets from the sparsity EMA.
+    if policy.kind == LETHE:
+        C = cache.capacity
+        budgets = sparsity_lib.allocate_budgets(
+            new_cache.sparsity, capacity=C,
+            nominal=min(policy.nominal_budget, C),
+            min_budget=max(policy.sink_len + policy.recent_len + 2,
+                           int(policy.min_budget_ratio
+                               * min(policy.nominal_budget, C))),
+            sink_len=policy.sink_len, recent_len=policy.recent_len)
+        new_cache = cache_lib.KVCache(
+            k=new_cache.k, v=new_cache.v, pos=new_cache.pos,
+            score=new_cache.score, length=new_cache.length,
+            budget=budgets,
+            evict_at=jnp.maximum(new_cache.evict_at, budgets),
+            sparsity=new_cache.sparsity)
+
+    logits = common.unembed(x, params, cfg)
+    return logits, new_cache
+
+
+def init_decode_state(cfg: ArchConfig, policy: PolicyConfig, batch: int,
+                      dtype=jnp.float32) -> cache_lib.KVCache:
+    cache = cache_lib.init_cache(
+        n_layers=cfg.n_layers, batch=batch, n_kv_heads=cfg.n_kv_heads,
+        capacity=policy.capacity, d_head=cfg.d_head, policy=policy,
+        dtype=dtype)
+    budgets = _init_budgets(cfg, policy)
+    return cache_lib.KVCache(
+        k=cache.k, v=cache.v, pos=cache.pos, score=cache.score,
+        length=cache.length, budget=budgets,
+        evict_at=jnp.minimum(budgets, policy.capacity).astype(jnp.int32),
+        sparsity=cache.sparsity)

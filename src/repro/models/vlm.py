@@ -1,0 +1,96 @@
+"""Qwen2-VL text backbone with M-RoPE and a stubbed vision frontend
+[arXiv:2409.12191].
+
+The ViT/projector is a STUB per the assignment: callers provide precomputed
+patch embeddings [B, S_img, D]. This module builds the interleaved
+(image-patches ++ text-tokens) input embedding and the three M-RoPE position
+streams (temporal/height/width: image patches get 2-D grid positions at a
+fixed timestamp; text tokens advance all three streams together), then
+delegates to the generic transformer — decode inherits the full Lethe
+machinery, so pruning operates over the *mixed* image+text cache.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import PolicyConfig
+from repro.models import common, transformer
+
+
+init_params = transformer.init_params
+init_decode_state = transformer.init_decode_state
+
+
+def mrope_positions(B: int, s_img: int, s_text: int) -> jax.Array:
+    """[3, B, S] position streams. Image patches: t=0, (h, w) on a near-
+    square grid. Text: all three streams equal to the *sequence index* (so a
+    decode step at sequence position p uses stream position p without needing
+    to know the image extent — a simplification of Qwen2-VL's max(grid)+1
+    start that keeps prefill and decode trivially consistent)."""
+    if s_img:
+        gw = max(1, int(math.sqrt(s_img)))
+        idx = jnp.arange(s_img)
+        img_t = jnp.zeros((s_img,), jnp.int32)
+        img_h = (idx // gw).astype(jnp.int32)
+        img_w = (idx % gw).astype(jnp.int32)
+    else:
+        img_t = img_h = img_w = jnp.zeros((0,), jnp.int32)
+    text = jnp.arange(s_text, dtype=jnp.int32) + s_img
+    t = jnp.concatenate([img_t, text])
+    h = jnp.concatenate([img_h, text])
+    w = jnp.concatenate([img_w, text])
+    pos3 = jnp.stack([t, h, w])                      # [3, S]
+    return jnp.broadcast_to(pos3[:, None, :], (3, B, s_img + s_text))
+
+
+def build_inputs(params: dict, tokens: jax.Array, cfg: ArchConfig,
+                 img_embeds: jax.Array | None = None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """-> (embeds [B, S_total, D], positions3 [3, B, S_total])."""
+    B = tokens.shape[0]
+    text = common.embed_tokens(tokens, params, cfg)
+    if img_embeds is not None:
+        x = jnp.concatenate([img_embeds.astype(text.dtype), text], axis=1)
+        s_img = img_embeds.shape[1]
+    else:
+        x = text
+        s_img = 0
+    pos3 = mrope_positions(B, s_img, tokens.shape[1])
+    return x, pos3
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def forward_train(params, tokens, cfg: ArchConfig, *,
+                  img_embeds: jax.Array | None = None, **_):
+    x, pos3 = build_inputs(params, tokens, cfg, img_embeds)
+    return transformer.forward_train(params, tokens, cfg, embeds=x,
+                                     positions3=pos3)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "capacity",
+                                             "cache_dtype"))
+def prefill(params, tokens, cfg: ArchConfig, policy: PolicyConfig, *,
+            img_embeds: jax.Array | None = None, capacity=None,
+            cache_dtype=jnp.float32, **_):
+    x, pos3 = build_inputs(params, tokens, cfg, img_embeds)
+    # transformer.prefill keys its shapes off `tokens`; pass a dummy token
+    # array covering the full (img+text) sequence.
+    full_tokens = jnp.zeros((tokens.shape[0], x.shape[1]), jnp.int32)
+    return transformer.prefill(params, full_tokens, cfg, policy,
+                               capacity=capacity, embeds=x, positions3=pos3,
+                               cache_dtype=cache_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy"))
+def decode_step(params, cache, token, cur_pos, cfg: ArchConfig,
+                policy: PolicyConfig, **_):
+    B = token.shape[0]
+    cur = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (B,))
+    pos3 = jnp.broadcast_to(cur[None], (3, B))  # text: streams move together
+    return transformer.decode_step(params, cache, token, cur_pos, cfg,
+                                   policy, positions3=pos3)

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, init, update, schedule
+
+__all__ = ["AdamWConfig", "AdamWState", "init", "update", "schedule"]

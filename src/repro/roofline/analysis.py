@@ -1,0 +1,123 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × mesh), TPU v5e constants:
+
+  compute    = HLO_FLOPs        / (chips × 197 TF/s bf16)
+  memory     = HLO_bytes        / (chips × 819 GB/s HBM)
+  collective = collective_bytes / (chips × 50 GB/s/link ICI)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``. collective_bytes
+is parsed out of the compiled HLO text: operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[4,128,1024]{2,1,0} all-gather(...)
+# result may be tuple-shaped: (f32[..], u32[..]) all-reduce-start(...)
+_OP_RE = re.compile(
+    r"^%?[\w.\-]+\s*=\s*(.+?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_TUPLE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op, by kind.
+
+    ``-done`` ops are skipped (their ``-start`` counterpart already counted);
+    plain ops and ``-start`` ops count once each.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["total"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _OP_RE.match(stripped)
+        if not m:
+            continue
+        if "-done(" in stripped:
+            continue
+        shapes_str, kind = m.group(1), m.group(2)
+        total = sum(_shape_bytes(d, s)
+                    for d, s in _TUPLE_RE.findall(shapes_str))
+        out[kind] += total
+        out["total"] += total
+    return out
+
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    flops_ratio: float  # MODEL_FLOPS / HLO_FLOPs ("useful compute" fraction)
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "flops_ratio": self.flops_ratio,
+        }
+
+
+def roofline(flops: float, bytes_accessed: float, coll_bytes: float,
+             n_chips: int, *, model_flops: float = 0.0) -> RooflineTerms:
+    """``flops``/``bytes_accessed``/``coll_bytes`` are PER-DEVICE quantities
+    (XLA's cost_analysis describes the per-partition SPMD program), so each
+    term divides by a single chip's rate — algebraically identical to
+    global_quantity / (chips × rate). ``model_flops`` is global and is
+    normalised by n_chips for the useful-compute ratio."""
+    compute = flops / PEAK_FLOPS
+    memory = bytes_accessed / HBM_BW
+    collective = coll_bytes / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    dominant = max(terms, key=terms.get)
+    per_dev_model = model_flops / max(n_chips, 1)
+    ratio = (per_dev_model / flops) if flops > 0 else 0.0
+    return RooflineTerms(
+        compute_s=compute, memory_s=memory, collective_s=collective,
+        dominant=dominant, model_flops=model_flops, flops_ratio=ratio)
+
+
+def model_flops_for(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference forward), with
+    N = active params (MoE counts routed experts only)."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n * tokens

@@ -1,0 +1,97 @@
+"""Roofline report generator: reads dry-run JSONL records and emits the
+EXPERIMENTS.md §Roofline table.
+
+Usage:
+  PYTHONPATH=src python -m repro.roofline.report \
+      experiments/dryrun_pod.jsonl [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_arch, get_shape
+from repro.roofline import analysis
+
+
+def load(path: str) -> list[dict]:
+    return [json.loads(l) for l in open(path)]
+
+
+def enrich(rec: dict) -> dict | None:
+    if not rec.get("ok"):
+        return None
+    cfg = get_arch(rec["arch"])
+    shape = get_shape(rec["shape"])
+    mf = analysis.model_flops_for(cfg, shape, rec["kind"])
+    terms = analysis.roofline(
+        rec["flops"], rec["bytes_accessed"],
+        rec["collective_bytes"]["total"], rec["n_chips"], model_flops=mf)
+    out = dict(rec)
+    out["roofline"] = terms.as_dict()
+    return out
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def _advice(rec: dict) -> str:
+    dom = rec["roofline"]["dominant"]
+    kind = rec["kind"]
+    if dom == "memory":
+        if kind == "decode":
+            return ("cache-bandwidth bound: shrink live cache (lower Lethe "
+                    "capacity) or quantize KV to int8")
+        return "activation traffic: fuse/remat or larger per-chip tiles"
+    if dom == "collective":
+        return ("resharding traffic: align layer in/out shardings to kill "
+                "all-gathers")
+    if kind == "decode":
+        return "compute-bound decode: batch is large enough to feed the MXU"
+    return "compute-bound: near roofline, watch flops_ratio for remat waste"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+
+    rows = []
+    for p in args.paths:
+        for rec in load(p):
+            e = enrich(rec)
+            if e:
+                rows.append(e)
+            elif rec.get("skipped"):
+                rows.append(rec)
+
+    if args.md:
+        print("| arch | shape | mesh | policy | compute | memory | "
+              "collective | dominant | MODEL_FLOPS/HLO | bottleneck note |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("skipped"):
+            if args.md:
+                print(f"| {r['arch']} | {r['shape']} | — | {r['policy']} | "
+                      f"— | — | — | — | — | SKIP: {r['reason'][:60]} |")
+            continue
+        t = r["roofline"]
+        if args.md:
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"{r['policy']} | {_fmt_s(t['compute_s'])} | "
+                  f"{_fmt_s(t['memory_s'])} | {_fmt_s(t['collective_s'])} | "
+                  f"**{t['dominant']}** | {t['flops_ratio']:.2f} | "
+                  f"{_advice(r)} |")
+        else:
+            print(f"{r['arch']:20s} {r['shape']:12s} {r['mesh']:8s} "
+                  f"{r['policy']:7s} c={t['compute_s']:.2e} "
+                  f"m={t['memory_s']:.2e} x={t['collective_s']:.2e} "
+                  f"dom={t['dominant']:10s} ratio={t['flops_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

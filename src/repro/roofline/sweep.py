@@ -1,0 +1,108 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["REPRO_UNROLL_LAYERS"] = "1"
+
+"""Roofline measurement sweep with exact linear-in-L extrapolation.
+
+XLA's cost_analysis counts a lax.scan body once, so the proof-of-lowering
+sweep (launch/dryrun --all) undercounts per-layer costs. Fully unrolling the
+production layer counts is exact but prohibitively slow to compile on one CPU
+core. Instead this sweep lowers each case UNROLLED at two small layer counts
+L1 < L2 (multiples of the arch's block pattern) and extrapolates to the full
+L. Because all layers are structurally identical, every cost component is
+either constant (embed/unembed/top-level) or exactly linear in L, so the
+two-point fit  cost(L) = a + b·L  is exact, not approximate. (Time-axis
+recurrences — RWKV6/RG-LRU scans over sequence — remain loops and are
+documented analytically in EXPERIMENTS.md.)
+
+Usage:
+  PYTHONPATH=src python -m repro.roofline.sweep --out experiments/roofline_pod.jsonl
+"""
+import argparse
+import json
+import traceback
+
+from repro.configs import SHAPES, get_arch, get_shape, list_archs
+from repro.kernels import ops as kernel_ops
+from repro.launch import specs
+from repro.launch.dryrun import lower_case
+from repro.launch.mesh import make_production_mesh
+
+_EXTRAP_KEYS = ("flops", "bytes_accessed")
+
+
+def _pattern_len(cfg) -> int:
+    return max(1, len(cfg.block_pattern) or cfg.local_global_period or 1)
+
+
+def _extrapolate(r1: dict, r2: dict, L1: int, L2: int, L: int) -> dict:
+    out = dict(r2)
+    for k in _EXTRAP_KEYS:
+        b = (r2[k] - r1[k]) / (L2 - L1)
+        a = r1[k] - b * L1
+        out[k] = a + b * L
+    coll = {}
+    for k in r2["collective_bytes"]:
+        b = (r2["collective_bytes"][k] - r1["collective_bytes"][k]) / (L2 - L1)
+        a = r1["collective_bytes"][k] - b * L1
+        coll[k] = a + b * L
+    out["collective_bytes"] = coll
+    mem = {}
+    for k in r2["mem"]:
+        b = (r2["mem"][k] - r1["mem"][k]) / (L2 - L1)
+        a = r1["mem"][k] - b * L1
+        mem[k] = a + b * L
+    out["mem"] = mem
+    out["layers_used"] = L
+    out["extrapolated_from"] = [L1, L2]
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--policy", default="lethe")
+    ap.add_argument("--multipod", action="store_true")
+    args = ap.parse_args()
+
+    kernel_ops.set_default_impl("ref")
+    mesh = make_production_mesh(multi_pod=args.multipod)
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    for arch in archs:
+        cfg = get_arch(arch)
+        pat = _pattern_len(cfg)
+        L1, L2 = pat, 2 * pat
+        for shape_name in shapes:
+            shape = get_shape(shape_name)
+            case = specs.case_for(cfg, shape, args.policy)
+            if case.skip_reason:
+                rec = {"arch": arch, "shape": shape_name,
+                       "policy": args.policy, "ok": False, "skipped": True,
+                       "reason": case.skip_reason}
+            else:
+                try:
+                    r1 = lower_case(case, mesh, layers_override=L1)
+                    r2 = lower_case(case, mesh, layers_override=L2)
+                    rec = _extrapolate(r1, r2, L1, L2, cfg.n_layers)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape_name,
+                           "policy": args.policy, "ok": False,
+                           "skipped": False,
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-1500:]}
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+            status = ("OK" if rec.get("ok")
+                      else ("SKIP" if rec.get("skipped") else "FAIL"))
+            print(f"[{status}] {arch} × {shape_name} "
+                  + (f"flops={rec.get('flops', 0):.3e}" if rec.get("ok")
+                     else rec.get("reason", rec.get("error", ""))[:120]),
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Serving engine: lockstep batched prefill + decode with Lethe cache
+management.
+
+Two decode drivers:
+  * ``generate``      — Python-stepped loop (per-step stats: cache occupancy,
+                        prune activity, memory) used by benchmarks/examples.
+  * ``generate_scan`` — whole decode under one ``lax.scan`` (single XLA
+                        program; the throughput-measurement path and the
+                        shape that ``serve_step`` dry-runs lower).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as cache_lib
+from repro.core.policy import PolicyConfig
+from repro.models.api import ModelAPI
+
+
+def _sample(logits: jax.Array, key, temperature: float) -> jax.Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def _cache_stats(state) -> dict:
+    """Occupancy/memory stats for any model state containing a KVCache."""
+    caches = [x for x in jax.tree.leaves(
+        state, is_leaf=lambda t: isinstance(t, cache_lib.KVCache))
+        if isinstance(x, cache_lib.KVCache)]
+    if not caches:
+        leaves = jax.tree.leaves(state)
+        return {"cache_bytes": sum(x.size * x.dtype.itemsize
+                                   for x in leaves),
+                "live_tokens": 0, "capacity_tokens": 0}
+    total_bytes = sum(c.memory_bytes() for c in caches)
+    live = sum(int(np.asarray(jnp.sum(c.length))) for c in caches)
+    cap = sum(c.k.shape[0] * c.k.shape[1] * c.capacity for c in caches)
+    return {"cache_bytes": total_bytes, "live_tokens": live,
+            "capacity_tokens": cap}
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray                 # [B, N]
+    prefill_seconds: float
+    decode_seconds: float
+    tokens_per_second: float
+    steps: int
+    cache_bytes: int
+    live_token_trace: list = field(default_factory=list)
+    logits_trace: Any = None
+
+
+class Engine:
+    """Batched serving over one model + one policy."""
+
+    def __init__(self, model: ModelAPI, params, policy: PolicyConfig,
+                 cache_dtype=jnp.float32):
+        self.model = model
+        self.params = params
+        self.policy = policy
+        self.cache_dtype = cache_dtype
+
+    def prefill(self, batch: dict):
+        return self.model.prefill(self.params, batch, self.policy,
+                                  cache_dtype=self.cache_dtype)
+
+    def generate(self, batch: dict, max_new_tokens: int, *,
+                 temperature: float = 0.0, seed: int = 0,
+                 trace_live: bool = False,
+                 collect_logits: bool = False) -> GenerationResult:
+        B, S = batch["tokens"].shape
+        t0 = time.perf_counter()
+        logits, state = self.prefill(batch)
+        logits.block_until_ready()
+        t1 = time.perf_counter()
+
+        key = jax.random.PRNGKey(seed)
+        tok = _sample(logits, key, temperature)
+        s_img = (batch.get("img_embeds").shape[1]
+                 if batch.get("img_embeds") is not None else 0)
+        out = [np.asarray(tok)]
+        logit_rows = [np.asarray(logits)] if collect_logits else None
+        live_trace = []
+        for t in range(max_new_tokens - 1):
+            cur = jnp.asarray(S + s_img + t, jnp.int32)
+            key, sub = jax.random.split(key)
+            logits, state = self.model.decode_step(
+                self.params, state, tok, cur, self.policy)
+            tok = _sample(logits, sub, temperature)
+            out.append(np.asarray(tok))
+            if collect_logits:
+                logit_rows.append(np.asarray(logits))
+            if trace_live:
+                live_trace.append(_cache_stats(state)["live_tokens"])
+        jax.block_until_ready(tok)
+        t2 = time.perf_counter()
+        stats = _cache_stats(state)
+        n = max_new_tokens
+        return GenerationResult(
+            tokens=np.stack(out, axis=1),
+            prefill_seconds=t1 - t0,
+            decode_seconds=t2 - t1,
+            tokens_per_second=B * n / max(t2 - t1, 1e-9),
+            steps=n,
+            cache_bytes=stats["cache_bytes"],
+            live_token_trace=live_trace,
+            logits_trace=(np.stack(logit_rows, axis=1)
+                          if collect_logits else None),
+        )
+
+    def generate_scan(self, batch: dict, max_new_tokens: int, *,
+                      temperature: float = 0.0, seed: int = 0
+                      ) -> GenerationResult:
+        """Whole decode inside one jitted lax.scan (throughput path)."""
+        B, S = batch["tokens"].shape
+        s_img = (batch.get("img_embeds").shape[1]
+                 if batch.get("img_embeds") is not None else 0)
+        t0 = time.perf_counter()
+        logits, state = self.prefill(batch)
+        logits.block_until_ready()
+        t1 = time.perf_counter()
+
+        model, params, policy = self.model, self.params, self.policy
+
+        def step(carry, t):
+            state, tok, key = carry
+            key, sub = jax.random.split(key)
+            logits, state = model.module.decode_step(
+                params, state, tok, S + s_img + t, model.cfg, policy)
+            nxt = _sample(logits, sub, temperature)
+            return (state, nxt, key), nxt
+
+        tok0 = _sample(logits, jax.random.PRNGKey(seed), temperature)
+
+        @jax.jit
+        def run(state, tok0, key):
+            (state, _, _), toks = jax.lax.scan(
+                step, (state, tok0, key),
+                jnp.arange(max_new_tokens - 1, dtype=jnp.int32))
+            return state, toks
+
+        state, toks = run(state, tok0, jax.random.PRNGKey(seed + 1))
+        jax.block_until_ready(toks)
+        t2 = time.perf_counter()
+        tokens = np.concatenate(
+            [np.asarray(tok0)[:, None], np.asarray(toks).T], axis=1)
+        stats = _cache_stats(state)
+        return GenerationResult(
+            tokens=tokens, prefill_seconds=t1 - t0, decode_seconds=t2 - t1,
+            tokens_per_second=B * max_new_tokens / max(t2 - t1, 1e-9),
+            steps=max_new_tokens, cache_bytes=stats["cache_bytes"])

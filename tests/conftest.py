@@ -1,0 +1,9 @@
+import os
+
+# Tests run single-device CPU (the dry-run's 512 fake devices are set ONLY
+# inside launch/dryrun.py, which tests exercise via subprocess).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

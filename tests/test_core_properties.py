@@ -1,0 +1,221 @@
+"""Property-based tests (hypothesis) on the Lethe core invariants."""
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import cache as cache_lib
+from repro.core import pruning, sparsity
+from repro.core.policy import make_policy
+
+SET = settings(max_examples=40, deadline=None)
+
+
+# --------------------------------------------------------------------------
+# Hoyer sparsity (Eq. 1)
+# --------------------------------------------------------------------------
+
+@SET
+@given(hnp.arrays(np.float32, st.integers(2, 64),
+                  elements=st.floats(0, 100, width=32)))
+def test_hoyer_bounds(a):
+    s = float(sparsity.hoyer_sparsity(jnp.asarray(a)))
+    assert 0.0 <= s <= 1.0
+
+
+@SET
+@given(hnp.arrays(np.float32, st.integers(2, 64),
+                  elements=st.floats(0.015625, 100, width=32)),
+       st.floats(0.125, 50))
+def test_hoyer_scale_invariance(a, c):
+    s1 = float(sparsity.hoyer_sparsity(jnp.asarray(a)))
+    s2 = float(sparsity.hoyer_sparsity(jnp.asarray(a * np.float32(c))))
+    assert abs(s1 - s2) < 1e-3
+
+
+def test_hoyer_extremes():
+    onehot = jnp.zeros(32).at[3].set(5.0)
+    uniform = jnp.full(32, 0.25)
+    assert float(sparsity.hoyer_sparsity(onehot)) > 0.999
+    assert float(sparsity.hoyer_sparsity(uniform)) < 1e-6
+
+
+# --------------------------------------------------------------------------
+# Budget allocator
+# --------------------------------------------------------------------------
+
+@SET
+@given(hnp.arrays(np.float32, st.integers(2, 32),
+                  elements=st.floats(0, 1, width=32)))
+def test_budget_allocation_conserves_and_bounds(spars):
+    cap, nominal, minb = 256, 128, 16
+    b = sparsity.allocate_budgets(jnp.asarray(spars), capacity=cap,
+                                  nominal=nominal, min_budget=minb,
+                                  sink_len=4, recent_len=8)
+    b = np.asarray(b)
+    assert (b >= min(minb, 4 + 8 + 1)).all()
+    assert (b <= cap).all()
+    # total within 20% of the uniform-nominal total (clipping slack aside)
+    assert abs(int(b.sum()) - len(spars) * nominal) <= 0.2 * len(
+        spars) * nominal + cap
+
+
+def test_budget_allocator_gives_denser_layers_more():
+    spars = jnp.asarray([0.1, 0.9, 0.5])
+    b = np.asarray(sparsity.allocate_budgets(
+        spars, capacity=512, nominal=128, min_budget=8, sink_len=2,
+        recent_len=4))
+    assert b[0] > b[2] > b[1]
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1 breakpoint
+# --------------------------------------------------------------------------
+
+@SET
+@given(st.integers(8, 64), st.floats(1.5, 100.0), st.integers(2, 8))
+def test_breakpoint_consistency(n, tau, d_seg):
+    rng = np.random.default_rng(n)
+    scores = np.sort(rng.exponential(1.0, n).astype(np.float32))[::-1].copy()
+    full = np.full(128, -np.inf, np.float32)
+    full[:n] = scores
+    bp, salient = pruning.algorithm1_breakpoint(
+        jnp.asarray(full), jnp.int32(n), n_segments=d_seg, tau=tau)
+    bp = int(bp)
+    sal = np.asarray(salient)
+    if bp >= 0:
+        # salient = top-bp by score; ratio at the breakpoint must exceed τ
+        assert sal.sum() == bp
+        assert scores[0] / max(scores[min(bp, n - 1)], 1e-9) > tau or \
+            scores[min(bp, n - 1)] <= 0
+    else:
+        assert sal.sum() == 0
+        # no cut-point ratio may exceed τ
+        cuts = [max(1, (n * d) // d_seg) for d in range(1, d_seg)]
+        for c in cuts:
+            assert scores[0] / max(scores[c], 1e-9) <= tau + 1e-3
+
+
+def test_monotone_tau_keeps_more():
+    """Larger sparse_ratio (τ) must never retain fewer tokens (Table 6)."""
+    n = 64
+    rng = np.random.default_rng(0)
+    scores = np.sort(rng.exponential(1.0, n).astype(np.float32))[::-1].copy()
+    full = jnp.asarray(np.pad(scores, (0, 64), constant_values=-np.inf))
+    kept = []
+    for tau in [1.5, 3.0, 10.0, 100.0]:
+        bp, salient = pruning.algorithm1_breakpoint(
+            full, jnp.int32(n), n_segments=8, tau=tau)
+        kept.append(int(np.asarray(salient).sum()) if int(bp) >= 0 else n)
+    assert kept == sorted(kept)
+
+
+# --------------------------------------------------------------------------
+# Compaction / pruning invariants
+# --------------------------------------------------------------------------
+
+def _mk_layer(B=2, Hkv=2, C=64, Dh=8, n_valid=40, seed=0):
+    pol = make_policy("lethe", capacity=C, sink_len=2)
+    c = cache_lib.init_cache(n_layers=1, batch=B, n_kv_heads=Hkv, capacity=C,
+                             d_head=Dh, policy=pol, dtype=jnp.float32)
+    lay = c.layer(0)
+    key = jax.random.PRNGKey(seed)
+    for t in range(n_valid):
+        kn = jax.random.normal(jax.random.fold_in(key, t), (B, Hkv, Dh))
+        lay = cache_lib.append_token(lay, kn, kn, t, 1.0)
+    return lay, pol
+
+
+@SET
+@given(st.integers(10, 60), st.floats(1.2, 20.0), st.integers(1, 4))
+def test_prune_invariants(n_valid, tau, seed):
+    lay, _ = _mk_layer(n_valid=n_valid, seed=seed)
+    pol = make_policy("lethe", capacity=64, sink_len=2, sparse_ratio=tau)
+    rng = np.random.default_rng(seed)
+    sc = jnp.asarray(rng.exponential(1.0, (2, 64)).astype(np.float32))
+    sc = jnp.where(lay.pos >= 0, sc, 0.0)
+    lay = cache_lib.KVCache(lay.k, lay.v, lay.pos, sc, lay.length,
+                            lay.budget, lay.evict_at, lay.sparsity)
+    cur = jnp.int32(n_valid - 1)
+    out = pruning.prune_layer(lay, cur, policy=pol, force=True)
+    pos = np.asarray(out.pos)
+    length = np.asarray(out.length)
+    for b in range(pos.shape[0]):
+        live = pos[b][pos[b] >= 0]
+        # occupancy bookkeeping
+        assert len(live) == length[b]
+        # packed front, increasing positions
+        assert (pos[b][:length[b]] >= 0).all()
+        assert (pos[b][length[b]:] == -1).all()
+        assert (np.diff(live) > 0).all()
+        # sinks always kept
+        for s in range(min(pol.sink_len, n_valid)):
+            assert s in live
+        # most recent token always kept
+        assert (n_valid - 1) in live
+        # never exceeds the capacity backstop
+        assert length[b] <= 64 * 15 // 16
+
+
+@SET
+@given(st.sampled_from(["h2o", "streaming", "pyramidkv", "lethe"]))
+def test_all_policies_respect_protections(kind):
+    lay, _ = _mk_layer(n_valid=50, seed=7)
+    pol = make_policy(kind, capacity=64, sink_len=3, sparse_ratio=2.0,
+                      target_fill=0.4)
+    rng = np.random.default_rng(1)
+    sc = jnp.asarray(rng.exponential(1.0, (2, 64)).astype(np.float32))
+    sc = jnp.where(lay.pos >= 0, sc, 0.0)
+    lay = cache_lib.KVCache(lay.k, lay.v, lay.pos, sc, lay.length,
+                            lay.budget, lay.evict_at, lay.sparsity)
+    out = pruning.prune_layer(lay, jnp.int32(49), policy=pol, force=True)
+    pos = np.asarray(out.pos)
+    for b in range(2):
+        live = set(pos[b][pos[b] >= 0].tolist())
+        assert {0, 1, 2} <= live          # sinks
+        assert 49 in live                 # most recent
+
+
+def test_compaction_preserves_kv_alignment():
+    """After compaction, slot i's K/V must be the K/V originally written for
+    slot i's position."""
+    lay, pol = _mk_layer(B=1, Hkv=1, C=32, Dh=4, n_valid=20, seed=3)
+    # tag each position: k[...] = pos value
+    k_tagged = jnp.broadcast_to(
+        jnp.arange(32, dtype=jnp.float32)[None, None, :, None],
+        lay.k.shape)
+    k_tagged = jnp.where((lay.pos >= 0)[:, None, :, None], k_tagged, -1.0)
+    # overwrite tags with the position itself
+    tag = jnp.where(lay.pos >= 0, lay.pos.astype(jnp.float32), -1.0)
+    k_tagged = jnp.broadcast_to(tag[:, None, :, None], lay.k.shape)
+    lay = cache_lib.KVCache(k_tagged, k_tagged, lay.pos, lay.score,
+                            lay.length, lay.budget, lay.evict_at,
+                            lay.sparsity)
+    keep = (lay.pos % 3 == 0) & (lay.pos >= 0)
+    out = cache_lib.compact(lay, keep)
+    pos = np.asarray(out.pos[0])
+    kv = np.asarray(out.k[0, 0, :, 0])
+    for i, p in enumerate(pos):
+        if p >= 0:
+            assert kv[i] == p, (i, p, kv[i])
+
+
+# --------------------------------------------------------------------------
+# RASR (Eq. 5)
+# --------------------------------------------------------------------------
+
+@SET
+@given(st.floats(0.5, 1.0), st.integers(1, 20))
+def test_rasr_ema_math(gamma, steps):
+    from repro.core import rasr
+    lay, _ = _mk_layer(B=1, n_valid=10, seed=0)
+    expected = np.asarray(lay.score[0]).copy()
+    probsum = np.zeros((1, 64), np.float32)
+    probsum[0, :10] = 0.5
+    for _ in range(steps):
+        lay = rasr.update_scores(lay, jnp.asarray(probsum), gamma)
+        expected = gamma * expected + probsum[0]
+    expected[10:] = 0.0  # invalid slots zeroed
+    np.testing.assert_allclose(np.asarray(lay.score[0]), expected, rtol=1e-4)

@@ -1,0 +1,168 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle across
+shape/dtype sweeps, as required for every kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import (decode_attention_pallas,
+                                            make_decode_bias)
+from repro.kernels.flash_prefill import flash_prefill_pallas
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+DECODE_SHAPES = [
+    # B, Hq, Hkv, C, Dh, block_c
+    (1, 4, 4, 64, 32, 16),       # MHA
+    (2, 8, 2, 96, 32, 32),       # GQA, C not multiple of block
+    (2, 6, 1, 128, 64, 64),      # MQA
+    (1, 16, 8, 48, 16, 16),      # small C
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", DECODE_SHAPES)
+def test_decode_attention_matches_ref(shape, dtype):
+    B, Hq, Hkv, C, Dh, bc = shape
+    ks = jax.random.split(jax.random.PRNGKey(42), 4)
+    q = jax.random.normal(ks[0], (B, Hq, Dh), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, C, Dh), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, C, Dh), dtype)
+    pos = jnp.where(jax.random.uniform(ks[3], (B, C)) < 0.75,
+                    jnp.arange(C)[None], -1).astype(jnp.int32)
+    pos = pos.at[:, 0].set(0)  # ensure at least one valid slot
+    cur = jnp.int32(C + 3)
+
+    o_ref, ps_ref = ref.decode_attention_ref(q, k, v, pos, cur,
+                                             scale=Dh ** -0.5)
+    bias = make_decode_bias(pos, cur)
+    o_pl, ps_pl = decode_attention_pallas(q, k, v, bias, scale=Dh ** -0.5,
+                                          block_c=bc, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pl, np.float32),
+                               np.asarray(o_ref, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(ps_pl), np.asarray(ps_ref),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("window,softcap", [(None, None), (40, None),
+                                            (None, 30.0), (24, 50.0)])
+def test_decode_attention_masking_variants(window, softcap):
+    B, Hq, Hkv, C, Dh = 2, 8, 2, 80, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    q = jax.random.normal(ks[0], (B, Hq, Dh))
+    k = jax.random.normal(ks[1], (B, Hkv, C, Dh))
+    v = jax.random.normal(ks[2], (B, Hkv, C, Dh))
+    pos = jnp.broadcast_to(jnp.arange(C), (B, C)).astype(jnp.int32)
+    cur = jnp.int32(C - 1)
+    o_ref, ps_ref = ref.decode_attention_ref(
+        q, k, v, pos, cur, window=window, softcap=softcap, scale=Dh ** -0.5)
+    bias = make_decode_bias(pos, cur, window)
+    o_pl, ps_pl = decode_attention_pallas(
+        q, k, v, bias, scale=Dh ** -0.5, softcap=softcap, block_c=32,
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(ps_pl), np.asarray(ps_ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_decode_probsum_is_valid_distribution_mass():
+    """Σ_c probsum[b, c] must equal Hq (each head's row sums to 1)."""
+    B, Hq, Hkv, C, Dh = 2, 8, 4, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, Hq, Dh))
+    k = jax.random.normal(ks[1], (B, Hkv, C, Dh))
+    v = jax.random.normal(ks[2], (B, Hkv, C, Dh))
+    pos = jnp.broadcast_to(jnp.arange(C), (B, C)).astype(jnp.int32)
+    bias = make_decode_bias(pos, jnp.int32(C))
+    _, ps = decode_attention_pallas(q, k, v, bias, scale=Dh ** -0.5,
+                                    block_c=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.sum(ps, -1)),
+                               np.full((B,), Hq, np.float32), rtol=1e-5)
+
+
+PREFILL_SHAPES = [
+    # B, Hq, Hkv, S, T, Dh, bq, bk
+    (1, 4, 4, 64, 64, 32, 32, 32),
+    (2, 8, 2, 80, 80, 32, 16, 32),    # ragged block boundaries
+    (1, 6, 1, 128, 128, 64, 64, 64),  # MQA
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", PREFILL_SHAPES)
+def test_flash_prefill_matches_ref(shape, dtype):
+    B, Hq, Hkv, S, T, Dh, bq, bk = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, Dh), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, T, Dh), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, T, Dh), dtype)
+    o_ref, lse_ref = ref.prefill_attention_ref(q, k, v, causal=True,
+                                               scale=Dh ** -0.5)
+    o_pl, lse_pl = flash_prefill_pallas(q, k, v, scale=Dh ** -0.5,
+                                        block_q=bq, block_k=bk,
+                                        interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pl, np.float32),
+                               np.asarray(o_ref, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(lse_pl), np.asarray(lse_ref),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("window,softcap", [(24, None), (None, 50.0),
+                                            (16, 30.0)])
+def test_flash_prefill_window_softcap(window, softcap):
+    B, Hq, Hkv, S, Dh = 2, 4, 2, 96, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, Dh))
+    k = jax.random.normal(ks[1], (B, Hkv, S, Dh))
+    v = jax.random.normal(ks[2], (B, Hkv, S, Dh))
+    o_ref, _ = ref.prefill_attention_ref(q, k, v, causal=True, window=window,
+                                         softcap=softcap, scale=Dh ** -0.5)
+    o_pl, _ = flash_prefill_pallas(q, k, v, scale=Dh ** -0.5, window=window,
+                                   softcap=softcap, block_q=32, block_k=32,
+                                   interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_prefill_q_offset_chunked():
+    """Chunked prefill: two q-chunks with offsets == one full pass."""
+    B, Hq, Hkv, S, Dh = 1, 4, 2, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, Dh))
+    k = jax.random.normal(ks[1], (B, Hkv, S, Dh))
+    v = jax.random.normal(ks[2], (B, Hkv, S, Dh))
+    o_full, _ = ref.prefill_attention_ref(q, k, v, causal=True,
+                                          scale=Dh ** -0.5)
+    h = S // 2
+    o1, _ = flash_prefill_pallas(q[:, :, :h], k, v, scale=Dh ** -0.5,
+                                 block_q=16, block_k=16, q_offset=0,
+                                 interpret=True)
+    o2, _ = flash_prefill_pallas(q[:, :, h:], k, v, scale=Dh ** -0.5,
+                                 block_q=16, block_k=16, q_offset=h,
+                                 interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([o1, o2], axis=2)), np.asarray(o_full),
+        rtol=2e-5, atol=2e-5)
+
+
+def test_obs_colsums_match_full_probs():
+    B, Hq, Hkv, S, Dh, W = 1, 4, 2, 48, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    q = jax.random.normal(ks[0], (B, Hq, S, Dh))
+    k = jax.random.normal(ks[1], (B, Hkv, S, Dh))
+    colsums, probs = ref.obs_colsums_ref(q[:, :, -W:], k, win_start=S - W,
+                                         scale=Dh ** -0.5)
+    assert probs.shape == (B, Hq, W, S)
+    # each prob row is a distribution over the causal prefix
+    np.testing.assert_allclose(np.asarray(jnp.sum(probs, -1)), 1.0,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(jnp.sum(colsums, -1)),
+                               Hq * W, rtol=1e-5)

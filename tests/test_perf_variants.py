@@ -1,0 +1,131 @@
+"""The §Perf optimization switches must be *semantics-preserving*: every
+variant changes sharding/layout only, so outputs must match the baseline
+bit-for-bit (or to float tolerance) on a single device."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as cache_lib
+from repro.core.policy import make_policy
+from repro.kernels import ref
+
+
+def _mk_layer(seed=0, B=2, Hkv=2, C=32, Dh=8, n=20):
+    pol = make_policy("lethe", capacity=C)
+    c = cache_lib.init_cache(n_layers=1, batch=B, n_kv_heads=Hkv, capacity=C,
+                             d_head=Dh, policy=pol, dtype=jnp.float32)
+    lay = c.layer(0)
+    key = jax.random.PRNGKey(seed)
+    steps = []
+    for t in range(n):
+        kn = jax.random.normal(jax.random.fold_in(key, t), (B, Hkv, Dh))
+        steps.append(kn)
+    return lay, steps
+
+
+def test_onehot_append_equals_scatter_append(monkeypatch):
+    lay_a, steps = _mk_layer()
+    lay_b = jax.tree.map(jnp.copy, lay_a)
+    monkeypatch.setenv("REPRO_ONEHOT_APPEND", "1")
+    for t, kn in enumerate(steps):
+        lay_a = cache_lib.append_token(lay_a, kn, kn, t, 1.0)
+    monkeypatch.setenv("REPRO_ONEHOT_APPEND", "0")
+    for t, kn in enumerate(steps):
+        lay_b = cache_lib.append_token(lay_b, kn, kn, t, 1.0)
+    for name in ("k", "v", "pos", "score", "length"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(lay_a, name)), np.asarray(getattr(lay_b, name)),
+            err_msg=name)
+
+
+def test_onehot_append_at_capacity_clamps_like_scatter(monkeypatch):
+    lay_a, _ = _mk_layer(C=8, n=0)
+    lay_b = jax.tree.map(jnp.copy, lay_a)
+    key = jax.random.PRNGKey(1)
+    for t in range(12):  # overflow: 12 appends into 8 slots
+        kn = jax.random.normal(jax.random.fold_in(key, t), (2, 2, 8))
+        monkeypatch.setenv("REPRO_ONEHOT_APPEND", "1")
+        lay_a = cache_lib.append_token(lay_a, kn, kn, t, 1.0)
+        monkeypatch.setenv("REPRO_ONEHOT_APPEND", "0")
+        lay_b = cache_lib.append_token(lay_b, kn, kn, t, 1.0)
+    np.testing.assert_array_equal(np.asarray(lay_a.pos), np.asarray(lay_b.pos))
+    np.testing.assert_array_equal(np.asarray(lay_a.k), np.asarray(lay_b.k))
+
+
+def test_moe_dispatch_modes_numerically_equal(monkeypatch):
+    """Sharding constraints are no-ops on one device — all modes equal."""
+    import dataclasses
+    from repro.configs import get_arch
+    from repro.models import moe
+    cfg = get_arch("mixtral-8x7b").reduced()
+    p = moe.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 7, cfg.d_model))
+    outs = []
+    for mode in ("0", "1", "2"):
+        monkeypatch.setenv("REPRO_MOE_SHARD_DISPATCH", mode)
+        out, aux = moe.apply_moe(x, p, cfg)
+        outs.append(np.asarray(out))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-6)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-6)
+
+
+def test_prefill_seq_shard_hint_is_noop_single_device(monkeypatch):
+    from repro.configs import get_arch
+    from repro.models import transformer
+    from repro.core.policy import make_policy as mp
+    cfg = get_arch("qwen2.5-32b").reduced()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    pol = mp("lethe", capacity=16)
+    monkeypatch.setenv("REPRO_PREFILL_SEQ_SHARD", "0")
+    jax.clear_caches()
+    l0, _ = transformer.prefill(params, toks, cfg, pol)
+    monkeypatch.setenv("REPRO_PREFILL_SEQ_SHARD", "1")
+    jax.clear_caches()
+    l1, _ = transformer.prefill(params, toks, cfg, pol)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), rtol=1e-6)
+
+
+def test_chunked_prefill_ref_matches_full():
+    B, Hq, Hkv, S, Dh = 1, 4, 2, 72, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, Dh))
+    k = jax.random.normal(ks[1], (B, Hkv, S, Dh))
+    v = jax.random.normal(ks[2], (B, Hkv, S, Dh))
+    full, _ = ref.prefill_attention_ref(q, k, v, causal=True,
+                                        scale=Dh ** -0.5)
+    chunked = ref.prefill_attention_chunked_ref(q, k, v, chunk=16,
+                                                causal=True, scale=Dh ** -0.5)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_collective_parser_on_synthetic_hlo():
+    from repro.roofline import analysis
+    hlo = """
+  %all-gather.3 = bf16[4,128]{1,0} all-gather(%x), replica_groups={}
+  %ar = (f32[8,8]{1,0}, f32[2]{0}) all-reduce-start(%y, %z), channel_id=1
+  %ar.done = f32[8,8]{1,0} all-reduce-done(%ar)
+  %cp = u32[16]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %not_a_coll = f32[2,2]{1,0} add(%a, %b)
+"""
+    out = analysis.collective_bytes(hlo)
+    assert out["all-gather"] == 4 * 128 * 2
+    assert out["all-reduce"] == 8 * 8 * 4 + 2 * 4
+    assert out["collective-permute"] == 16 * 4
+    assert out["total"] == (4 * 128 * 2) + (8 * 8 * 4 + 2 * 4) + 16 * 4
+
+
+def test_roofline_terms_math():
+    from repro.roofline import analysis
+    t = analysis.roofline(197e12, 819e9, 50e9, 256, model_flops=197e12 * 256)
+    assert abs(t.compute_s - 1.0) < 1e-9
+    assert abs(t.memory_s - 1.0) < 1e-9
+    assert abs(t.collective_s - 1.0) < 1e-9
+    assert abs(t.flops_ratio - 1.0) < 1e-9

@@ -1,0 +1,93 @@
+"""Training substrate: loss decreases on structured synthetic data;
+optimizer/checkpoint roundtrips."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data import pipeline
+from repro.launch import steps
+from repro.models.api import build_model
+from repro.optim import adamw
+
+
+def test_loss_decreases_dense():
+    cfg = dataclasses.replace(
+        get_arch("qwen2.5-32b").reduced(), vocab_size=128, d_ff=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60)
+    train_step = jax.jit(steps.make_train_step(model, opt_cfg))
+    opt_state = adamw.init(params)
+    data = pipeline.lm_stream(pipeline.DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=32, batch_size=8, seed=0))
+    losses = []
+    for i, batch in zip(range(40), data):
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.8, losses[::8]
+    assert np.isfinite(losses).all()
+
+
+def test_loss_decreases_reasoning_task():
+    rcfg = pipeline.ReasoningConfig(n_values=32, n_steps=6, batch_size=8)
+    cfg = dataclasses.replace(get_arch("granite-20b").reduced(),
+                              vocab_size=rcfg.vocab_size)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=100)
+    train_step = jax.jit(steps.make_train_step(model, opt_cfg))
+    opt_state = adamw.init(params)
+    losses = []
+    for i in range(50):
+        batch = pipeline.reasoning_batch(rcfg, i)
+        batch = {"tokens": batch["tokens"],
+                 "loss_weights": batch["loss_weights"]}
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], (losses[0], losses[-1])
+
+
+def test_grad_clipping_and_schedule():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            grad_clip=1e-9)
+    p = {"w": jnp.ones((4, 4))}
+    st = adamw.init(p)
+    g = {"w": jnp.full((4, 4), 1e6)}
+    new_p, st2, m = adamw.update(g, st, p, cfg)
+    # clip makes the step tiny despite the huge gradient and lr
+    assert float(jnp.abs(new_p["w"] - p["w"]).max()) < 1.0
+    assert float(m["grad_norm"]) > 1e5
+    # warmup: lr at step 1 is lr/10
+    np.testing.assert_allclose(float(adamw.schedule(jnp.int32(1), cfg)), 0.1)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import ckpt
+    cfg = get_arch("mixtral-8x7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    path = str(tmp_path / "ck")
+    ckpt.save(path, params, step=7)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    restored = ckpt.restore(path, zeros)
+    ok = jax.tree.map(lambda a, b: bool((a == b).all()), params, restored)
+    assert all(jax.tree.leaves(ok))
+    assert ckpt.latest_step(path) == 7
+
+
+def test_data_pipeline_determinism():
+    from repro.data import pipeline as pl
+    c = pl.DataConfig(vocab_size=64, seq_len=16, batch_size=4, seed=3)
+    a = next(pl.lm_stream(c))["tokens"]
+    b = next(pl.lm_stream(c))["tokens"]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    r1 = pl.reasoning_batch(pl.ReasoningConfig(seed=5), 3)
+    r2 = pl.reasoning_batch(pl.ReasoningConfig(seed=5), 3)
+    np.testing.assert_array_equal(np.asarray(r1["tokens"]),
+                                  np.asarray(r2["tokens"]))
+    # answers actually follow the chain rule encoded in the tokens
+    toks = np.asarray(r1["tokens"])
+    assert (toks[:, -1] == np.asarray(r1["answer"])).all()
