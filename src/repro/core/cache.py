@@ -140,14 +140,30 @@ def append_token(layer: KVCache, k_new: jax.Array, v_new: jax.Array,
 
 def compact(layer: KVCache, keep: jax.Array) -> KVCache:
     """Evict all slots where ``keep`` [B, C] is False, packing survivors to
-    the front in increasing position order (static shapes throughout)."""
+    the front in increasing position order (static shapes throughout).
+
+    Sort-free: because valid slots are already packed in increasing ``pos``
+    order (the cache invariant — every writer appends at ``length`` or goes
+    through this function), packing survivors is a *stable partition* by
+    ``keep``, computed with two cumulative sums and a scatter instead of an
+    O(C log C) argsort. The prune round's only sort is the score ranking in
+    ``pruning.decide_row``.
+    """
     B, Hkv, C, Dh = layer.k.shape
-    INT_MAX = jnp.iinfo(jnp.int32).max
     live = keep & valid_mask(layer.pos)
-    # Sort key: kept slots by original position, evicted slots to the back.
-    sort_key = jnp.where(live, layer.pos, INT_MAX)          # [B, C]
-    order = jnp.argsort(sort_key, axis=-1)                  # [B, C]
     n_kept = jnp.sum(live, axis=-1).astype(jnp.int32)       # [B]
+    # Stable partition: kept slot i moves to (number of kept slots before i),
+    # dropped slot i moves to n_kept + (number of dropped slots before i).
+    kept_before = (jnp.cumsum(live, axis=-1, dtype=jnp.int32)
+                   - live.astype(jnp.int32))
+    drop_before = (jnp.cumsum(~live, axis=-1, dtype=jnp.int32)
+                   - (~live).astype(jnp.int32))
+    target = jnp.where(live, kept_before, n_kept[:, None] + drop_before)
+    # Invert the permutation: order[b, target[b, c]] = c, i.e. the gather
+    # index list equivalent to the old argsort-by-position.
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    src = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (B, C))
+    order = jnp.zeros((B, C), jnp.int32).at[rows, target].set(src)
 
     pos = jnp.take_along_axis(jnp.where(live, layer.pos, -1), order, axis=-1)
     score = jnp.take_along_axis(jnp.where(live, layer.score, 0.0), order,

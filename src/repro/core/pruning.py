@@ -2,13 +2,21 @@
 keep-rule/compaction machinery shared by Lethe and the re-implemented
 baselines (H2O, StreamingLLM, PyramidKV).
 
-Faithfulness note (see DESIGN.md): the breakpoint is the first segment
-cut-point where the score ratio v_top[0]/v_top[c] *exceeds* τ — the evident
-intent of Eq. 4/Algorithm 1 ("the first segment where attention drops
+Faithfulness note (see DESIGN.md §Faithfulness): the breakpoint is the first
+segment cut-point where the score ratio v_top[0]/v_top[c] *exceeds* τ — the
+evident intent of Eq. 4/Algorithm 1 ("the first segment where attention drops
 sharply"), under which a larger ``sparse_ratio`` retains more tokens,
 matching the paper's Table 6 ablation. If no cut ratio exceeds τ the layer
 is attention-dense, no breakpoint exists, and pruning is delayed by doubling
 L_evict (Algorithm 1 line 18).
+
+Single-sort prune round (DESIGN.md §Perf): one descending-score ``argsort``
+per row is computed in ``decide_row`` and threaded through every consumer —
+the Algorithm-1 breakpoint ranking, the heavy-hitter top-k, and the capacity
+backstop all derive their masks from that one order via cumulative-sum subset
+ranking, and ``cache.compact`` packs survivors with a sort-free stable
+partition. A prune round therefore performs exactly one O(C log C) sort per
+row instead of four.
 """
 from __future__ import annotations
 
@@ -29,20 +37,45 @@ class PruneDecision(NamedTuple):
     keep: jax.Array        # [B, C] bool
     breakpoint: jax.Array  # [B] int32; -1 = none found
     new_evict_at: jax.Array  # scalar int32
+    order: jax.Array       # [B, C] int32 — slot ids in descending-score order
+
+
+def _inverse_ranks(order: jax.Array) -> jax.Array:
+    """[C] int32: rank of each slot in the descending-score ``order``."""
+    C = order.shape[0]
+    return jnp.zeros((C,), jnp.int32).at[order].set(
+        jnp.arange(C, dtype=jnp.int32))
+
+
+def _subset_ranks(order: jax.Array, subset: jax.Array) -> jax.Array:
+    """Rank of each slot *within* ``subset`` under the descending-score
+    ``order`` (number of higher-scored subset slots). Slots outside the
+    subset get C. Replaces a per-subset argsort with two gathers + a cumsum.
+    """
+    C = order.shape[0]
+    ss = subset[order]                              # subset flags, score-desc
+    rank_sorted = jnp.cumsum(ss) - ss.astype(jnp.int32)   # exclusive cumsum
+    ranks = jnp.zeros((C,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+    return jnp.where(subset, ranks, C)
 
 
 def algorithm1_breakpoint(scores: jax.Array, length: jax.Array, *,
-                          n_segments: int, tau: float) -> tuple[jax.Array,
-                                                                jax.Array]:
+                          n_segments: int, tau: float,
+                          order: jax.Array | None = None
+                          ) -> tuple[jax.Array, jax.Array]:
     """Algorithm 1 lines 1–11 for one batch row.
 
     ``scores``: [C] RASR scores (invalid slots must be -inf).
     ``length``: scalar valid count K (traced).
+    ``order``: optional precomputed descending-score argsort of ``scores``
+    (the prune round's single sort); computed here when omitted.
     Returns (breakpoint, salient_mask): breakpoint = -1 if no sharp drop;
     salient_mask [C] marks the top-`breakpoint` scored slots.
     """
     C = scores.shape[0]
-    order = jnp.argsort(-scores)                    # descending
+    if order is None:
+        order = jnp.argsort(-scores)                # descending
     top_values = scores[order]                      # sorted desc
     K = jnp.maximum(length, 1)
     d = jnp.arange(1, n_segments, dtype=jnp.int32)  # 1..D-1
@@ -58,8 +91,7 @@ def algorithm1_breakpoint(scores: jax.Array, length: jax.Array, *,
     breakpoint = jnp.where(exists, cuts[first], -1).astype(jnp.int32)
 
     # rank of each slot in score-descending order
-    ranks = jnp.zeros((C,), jnp.int32).at[order].set(jnp.arange(C, dtype=jnp.int32))
-    salient = ranks < jnp.maximum(breakpoint, 0)
+    salient = _inverse_ranks(order) < jnp.maximum(breakpoint, 0)
     return breakpoint, salient
 
 
@@ -71,14 +103,6 @@ def _protected_mask(pos: jax.Array, cur_pos: jax.Array, *, sink_len: int,
     return sink | recent
 
 
-def _topk_mask(priority: jax.Array, n: jax.Array) -> jax.Array:
-    """[C] bool marking the ``n`` (traced) highest-priority slots."""
-    C = priority.shape[0]
-    order = jnp.argsort(-priority)
-    ranks = jnp.zeros((C,), jnp.int32).at[order].set(jnp.arange(C, dtype=jnp.int32))
-    return ranks < n
-
-
 def decide_row(scores: jax.Array, pos: jax.Array, length: jax.Array,
                cur_pos: jax.Array, *, policy: PolicyConfig,
                budget: jax.Array, evict_at: jax.Array,
@@ -88,6 +112,9 @@ def decide_row(scores: jax.Array, pos: jax.Array, length: jax.Array,
     ``scores``/``pos``: [C]; ``length``: scalar; ``budget``/``evict_at``:
     scalar traced; ``window``: optional sliding-attention window (slots whose
     position fell out of a local layer's window are dead for every policy).
+
+    Performs exactly ONE argsort over C; every ranking below is derived from
+    it (see module docstring).
     """
     C = scores.shape[0]
     valid = pos >= 0
@@ -104,6 +131,11 @@ def decide_row(scores: jax.Array, pos: jax.Array, length: jax.Array,
         valid_w = valid
 
     kind = policy.kind
+    # THE single sort of the prune round: slot ids by window-masked score,
+    # descending, ties broken by slot index (stable argsort).
+    sort_scores = jnp.where(valid_w, masked_scores, _NEG)
+    order = jnp.argsort(-sort_scores).astype(jnp.int32)
+
     breakpoint = jnp.full((), -1, jnp.int32)
     if kind == STREAMING:
         keep = protected & valid_w
@@ -112,14 +144,14 @@ def decide_row(scores: jax.Array, pos: jax.Array, length: jax.Array,
         # heavy-hitter top-k within (budget - protected count)
         n_protected = jnp.sum(protected & valid_w)
         n_hh = jnp.maximum(budget - n_protected, 0)
-        hh_prio = jnp.where(valid_w & ~protected, masked_scores, _NEG)
-        heavy = _topk_mask(hh_prio, n_hh) & valid_w & ~protected
+        candidates = valid_w & ~protected
+        heavy = candidates & (_subset_ranks(order, candidates) < n_hh)
         keep = (protected | heavy) & valid_w
         new_evict = budget
     elif kind == LETHE:
         bp, salient = algorithm1_breakpoint(
-            jnp.where(valid_w, masked_scores, _NEG), length,
-            n_segments=policy.n_segments, tau=policy.sparse_ratio)
+            sort_scores, length, n_segments=policy.n_segments,
+            tau=policy.sparse_ratio, order=order)
         breakpoint = bp
         found = bp >= 0
         keep_found = (protected | salient) & valid_w
@@ -146,12 +178,18 @@ def decide_row(scores: jax.Array, pos: jax.Array, length: jax.Array,
                             cap_target)
         n_keep = jnp.sum(keep)
         over = n_keep > cap_target
-        prio = jnp.where(keep, masked_scores, _NEG) + jnp.where(
-            protected, 1e30, 0.0)
-        forced = _topk_mask(prio, trunc_to) & keep
+        # Protected kept slots rank first (in slot order — an f32 +1e30 prio
+        # bump collapses their scores to a tie, so the historical ordering
+        # is by index), then unprotected kept slots by descending score.
+        pk = keep & protected
+        uk = keep & ~protected
+        n_pk = jnp.sum(pk)
+        rank_pk = jnp.cumsum(pk) - pk.astype(jnp.int32)
+        combined = jnp.where(pk, rank_pk, n_pk + _subset_ranks(order, uk))
+        forced = keep & (combined < trunc_to)
         keep = jnp.where(over, forced, keep)
     return PruneDecision(keep=keep, breakpoint=breakpoint,
-                         new_evict_at=new_evict)
+                         new_evict_at=new_evict, order=order)
 
 
 def prune_layer(layer: cache_lib.KVCache, cur_pos: jax.Array, *,

@@ -5,8 +5,13 @@ Maintains the Eq. 5 per-token utility score during decode:
     s_t = γ · s_{t−1} + Σ_h Σ_i Σ_j A_h^{(t)}(i, j)
 
 The attention mass Σ_h Σ_q A[b,h,q,k] per cached key is produced *inside* the
-fused decode-attention kernel (per-key probability column-sums), so scoring
-adds no extra HBM pass. Recency enters through the protected window in
+fused decode-attention kernel (per-key probability column-sums), and on the
+decode hot path the EMA itself is applied in the kernel epilogue
+(``ops.decode_attention_fused`` returns the updated scores directly), so
+scoring adds no extra HBM pass at all. ``update_scores`` below is the
+standalone form of the same arithmetic — the oracle the fused epilogue is
+tested against, and the entry point for callers that obtain column-sums out
+of band. Recency enters through the protected window in
 ``pruning.decide_row`` and through the decay γ, which gradually forgets
 historically-hot tokens — exactly the paper's critique of pure H2O-style
 accumulation ("overemphasis on historically high-attention tokens can mislead

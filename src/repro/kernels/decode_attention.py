@@ -4,7 +4,9 @@ The paper reads attention probabilities back out of the attention op to
 update RASR scores (Eq. 5). On TPU, re-materialising the prob matrix would
 cost an extra HBM round-trip per step, so this kernel *fuses* the Eq. 2/Eq. 5
 bookkeeping into flash-decode: alongside the attention output it emits the
-per-key probability column-sums Σ_g probs[g, c] for each KV head.
+per-key probability column-sums Σ_g probs[g, c] for each KV head AND applies
+the Eq. 5 EMA (score ← γ·score + probsum) in the kernel epilogue, so no
+separate [B, C] read-modify-write pass over the score buffer exists.
 
 Design (TPU-native, see DESIGN.md §2):
   grid = (B, H_kv, C // block_c) — the C axis is innermost and sequential,
@@ -16,9 +18,17 @@ Design (TPU-native, see DESIGN.md §2):
   group dim G rides the MXU's row axis and keys are never repeated
   (Eq. 3's ``repeat`` is purely logical).
 
-Masking (validity of pruned slots, causality, sliding window) is folded into
-an additive bias [B, C] computed by the wrapper — one vector per row, not a
-matrix.
+Occupancy-adaptive early exit (DESIGN.md §2.3): the per-row live length is
+scalar-prefetched (``pltpu.PrefetchScalarGridSpec``), every C-block past the
+last live block is skipped with ``pl.when`` and its K/V index map is clamped
+onto the last live block so dead blocks neither DMA fresh tiles nor touch the
+accumulators. Because pruning packs valid slots at the front of the cache
+(the ``KVCache`` invariant), attention FLOPs and HBM traffic track the
+pruning sawtooth instead of the static capacity ``C``.
+
+Masking (validity of pruned slots, causality, sliding window) is derived
+*inside* the kernel from the slot-position row — no [B, C] f32 bias array is
+materialised in HBM.
 """
 from __future__ import annotations
 
@@ -30,65 +40,112 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+GLOBAL_WINDOW = 1 << 30  # sentinel: effectively unwindowed
 
 
-def _kernel(q_ref, k_ref, v_ref, bias_ref, out_ref, psum_ref,
-            m_s, l_s, acc_s, ps_s, *, scale: float, softcap: float | None,
-            block_c: int):
+def _kernel(lens_ref, cur_ref, win_ref,                    # scalar prefetch
+            q_ref, k_ref, v_ref, pos_ref, score_ref,       # inputs
+            out_ref, psum_ref, nscore_ref, blocks_ref,     # outputs
+            m_s, l_s, acc_s, ps_s, cnt_s, *,               # scratch
+            scale: float, softcap: float | None, gamma: float, block_c: int):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
     c = pl.program_id(2)
-    nc = pl.num_programs(2)
+    nh = pl.num_programs(1)
+    # Number of live C-blocks for this row; ≥ 1 so outputs are always written.
+    nb = jnp.maximum(pl.cdiv(lens_ref[b], block_c), 1)
 
-    @pl.when(c == 0)
-    def _init():
-        m_s[...] = jnp.full_like(m_s, NEG_INF)
-        l_s[...] = jnp.zeros_like(l_s)
-        acc_s[...] = jnp.zeros_like(acc_s)
-        ps_s[...] = jnp.zeros_like(ps_s)
+    @pl.when(c < nb)
+    def _compute():
+        @pl.when(c == 0)
+        def _init():
+            m_s[...] = jnp.full_like(m_s, NEG_INF)
+            l_s[...] = jnp.zeros_like(l_s)
+            acc_s[...] = jnp.zeros_like(acc_s)
+            ps_s[...] = jnp.zeros_like(ps_s)
+            cnt_s[0] = 0
 
-    q = q_ref[0, 0].astype(jnp.float32)                   # [G, Dh]
-    kb = k_ref[0, 0].astype(jnp.float32)                  # [BC, Dh]
-    vb = v_ref[0, 0].astype(jnp.float32)                  # [BC, Dh]
-    bias = bias_ref[0].astype(jnp.float32)                # [BC]
+        q = q_ref[0, 0].astype(jnp.float32)                # [G, Dh]
+        kb = k_ref[0, 0].astype(jnp.float32)               # [BC, Dh]
+        vb = v_ref[0, 0].astype(jnp.float32)               # [BC, Dh]
+        # In-kernel mask from slot positions: invalid (-1) slots, future
+        # positions, and out-of-window positions are dead.
+        pos_blk = pos_ref[0, pl.ds(c * block_c, block_c)]  # [BC] int32
+        cur = cur_ref[b]
+        ok = (pos_blk >= 0) & (pos_blk <= cur) & (pos_blk > cur - win_ref[0])
 
-    s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    if softcap is not None:
-        s = softcap * jnp.tanh(s / softcap)
-    s = s + bias[None, :]                                  # [G, BC]
+        s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(ok[None, :], s, NEG_INF)             # [G, BC]
 
-    m_old = m_s[:, 0]
-    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
-    alpha = jnp.exp(m_old - m_new)                         # [G]
-    p = jnp.exp(s - m_new[:, None])                        # [G, BC]
+        m_old = m_s[:, 0]
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_old - m_new)                     # [G]
+        p = jnp.exp(s - m_new[:, None])                    # [G, BC]
 
-    l_s[:, 0] = l_s[:, 0] * alpha + jnp.sum(p, axis=-1)
-    acc_s[...] = acc_s[...] * alpha[:, None] + jax.lax.dot_general(
-        p, vb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    # online rescale of every previously-accumulated prob column, then store
-    # this block's unnormalised probs into its slice.
-    ps_s[...] = ps_s[...] * alpha[:, None]
-    ps_s[:, pl.ds(c * block_c, block_c)] = (
-        ps_s[:, pl.ds(c * block_c, block_c)] + p)
-    m_s[:, 0] = m_new
+        l_s[:, 0] = l_s[:, 0] * alpha + jnp.sum(p, axis=-1)
+        acc_s[...] = acc_s[...] * alpha[:, None] + jax.lax.dot_general(
+            p, vb, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        # online rescale of every previously-accumulated prob column, then
+        # store this block's unnormalised probs into its slice.
+        ps_s[...] = ps_s[...] * alpha[:, None]
+        ps_s[:, pl.ds(c * block_c, block_c)] = (
+            ps_s[:, pl.ds(c * block_c, block_c)] + p)
+        m_s[:, 0] = m_new
+        cnt_s[0] += 1
 
-    @pl.when(c == nc - 1)
-    def _finalize():
-        denom = jnp.maximum(l_s[:, 0], 1e-30)              # [G]
-        out_ref[0, 0] = (acc_s[...] / denom[:, None]).astype(out_ref.dtype)
-        psum_ref[0, 0] = jnp.sum(ps_s[...] / denom[:, None], axis=0)
+        @pl.when(c == nb - 1)
+        def _finalize():
+            denom = jnp.maximum(l_s[:, 0], 1e-30)          # [G]
+            out_ref[0, 0] = (acc_s[...] / denom[:, None]).astype(out_ref.dtype)
+            row = jnp.sum(ps_s[...] / denom[:, None], axis=0)  # [Cp]
+            blocks_ref[0, 0] = cnt_s[0]
+            # Σ over KV heads accumulates in the revisited output block (the
+            # h axis maps every program onto the same [1, Cp] row).
+
+            @pl.when(h == 0)
+            def _first_head():
+                psum_ref[0] = row
+
+            @pl.when(h > 0)
+            def _other_heads():
+                psum_ref[0] = psum_ref[0] + row
+
+            @pl.when(h == nh - 1)
+            def _rasr_epilogue():
+                # Eq. 5 EMA fused in: score ← γ·score + Σ_h probsum, zeroed
+                # on invalid slots (dead blocks were never touched, so their
+                # psum columns are exactly 0 and scores stay 0).
+                valid = pos_ref[0] >= 0
+                nscore_ref[0] = jnp.where(
+                    valid, gamma * score_ref[0] + psum_ref[0], 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "softcap", "block_c",
-                                             "interpret"))
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "gamma",
+                                             "block_c", "interpret"))
 def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
-                            bias: jax.Array, *, scale: float,
+                            pos: jax.Array, score: jax.Array,
+                            lens: jax.Array, cur_pos: jax.Array,
+                            window: jax.Array, *, scale: float,
                             softcap: float | None = None,
+                            gamma: float = 0.0,
                             block_c: int = 512,
                             interpret: bool = False
-                            ) -> tuple[jax.Array, jax.Array]:
-    """q: [B, Hq, Dh]; k, v: [B, Hkv, C, Dh]; bias: [B, C] additive mask.
+                            ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                       jax.Array]:
+    """Fused decode attention + RASR over a slotted cache.
 
-    Returns (out [B, Hq, Dh], probsum [B, C]). C is padded to block_c inside.
+    q: [B, Hq, Dh]; k, v: [B, Hkv, C, Dh]; pos: [B, C] int32 (-1 = invalid);
+    score: [B, C] f32 RASR scores; lens: [B] int32 live lengths (valid slots
+    are packed in [0, lens)); cur_pos: scalar or [B] query position; window:
+    scalar int32 sliding window (``GLOBAL_WINDOW`` = unwindowed).
+
+    Returns (out [B, Hq, Dh], probsum [B, C], new_score [B, C],
+    blocks [B, Hkv] — the number of C-blocks each program actually computed,
+    the occupancy-proportionality counter used by tests/benchmarks).
     """
     B, Hq, Dh = q.shape
     _, Hkv, C, _ = k.shape
@@ -100,51 +157,75 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     if pad:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        bias = jnp.pad(bias, ((0, 0), (0, pad)), constant_values=NEG_INF)
+        pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
+        score = jnp.pad(score, ((0, 0), (0, pad)))
     Cp = C + pad
     nc = Cp // block_c
 
+    lens = jnp.broadcast_to(jnp.asarray(lens, jnp.int32), (B,))
+    cur = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (B,))
+    win = jnp.broadcast_to(jnp.asarray(window, jnp.int32), (1,))
     qg = q.reshape(B, Hkv, G, Dh)
+    score = score.astype(jnp.float32)
+
+    def kv_map(b, h, c, lens_ref, cur_ref, win_ref):
+        # Clamp dead blocks onto the last live block: the index map returns
+        # the same block as the previous grid step, so the pipeline skips
+        # the DMA entirely.
+        nb = jnp.maximum(pl.cdiv(lens_ref[b], block_c), 1)
+        return (b, h, jnp.minimum(c, nb - 1), 0)
+
+    def row_map(b, h, c, *_):
+        return (b, 0)
+
     kernel = functools.partial(_kernel, scale=scale, softcap=softcap,
-                               block_c=block_c)
-    out, psum = pl.pallas_call(
-        kernel,
+                               gamma=gamma, block_c=block_c)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
         grid=(B, Hkv, nc),
         in_specs=[
-            pl.BlockSpec((1, 1, G, Dh), lambda b, h, c: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, block_c, Dh), lambda b, h, c: (b, h, c, 0)),
-            pl.BlockSpec((1, 1, block_c, Dh), lambda b, h, c: (b, h, c, 0)),
-            pl.BlockSpec((1, block_c), lambda b, h, c: (b, c)),
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, c, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_c, Dh), kv_map),
+            pl.BlockSpec((1, 1, block_c, Dh), kv_map),
+            pl.BlockSpec((1, Cp), row_map),
+            pl.BlockSpec((1, Cp), row_map),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, G, Dh), lambda b, h, c: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, Cp), lambda b, h, c: (b, h, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
-            jax.ShapeDtypeStruct((B, Hkv, Cp), jnp.float32),
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, c, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, Cp), row_map),
+            pl.BlockSpec((1, Cp), row_map),
+            pl.BlockSpec((1, 1), lambda b, h, c, *_: (b, h)),
         ],
         scratch_shapes=[
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, Dh), jnp.float32),
             pltpu.VMEM((G, Cp), jnp.float32),
+            pltpu.SMEM((1,), jnp.int32),
+        ],
+    )
+    out, psum, nscore, blocks = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
+            jax.ShapeDtypeStruct((B, Cp), jnp.float32),
+            jax.ShapeDtypeStruct((B, Cp), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv), jnp.int32),
         ],
         interpret=interpret,
-    )(qg, k, v, bias)
+    )(lens, cur, win, qg, k, v, pos, score)
 
     out = out.reshape(B, Hq, Dh)
-    probsum = jnp.sum(psum, axis=1)[:, :C]                 # Σ over KV heads
-    return out, probsum
+    return out, psum[:, :C], nscore[:, :C], blocks
 
 
-def make_decode_bias(pos: jax.Array, cur_pos: jax.Array,
-                     window: int | None = None) -> jax.Array:
-    """Additive mask bias [B, C] from slot positions: invalid slots, future
-    positions and (optionally) out-of-window positions get NEG_INF."""
-    B = pos.shape[0]
-    cur = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (B,))[:, None]
-    ok = (pos >= 0) & (pos <= cur)
-    if window is not None:
-        ok &= pos >= (cur - window + 1)
-    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+def live_lengths(pos: jax.Array) -> jax.Array:
+    """[B] int32 — index one past the last valid slot of each row.
+
+    Equals ``KVCache.length`` under the packed-front invariant but is also
+    correct (as an early-exit bound) for arbitrary slot layouts.
+    """
+    C = pos.shape[-1]
+    occ = jnp.where(pos >= 0, jnp.arange(C, dtype=jnp.int32) + 1, 0)
+    return jnp.max(occ, axis=-1).astype(jnp.int32)

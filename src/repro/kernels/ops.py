@@ -15,8 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as ref_impl
-from repro.kernels.decode_attention import (decode_attention_pallas,
-                                            make_decode_bias)
+from repro.kernels.decode_attention import (GLOBAL_WINDOW,
+                                            decode_attention_pallas,
+                                            live_lengths)
 from repro.kernels.flash_prefill import flash_prefill_pallas
 
 _DEFAULT = {"impl": "auto"}
@@ -34,11 +35,44 @@ def _resolve(impl: str | None) -> str:
     return impl
 
 
+def decode_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array,
+                           pos: jax.Array, cur_pos, score: jax.Array, *,
+                           gamma: float, window=None,
+                           softcap: float | None = None,
+                           scale: float | None = None,
+                           lengths: jax.Array | None = None,
+                           impl: str | None = None
+                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Masked single-token attention over a slotted cache, fused with the
+    RASR bookkeeping: emits the per-key probability column-sums AND the
+    Eq. 5 EMA-updated scores in one pass (the decode hot path).
+
+    q [B,Hq,Dh]; k,v [B,Hkv,C,Dh]; pos [B,C] (−1 = invalid); score [B,C].
+    ``lengths`` [B]: live-length bound for the kernel's occupancy-adaptive
+    early exit (derived from ``pos`` when omitted; pass ``KVCache.length``
+    on the hot path to skip the reduction). ``window`` may be a traced
+    scalar (per-layer local/global scans).
+    Returns (out [B,Hq,Dh], probsum [B,C], new_score [B,C])."""
+    impl = _resolve(impl)
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    if impl == "ref":
+        return ref_impl.decode_attention_fused_ref(
+            q, k, v, pos, cur_pos, score, gamma=gamma, window=window,
+            softcap=softcap, scale=scale)
+    lens = lengths if lengths is not None else live_lengths(pos)
+    win = GLOBAL_WINDOW if window is None else window
+    out, probsum, new_score, _ = decode_attention_pallas(
+        q, k, v, pos, score, lens, cur_pos, win, scale=scale,
+        softcap=softcap, gamma=gamma, interpret=(impl == "interpret"))
+    return out, probsum, new_score
+
+
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                     pos: jax.Array, cur_pos, *, window: int | None = None,
+                     pos: jax.Array, cur_pos, *, window=None,
                      softcap: float | None = None, scale: float | None = None,
                      impl: str | None = None) -> tuple[jax.Array, jax.Array]:
-    """Masked single-token attention over a slotted cache + RASR column-sums.
+    """Masked single-token attention over a slotted cache + RASR column-sums
+    (score-free form, e.g. whisper's static cross-attention cache).
 
     q [B,Hq,Dh]; k,v [B,Hkv,C,Dh]; pos [B,C] (−1 = invalid).
     Returns (out [B,Hq,Dh], probsum [B,C])."""
@@ -48,10 +82,10 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         return ref_impl.decode_attention_ref(
             q, k, v, pos, cur_pos, window=window, softcap=softcap,
             scale=scale)
-    bias = make_decode_bias(pos, cur_pos, window)
-    return decode_attention_pallas(
-        q, k, v, bias, scale=scale, softcap=softcap,
-        interpret=(impl == "interpret"))
+    out, probsum, _ = decode_attention_fused(
+        q, k, v, pos, cur_pos, jnp.zeros(pos.shape, jnp.float32),
+        gamma=0.0, window=window, softcap=softcap, scale=scale, impl=impl)
+    return out, probsum
 
 
 def prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -62,6 +62,35 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(B, Hq, Dh).astype(q.dtype), probsum
 
 
+def decode_attention_fused_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                               pos: jax.Array, cur_pos: jax.Array,
+                               score: jax.Array, *, gamma: float,
+                               window: int | None = None,
+                               softcap: float | None = None,
+                               scale: float | None = None
+                               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for the fused decode-attention + RASR kernel: identical
+    signature/semantics to ``decode_attention_pallas`` (sans the block
+    counter). ``score``: [B, C] RASR scores before this step.
+
+    Returns (out, probsum, new_score) with new_score the Eq. 5 EMA
+    γ·score + probsum, zeroed on invalid slots — the exact arithmetic of the
+    pre-fusion ``rasr.update_scores`` pass.
+
+    Degenerate-case caveat (DESIGN.md §2.3): if *every* slot of a row is
+    masked, this oracle distributes the NaN-free sentinel mass uniformly over
+    all C slots while the early-exit kernel distributes it over the live
+    prefix only. No decode step can reach that state (the just-appended token
+    is always attendable), so equivalence tests exclude it.
+    """
+    out, probsum = decode_attention_ref(
+        q, k, v, pos, cur_pos, window=window, softcap=softcap, scale=scale)
+    valid = pos >= 0
+    new_score = jnp.where(valid,
+                          gamma * score.astype(jnp.float32) + probsum, 0.0)
+    return out, probsum, new_score
+
+
 def prefill_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                           causal: bool = True,
                           window: int | None = None,

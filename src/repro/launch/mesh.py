@@ -17,21 +17,27 @@ HBM_BW = 819e9                  # bytes/s
 ICI_BW_PER_LINK = 50e9          # bytes/s per link
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types where the installed
+    jax supports them (``jax.sharding.AxisType`` appeared after 0.4.x;
+    older versions treat every mesh axis as Auto implicitly)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 2, model: int = 4):
     """Small mesh over however many (possibly fake) devices exist — used by
     sharding unit tests."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

@@ -7,6 +7,7 @@ Three call modes:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -14,7 +15,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import cache as cache_lib
-from repro.core import rasr, sparsity as sparsity_lib
+from repro.core import rasr
+from repro.core import sparsity as sparsity_lib
 from repro.core.policy import PolicyConfig
 from repro.kernels import ops
 from repro.models import common
@@ -119,9 +121,12 @@ def decode_attend(x: jax.Array, p: dict, layer: cache_lib.KVCache,
                   prune: bool = True) -> tuple[jax.Array, cache_lib.KVCache]:
     """One decode step for one layer. x [B, D] -> (attn_out [B, D], cache').
 
-    Appends the token's K/V, runs fused masked attention + RASR column-sums,
-    EMA-updates scores and the layerwise sparsity estimate, then runs the
-    (conditionally triggered) pruning round.
+    Appends the token's K/V, runs the fused masked-attention + RASR kernel
+    (attention output, probability column-sums, and the Eq. 5 score EMA in
+    one pass — no separate ``rasr.update_scores`` sweep over [B, C]),
+    updates the layerwise sparsity estimate, then runs the (conditionally
+    triggered) pruning round. The cache's ``length`` bounds the kernel's
+    occupancy-adaptive early exit, so attention cost tracks live tokens.
     """
     B, D = x.shape
     q, k, v = project_qkv(x[:, None, :], p, cfg)   # [B, 1, H, Dh]
@@ -133,11 +138,11 @@ def decode_attend(x: jax.Array, p: dict, layer: cache_lib.KVCache,
     v1 = jnp.swapaxes(v, 1, 2)[:, :, 0]
 
     layer = cache_lib.append_token(layer, k1, v1, cur_pos, policy.init_score)
-    out, probsum = ops.decode_attention(
-        q1, layer.k, layer.v, layer.pos, cur_pos, window=window,
-        softcap=cfg.attn_logit_softcap, scale=cfg.d_head ** -0.5)
-
-    layer = rasr.update_scores(layer, probsum, policy.gamma)
+    out, probsum, new_score = ops.decode_attention_fused(
+        q1, layer.k, layer.v, layer.pos, cur_pos, layer.score,
+        gamma=policy.gamma, window=window, softcap=cfg.attn_logit_softcap,
+        scale=cfg.d_head ** -0.5, lengths=layer.length)
+    layer = dataclasses.replace(layer, score=new_score)
     # layerwise sparsity EMA from this step's head-aggregated attention
     valid = cache_lib.valid_mask(layer.pos)
     p_norm = probsum / cfg.n_heads
@@ -145,10 +150,7 @@ def decode_attend(x: jax.Array, p: dict, layer: cache_lib.KVCache,
         p_norm, where=valid, n_valid=jnp.maximum(layer.length, 2))
     new_spars = sparsity_lib.update_sparsity_ema(
         layer.sparsity, obs, policy.sparsity_ema)
-    layer = cache_lib.KVCache(
-        k=layer.k, v=layer.v, pos=layer.pos, score=layer.score,
-        length=layer.length, budget=layer.budget, evict_at=layer.evict_at,
-        sparsity=new_spars)
+    layer = dataclasses.replace(layer, sparsity=new_spars)
 
     if prune and policy.prunes:
         from repro.core import pruning

@@ -263,9 +263,12 @@ def prefill(params, tokens, cfg: ArchConfig, policy: PolicyConfig, *,
     return logits, state
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "policy"))
+@functools.partial(jax.jit, static_argnames=("cfg", "policy"),
+                   donate_argnames=("state",))
 def decode_step(params, state, token, cur_pos, cfg: ArchConfig,
                 policy: PolicyConfig, **_):
+    # ``state`` (recurrent h/conv + the attention layers' KV cache) is
+    # donated so the per-step buffers update in place.
     x = common.embed_tokens(token, params, cfg)
     kv, rec = state["kv"], state["rec"]
     new_kv_layers, new_rec_layers = [], []

@@ -205,9 +205,12 @@ def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig, policy=None,
     return logits, new_state
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "policy"))
+@functools.partial(jax.jit, static_argnames=("cfg", "policy"),
+                   donate_argnames=("state",))
 def decode_step(params: dict, state: dict, token: jax.Array, cur_pos,
                 cfg: ArchConfig, policy=None, **_):
+    # ``state`` (per-layer wkv matrix + token-shift vectors) is donated so
+    # the recurrent buffers update in place each step.
     x = common.embed_tokens(token, params, cfg)   # [B, D]
 
     def body(carry, xs):

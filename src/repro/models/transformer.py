@@ -253,12 +253,18 @@ def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
 # Decode step
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("cfg", "policy"))
+@functools.partial(jax.jit, static_argnames=("cfg", "policy"),
+                   donate_argnames=("cache",))
 def decode_step(params: dict, cache: cache_lib.KVCache, token: jax.Array,
                 cur_pos: jax.Array, cfg: ArchConfig, policy: PolicyConfig, *,
                 positions3: jax.Array | None = None
                 ) -> tuple[jax.Array, cache_lib.KVCache]:
-    """token [B] at position ``cur_pos`` -> (logits [B, V], cache')."""
+    """token [B] at position ``cur_pos`` -> (logits [B, V], cache').
+
+    The cache pytree is *donated*: XLA aliases the [L, B, Hkv, C, Dh] K/V
+    buffers between input and output and updates them in place, so a decode
+    step allocates no second cache copy. Callers must treat the passed-in
+    cache as consumed (every driver rebinds ``state`` each step)."""
     x = common.embed_tokens(token, params, cfg)     # [B, D]
     windows = layer_windows(cfg)
 

@@ -86,9 +86,12 @@ def prefill(params, tokens, cfg: ArchConfig, policy: PolicyConfig, *,
                                cache_dtype=cache_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "policy"))
+@functools.partial(jax.jit, static_argnames=("cfg", "policy"),
+                   donate_argnames=("cache",))
 def decode_step(params, cache, token, cur_pos, cfg: ArchConfig,
                 policy: PolicyConfig, **_):
+    # Donation must be declared on this outer jit — the inner
+    # transformer.decode_step jit is inlined when traced from here.
     B = token.shape[0]
     cur = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (B,))
     pos3 = jnp.broadcast_to(cur[None], (3, B))  # text: streams move together

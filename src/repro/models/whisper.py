@@ -194,9 +194,12 @@ def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
     return logits, {"kv": kv, "cross_k": ck, "cross_v": cv}
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "policy"))
+@functools.partial(jax.jit, static_argnames=("cfg", "policy"),
+                   donate_argnames=("state",))
 def decode_step(params: dict, state: dict, token: jax.Array, cur_pos,
                 cfg: ArchConfig, policy: PolicyConfig, **_):
+    # ``state`` is donated: the KV cache updates in place and the static
+    # cross-attention K/V alias straight through to the output.
     from repro.kernels import ops
     kv, ck, cv = state["kv"], state["cross_k"], state["cross_v"]
     B = token.shape[0]

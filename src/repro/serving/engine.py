@@ -10,6 +10,7 @@ Two decode drivers:
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -140,7 +141,10 @@ class Engine:
 
         tok0 = _sample(logits, jax.random.PRNGKey(seed), temperature)
 
-        @jax.jit
+        # Donate the prefill state into the scan: the whole decode loop then
+        # runs against one in-place cache allocation (the per-step
+        # decode_step donation covers the Python-stepped `generate` driver).
+        @functools.partial(jax.jit, donate_argnums=(0,))
         def run(state, tok0, key):
             (state, _, _), toks = jax.lax.scan(
                 step, (state, tok0, key),

@@ -1,9 +1,18 @@
-"""Property-based tests (hypothesis) on the Lethe core invariants."""
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+"""Property-based tests (hypothesis) on the Lethe core invariants.
+
+Skipped cleanly (instead of aborting collection of the whole suite) when
+``hypothesis`` is not installed; ``pip install -r requirements-dev.txt``
+provides it.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import cache as cache_lib

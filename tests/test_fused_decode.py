@@ -1,0 +1,230 @@
+"""Occupancy-adaptive fused decode hot path (DESIGN.md §2.3, §Perf):
+
+  * early-exit kernel == ref oracle across occupancy levels, and the
+    kernel's measured block counter is occupancy-proportional;
+  * the in-kernel RASR epilogue matches the standalone
+    ``rasr.update_scores`` pass bit-for-bit in f32;
+  * one prune round performs exactly one argsort over C per row
+    (decide_row sorts once, compact is a sort-free stable partition);
+  * ``decode_step`` donates the cache pytree — no second cache copy.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as cache_lib
+from repro.core import pruning, rasr
+from repro.core.policy import make_policy
+from repro.kernels import ref
+from repro.kernels.decode_attention import (GLOBAL_WINDOW,
+                                            decode_attention_pallas,
+                                            live_lengths)
+
+
+def _packed_layer_inputs(key, B, Hq, Hkv, C, Dh, lives):
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, Hq, Dh))
+    k = jax.random.normal(ks[1], (B, Hkv, C, Dh))
+    v = jax.random.normal(ks[2], (B, Hkv, C, Dh))
+    pos = jnp.stack([jnp.where(jnp.arange(C) < n, jnp.arange(C), -1)
+                     for n in lives]).astype(jnp.int32)
+    score = jnp.where(pos >= 0, jax.random.uniform(ks[3], (B, C)), 0.0)
+    return q, k, v, pos, score
+
+
+# --------------------------------------------------------------------------
+# Early-exit kernel: equivalence + occupancy proportionality
+# --------------------------------------------------------------------------
+
+C, BLOCK_C = 256, 32
+OCCUPANCY_CASES = [
+    # (lives per row, window): empty-but-one, ragged, one block, full
+    ([1, 1], None),
+    ([37, 203], None),
+    ([32, 32], None),
+    ([C, C], None),
+    ([64, 256], 48),          # sliding window + ragged occupancy
+    ([C // 4, C // 4], None),  # the 1/4-occupancy acceptance point
+]
+
+
+@pytest.mark.parametrize("lives,window", OCCUPANCY_CASES)
+def test_early_exit_matches_ref_across_occupancy(lives, window):
+    B, Hq, Hkv, Dh = 2, 8, 2, 32
+    q, k, v, pos, score = _packed_layer_inputs(
+        jax.random.PRNGKey(0), B, Hq, Hkv, C, Dh, lives)
+    lens = live_lengths(pos)
+    cur = lens - 1                 # query at each row's newest position
+    gamma = 0.95
+
+    o_ref, ps_ref, ns_ref = ref.decode_attention_fused_ref(
+        q, k, v, pos, cur, score, gamma=gamma, window=window,
+        scale=Dh ** -0.5)
+    win = GLOBAL_WINDOW if window is None else window
+    o_pl, ps_pl, ns_pl, blocks = decode_attention_pallas(
+        q, k, v, pos, score, lens, cur, jnp.int32(win), scale=Dh ** -0.5,
+        gamma=gamma, block_c=BLOCK_C, interpret=True)
+
+    assert np.abs(np.asarray(o_pl) - np.asarray(o_ref)).max() <= 1e-5
+    assert np.abs(np.asarray(ps_pl) - np.asarray(ps_ref)).max() <= 1e-5
+    assert np.abs(np.asarray(ns_pl) - np.asarray(ns_ref)).max() <= 1e-5
+
+    # The block counter is incremented inside the kernel per executed
+    # C-block: work must track live tokens, not capacity.
+    expected = np.maximum(-(-np.asarray(lives) // BLOCK_C), 1)
+    np.testing.assert_array_equal(
+        np.asarray(blocks), np.broadcast_to(expected[:, None], (B, Hkv)))
+
+
+def test_quarter_occupancy_halves_block_iterations():
+    """Acceptance: at 1/4 occupancy the kernel executes ≤ 1/2 of the
+    full-capacity C-block iterations."""
+    B, Hq, Hkv, Dh = 2, 8, 2, 32
+    counts = {}
+    for frac in (4, 1):            # C/4 and C
+        live = C // frac
+        q, k, v, pos, score = _packed_layer_inputs(
+            jax.random.PRNGKey(1), B, Hq, Hkv, C, Dh, [live] * B)
+        lens = live_lengths(pos)
+        *_, blocks = decode_attention_pallas(
+            q, k, v, pos, score, lens, lens - 1, jnp.int32(GLOBAL_WINDOW),
+            scale=Dh ** -0.5, block_c=BLOCK_C, interpret=True)
+        counts[frac] = int(np.asarray(blocks).sum())
+    assert counts[4] * 2 <= counts[1], counts
+
+
+# --------------------------------------------------------------------------
+# Fused RASR epilogue vs the standalone update_scores pass
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gamma", [0.95, 1.0])
+def test_fused_scores_bit_for_bit_vs_update_scores(gamma):
+    B, Hq, Hkv, Dh = 2, 8, 2, 32
+    q, k, v, pos, score = _packed_layer_inputs(
+        jax.random.PRNGKey(2), B, Hq, Hkv, C, Dh, [77, C])
+    lens = live_lengths(pos)
+    _, probsum, new_score, _ = decode_attention_pallas(
+        q, k, v, pos, score, lens, lens - 1, jnp.int32(GLOBAL_WINDOW),
+        scale=Dh ** -0.5, gamma=gamma, block_c=BLOCK_C, interpret=True)
+
+    zeros_kv = jnp.zeros((B, Hkv, C, Dh))
+    layer = cache_lib.KVCache(
+        k=zeros_kv, v=zeros_kv, pos=pos, score=score, length=lens,
+        budget=jnp.full((), C, jnp.int32), evict_at=jnp.full((), C, jnp.int32),
+        sparsity=jnp.float32(0.0))
+    # jit the old pass exactly as decode_step always ran it: under jit both
+    # paths lower γ·score + probsum to the same contracted f32 fma, so the
+    # comparison is bit-for-bit (eager dispatch skips the contraction and
+    # differs by 1 ulp — a property of op-by-op execution, not of the fusion).
+    expected = jax.jit(
+        lambda l, p: rasr.update_scores(l, p, gamma))(layer, probsum).score
+    np.testing.assert_array_equal(np.asarray(new_score), np.asarray(expected))
+
+
+# --------------------------------------------------------------------------
+# Single-sort prune round
+# --------------------------------------------------------------------------
+
+def _subjaxprs(params):
+    for v in params.values():
+        for x in (v if isinstance(v, (list, tuple)) else [v]):
+            name = type(x).__name__
+            if name == "ClosedJaxpr":
+                yield x.jaxpr
+            elif name == "Jaxpr":
+                yield x
+
+
+def _count_sorts(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in ("sort", "top_k", "approx_top_k"):
+            n += 1
+        for sub in _subjaxprs(eqn.params):
+            n += _count_sorts(sub)
+    return n
+
+
+@pytest.mark.parametrize("kind", ["lethe", "h2o", "streaming", "pyramidkv"])
+def test_prune_round_single_sort(kind):
+    """One prune round lowers to exactly one sort over C per row: decide_row
+    ranks once, every mask is cumsum-derived, compact is sort-free."""
+    Cp = 64
+    pol = make_policy(kind, capacity=Cp, sink_len=2, sparse_ratio=3.0)
+    lay = cache_lib.init_cache(n_layers=1, batch=2, n_kv_heads=2, capacity=Cp,
+                               d_head=8, policy=pol,
+                               dtype=jnp.float32).layer(0)
+    jaxpr = jax.make_jaxpr(
+        lambda l: pruning.prune_layer(l, jnp.int32(40), policy=pol,
+                                      force=True))(lay)
+    assert _count_sorts(jaxpr.jaxpr) == 1, jaxpr
+
+
+def test_compact_is_sort_free():
+    Cp = 64
+    pol = make_policy("lethe", capacity=Cp)
+    lay = cache_lib.init_cache(n_layers=1, batch=2, n_kv_heads=2, capacity=Cp,
+                               d_head=8, policy=pol,
+                               dtype=jnp.float32).layer(0)
+    keep = lay.pos >= 0
+    jaxpr = jax.make_jaxpr(cache_lib.compact)(lay, keep)
+    assert _count_sorts(jaxpr.jaxpr) == 0, jaxpr
+
+
+def test_compact_stable_partition_matches_argsort_semantics():
+    """The cumsum stable partition must reproduce the historical
+    argsort-by-position compaction on invariant-respecting caches."""
+    Cp = 32
+    pol = make_policy("lethe", capacity=Cp, sink_len=2)
+    lay = cache_lib.init_cache(n_layers=1, batch=2, n_kv_heads=1, capacity=Cp,
+                               d_head=4, policy=pol,
+                               dtype=jnp.float32).layer(0)
+    key = jax.random.PRNGKey(3)
+    for t in range(20):
+        kn = jax.random.normal(jax.random.fold_in(key, t), (2, 1, 4))
+        lay = cache_lib.append_token(lay, kn, kn, t, 1.0)
+    keep = (lay.pos % 3 != 1) & (lay.pos >= 0)   # holes in the middle
+    out = cache_lib.compact(lay, keep)
+    pos = np.asarray(out.pos)
+    length = np.asarray(out.length)
+    for b in range(2):
+        live = pos[b][pos[b] >= 0]
+        assert len(live) == length[b]
+        assert (pos[b][:length[b]] >= 0).all()
+        assert (pos[b][length[b]:] == -1).all()
+        assert (np.diff(live) > 0).all()         # increasing positions
+        # survivors are exactly the kept positions
+        expected = [p for p in range(20) if p % 3 != 1]
+        assert live.tolist() == expected
+    # K/V rows moved with their positions
+    kv = np.asarray(out.k[0, 0, :, 0])
+    kin = np.asarray(lay.k[0, 0, :, 0])
+    order = [p for p in range(20) if p % 3 != 1]
+    np.testing.assert_allclose(kv[:len(order)], kin[order])
+
+
+# --------------------------------------------------------------------------
+# Donated cache buffers
+# --------------------------------------------------------------------------
+
+def test_decode_step_donates_cache():
+    """Acceptance: decode_step must not allocate a fresh K/V copy — the
+    input cache pytree is donated and its buffers deleted after the call."""
+    from repro.configs import get_arch
+    from repro.models.api import build_model
+
+    cfg = get_arch("qwen2.5-32b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pol = make_policy("lethe", capacity=16, sink_len=2, sparse_ratio=4.0)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                          cfg.vocab_size)}
+    logits, state = model.prefill(params, batch, pol)
+    old_k, old_v = state.k, state.v
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    _, state = model.decode_step(params, state, tok, jnp.int32(12), pol)
+    assert old_k.is_deleted() and old_v.is_deleted()
+    # the new cache is fully usable for the next step
+    _, state = model.decode_step(params, state, tok, jnp.int32(13), pol)
+    assert bool(jnp.isfinite(jnp.sum(state.score)))

@@ -6,9 +6,22 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.decode_attention import (decode_attention_pallas,
-                                            make_decode_bias)
+from repro.kernels.decode_attention import (GLOBAL_WINDOW,
+                                            decode_attention_pallas,
+                                            live_lengths)
 from repro.kernels.flash_prefill import flash_prefill_pallas
+
+
+def _fused(q, k, v, pos, cur, *, scale, window=None, softcap=None,
+           score=None, gamma=0.0, block_c=512):
+    """Call the fused kernel in interpret mode with wrapper-derived lengths."""
+    if score is None:
+        score = jnp.zeros(pos.shape, jnp.float32)
+    win = GLOBAL_WINDOW if window is None else window
+    return decode_attention_pallas(
+        q, k, v, pos, score, live_lengths(pos), cur, jnp.int32(win),
+        scale=scale, softcap=softcap, gamma=gamma, block_c=block_c,
+        interpret=True)
 
 
 def _tol(dtype):
@@ -40,9 +53,8 @@ def test_decode_attention_matches_ref(shape, dtype):
 
     o_ref, ps_ref = ref.decode_attention_ref(q, k, v, pos, cur,
                                              scale=Dh ** -0.5)
-    bias = make_decode_bias(pos, cur)
-    o_pl, ps_pl = decode_attention_pallas(q, k, v, bias, scale=Dh ** -0.5,
-                                          block_c=bc, interpret=True)
+    o_pl, ps_pl, _, _ = _fused(q, k, v, pos, cur, scale=Dh ** -0.5,
+                               block_c=bc)
     np.testing.assert_allclose(np.asarray(o_pl, np.float32),
                                np.asarray(o_ref, np.float32), **_tol(dtype))
     np.testing.assert_allclose(np.asarray(ps_pl), np.asarray(ps_ref),
@@ -62,10 +74,8 @@ def test_decode_attention_masking_variants(window, softcap):
     cur = jnp.int32(C - 1)
     o_ref, ps_ref = ref.decode_attention_ref(
         q, k, v, pos, cur, window=window, softcap=softcap, scale=Dh ** -0.5)
-    bias = make_decode_bias(pos, cur, window)
-    o_pl, ps_pl = decode_attention_pallas(
-        q, k, v, bias, scale=Dh ** -0.5, softcap=softcap, block_c=32,
-        interpret=True)
+    o_pl, ps_pl, _, _ = _fused(q, k, v, pos, cur, scale=Dh ** -0.5,
+                               window=window, softcap=softcap, block_c=32)
     np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
                                rtol=2e-5, atol=2e-5)
     np.testing.assert_allclose(np.asarray(ps_pl), np.asarray(ps_ref),
@@ -80,9 +90,8 @@ def test_decode_probsum_is_valid_distribution_mass():
     k = jax.random.normal(ks[1], (B, Hkv, C, Dh))
     v = jax.random.normal(ks[2], (B, Hkv, C, Dh))
     pos = jnp.broadcast_to(jnp.arange(C), (B, C)).astype(jnp.int32)
-    bias = make_decode_bias(pos, jnp.int32(C))
-    _, ps = decode_attention_pallas(q, k, v, bias, scale=Dh ** -0.5,
-                                    block_c=16, interpret=True)
+    _, ps, _, _ = _fused(q, k, v, pos, jnp.int32(C), scale=Dh ** -0.5,
+                         block_c=16)
     np.testing.assert_allclose(np.asarray(jnp.sum(ps, -1)),
                                np.full((B,), Hq, np.float32), rtol=1e-5)
 

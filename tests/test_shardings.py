@@ -141,8 +141,8 @@ kops.set_default_impl("ref")
 from repro.launch import shardings, specs, steps
 from repro.models.api import build_model
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh(2, 4)
 cfg = dataclasses.replace(
     get_arch("qwen2.5-32b"), n_layers=2, d_model=256, n_heads=8,
     n_kv_heads=4, d_head=32, d_ff=512, vocab_size=1024)
@@ -162,7 +162,10 @@ jfn = jax.jit(fn, in_shardings=(
     NamedSharding(mesh, P())))
 with mesh:
     compiled = jfn.lower(p_sds, st_sds, tok_sds, pos_sds).compile()
-assert compiled.cost_analysis().get("flops", 0) > 0
+ca = compiled.cost_analysis()
+if isinstance(ca, (list, tuple)):   # pre-0.5 jax returns a per-device list
+    ca = ca[0]
+assert ca.get("flops", 0) > 0
 print("COMPILE_OK")
 """
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
