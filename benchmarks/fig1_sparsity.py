@@ -27,7 +27,8 @@ def run(csv: common.CsvOut) -> None:
         logits, state = model.decode_step(params, state, tok,
                                           jnp.asarray(40 + t), pol)
         tok = jnp.argmax(logits, -1)
-        heat.append(np.asarray(state.sparsity))
+        # sparsity is per-row [L, B]; the Fig. 1 heatmap is the batch mean
+        heat.append(np.asarray(state.sparsity).mean(axis=-1))
     heat = np.stack(heat)                       # [steps, layers]
     out = os.path.join(common.CACHE_DIR, "fig1_sparsity_heatmap.csv")
     np.savetxt(out, heat, delimiter=",",

@@ -14,8 +14,8 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import (ablation_ratios, common, fig1_sparsity, fig4_scaling,
-                        kernels_micro, table1_accuracy, table2_memory,
-                        table3_throughput)
+                        kernels_micro, serving_traffic, table1_accuracy,
+                        table2_memory, table3_throughput)
 
 SUITES = {
     "table1": table1_accuracy.run,
@@ -25,6 +25,7 @@ SUITES = {
     "fig4": fig4_scaling.run,
     "ablation": ablation_ratios.run,
     "kernels": kernels_micro.run,
+    "serving": serving_traffic.run,
 }
 
 

@@ -1,6 +1,10 @@
 """Quickstart: build a model, generate with FullKV vs Lethe, watch the cache
 stay bounded.
 
+Generation is EOS-aware: pass ``eos_id=<token>`` to ``Engine.generate`` /
+``generate_scan`` and each row stops at its first EOS (decode terminates
+early once every row is done; see README.md).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import os

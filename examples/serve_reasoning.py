@@ -1,7 +1,13 @@
 """End-to-end serving driver (the paper's kind of workload): train a small
 model on the synthetic chained-arithmetic CoT task in-framework, then serve
-batched reasoning requests through the scheduler under the full policy grid,
-reporting accuracy / memory / throughput — Tables 1–3 in miniature.
+batched reasoning requests through the continuous-batching scheduler under
+the full policy grid, reporting accuracy and per-request serving metrics
+(TTFT, queue wait) — Tables 1–3 in miniature.
+
+Requests walk the queued -> prefilling -> decoding -> finished lifecycle;
+finished slots are refilled from the queue between decode segments, and
+generation is EOS-aware (pass ``eos_id`` to ``Scheduler``/``Engine.generate``
+and rows stop as soon as they emit it).
 
     PYTHONPATH=src python examples/serve_reasoning.py [--steps 400]
 """
@@ -33,12 +39,12 @@ def main():
     rng = np.random.default_rng(0)
 
     print(f"\nServing {args.requests} reasoning requests on "
-          f"{args.slots} lockstep slots:")
+          f"{args.slots} continuously-batched slots:")
     for kind in common.POLICY_GRID:
         cap = dcfg.seq_len + 16 if kind == "fullkv" else 48
         pol = common.make_policy_for(kind, cap)
         eng = Engine(model, params, pol)
-        sched = Scheduler(eng, batch_slots=args.slots)
+        sched = Scheduler(eng, batch_slots=args.slots, segment_len=4)
         answers, reqs = [], []
         for i in range(args.requests):
             b = pipeline.reasoning_batch(
@@ -50,10 +56,14 @@ def main():
                                 prompt=np.asarray(b["tokens"][0, :ap_pos]),
                                 max_new_tokens=1))
             answers.append(int(b["answer"][0]))
+        sched.submit(reqs)
         done = sched.run()
         correct = sum(int(c.tokens[0]) == a for c, a in zip(done, answers))
+        ttft = 1e3 * np.mean([c.ttft_s for c in done])
+        wait = 1e3 * np.mean([c.queue_wait_s for c in done])
         print(f"  {kind:10s} capacity={cap:4d}  answer accuracy "
-              f"{correct}/{args.requests}")
+              f"{correct}/{args.requests}  mean TTFT {ttft:6.1f} ms "
+              f"(queue wait {wait:6.1f} ms)")
 
 
 if __name__ == "__main__":

@@ -13,11 +13,19 @@ Layout (stacked over layers so models can ``lax.scan`` the stack):
   pos       [L, B, C]  int32, original token position; -1 = invalid slot
   score     [L, B, C]  f32, RASR accumulated attention mass (Eq. 5)
   length    [L, B]     int32, occupancy; valid slots are [0, length)
-  budget    [L]        int32, spatial-allocator target (Sec. "Spatial ...")
-  evict_at  [L]        int32, dynamic L_evict threshold (Algorithm 1)
-  sparsity  [L]        f32, layerwise Hoyer sparsity EMA
+  budget    [L, B]     int32, spatial-allocator target (Sec. "Spatial ...")
+  evict_at  [L, B]     int32, dynamic L_evict threshold (Algorithm 1)
+  sparsity  [L, B]     f32, layerwise Hoyer sparsity EMA
 
-Invariant: valid slots are packed at the front in increasing ``pos`` order.
+``budget``/``evict_at``/``sparsity`` carry a batch axis because under
+continuous batching each slot hosts a *different request*: one row's
+Algorithm-1 eviction schedule, sparsity profile, and per-layer budget must
+not leak into a neighbor admitted at a different time. Every field therefore
+has batch at axis 1, which is what makes the slot-refill ops below a single
+uniform masked select over any decode-state pytree.
+
+Invariants: valid slots are packed at the front in increasing ``pos`` order;
+invalid slots hold pos = -1 and score = 0.
 """
 from __future__ import annotations
 
@@ -80,10 +88,106 @@ def init_cache(*, n_layers: int, batch: int, n_kv_heads: int, capacity: int,
         pos=jnp.full((n_layers, batch, capacity), -1, jnp.int32),
         score=jnp.zeros((n_layers, batch, capacity), jnp.float32),
         length=jnp.zeros((n_layers, batch), jnp.int32),
-        budget=jnp.full((n_layers,), nominal, jnp.int32),
-        evict_at=jnp.full((n_layers,), nominal, jnp.int32),
-        sparsity=jnp.zeros((n_layers,), jnp.float32),
+        budget=jnp.full((n_layers, batch), nominal, jnp.int32),
+        evict_at=jnp.full((n_layers, batch), nominal, jnp.int32),
+        sparsity=jnp.zeros((n_layers, batch), jnp.float32),
     )
+
+
+# --------------------------------------------------------------------------
+# Per-slot lifecycle operations (full [L, B, ...] stacks) — the refill
+# primitives of continuous batching. Both are elementwise masked selects
+# (same sharding-preserving idiom as the one-hot append), so rows other than
+# ``slot`` pass through bit-identically and the ops compose with donation.
+# --------------------------------------------------------------------------
+
+def _slots_mask(n_slots: int, slots) -> tuple[jax.Array, jax.Array]:
+    """(sel [B] bool, idx [B] int32): which batch rows are named in
+    ``slots`` (scalar or [k] int32; -1 entries are no-ops) and, for each
+    selected row, the index into ``slots`` that named it."""
+    s = jnp.atleast_1d(jnp.asarray(slots, jnp.int32))
+    eq = jnp.arange(n_slots, dtype=jnp.int32)[:, None] == s[None, :]  # [B,k]
+    return eq.any(axis=1), jnp.argmax(eq, axis=1)
+
+
+def tree_update_slots(state, slots, rows_state):
+    """Overwrite the batch rows named in ``slots`` (scalar or [k]; -1 =
+    no-op) of a decode-state pytree with the corresponding rows of
+    ``rows_state`` (batch axis of size k at axis 1) — the admission
+    primitive, batched so one call admits a whole group of requests.
+
+    Works for *any* model family's decode state — slotted ``KVCache``,
+    rwkv6's recurrence matrices, rglru's hybrid dict — because every decode
+    state leaf in this codebase is laid out ``[L, B, ...]``.
+    """
+    def upd(leaf, rows):
+        sel, idx = _slots_mask(leaf.shape[1], slots)
+        gathered = jnp.take(rows.astype(leaf.dtype), idx, axis=1)
+        mask = sel.reshape((1, leaf.shape[1]) + (1,) * (leaf.ndim - 2))
+        return jnp.where(mask, gathered, leaf)
+    return jax.tree.map(upd, state, rows_state)
+
+
+def tree_update_slot(state, slot, row_state):
+    """Single-slot form of ``tree_update_slots`` (``row_state`` batch 1)."""
+    return tree_update_slots(state, slot, row_state)
+
+
+def tree_reset_slot(state, slots):
+    """Retire the batch rows named in ``slots`` (scalar or [k] int32, -1 =
+    no-op) of an arbitrary decode-state pytree. ``KVCache`` subtrees get the
+    full empty-slot treatment (``reset_slot``); plain recurrence leaves
+    (rwkv6 wkv matrices, rglru conv state, whisper cross-K/V) are zeroed."""
+    def zero_rows(sub):
+        def upd(leaf):
+            sel, _ = _slots_mask(leaf.shape[1], slots)
+            mask = sel.reshape((1, leaf.shape[1]) + (1,) * (leaf.ndim - 2))
+            return jnp.where(mask, jnp.zeros((), leaf.dtype), leaf)
+        return jax.tree.map(upd, sub)
+
+    def one(sub):
+        if isinstance(sub, KVCache):
+            return reset_slot(sub, slots)
+        return zero_rows(sub)
+    return jax.tree.map(one, state, is_leaf=lambda x: isinstance(x, KVCache))
+
+
+def reset_slot(cache: KVCache, slots) -> KVCache:
+    """Retire the batch rows named in ``slots`` (scalar or [k]; -1 = no-op)
+    across all layers: K/V and scores zeroed, positions invalidated,
+    occupancy 0. ``evict_at`` is parked at capacity so an empty (or dead,
+    still-decoding) slot cannot spuriously trigger a prune round before its
+    next admission overwrites the row's budget state. Rows not named pass
+    through bit-identically.
+    """
+    C = cache.capacity
+    sel, _ = _slots_mask(cache.k.shape[1], slots)
+
+    def fill(leaf, value):
+        mask = sel.reshape((1, leaf.shape[1]) + (1,) * (leaf.ndim - 2))
+        return jnp.where(mask, jnp.asarray(value, leaf.dtype), leaf)
+
+    return KVCache(
+        k=fill(cache.k, 0), v=fill(cache.v, 0), pos=fill(cache.pos, -1),
+        score=fill(cache.score, 0.0), length=fill(cache.length, 0),
+        budget=fill(cache.budget, C), evict_at=fill(cache.evict_at, C),
+        sparsity=fill(cache.sparsity, 0.0))
+
+
+def insert_slot(cache: KVCache, slot, row: KVCache) -> KVCache:
+    """Admit a freshly prefilled single-request cache (batch axis 1) into
+    batch row ``slot`` of a live cache. Capacities must match; all other
+    rows — K/V, positions, RASR scores, budgets, eviction thresholds —
+    pass through untouched."""
+    assert row.capacity == cache.capacity, (row.capacity, cache.capacity)
+    return tree_update_slot(cache, slot, row)
+
+
+# Donated forms of the slot ops (module-level so `models/api.py` and
+# `serving/engine.py` share one jit cache): the live state aliases
+# input→output and slot turnover mutates the standing allocation in place.
+update_slots_donated = jax.jit(tree_update_slots, donate_argnums=(0,))
+reset_slots_donated = jax.jit(tree_reset_slot, donate_argnums=(0,))
 
 
 # --------------------------------------------------------------------------

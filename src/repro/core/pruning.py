@@ -198,23 +198,40 @@ def prune_layer(layer: cache_lib.KVCache, cur_pos: jax.Array, *,
                 force: bool = False) -> cache_lib.KVCache:
     """One pruning round for a layer slice (all batch rows).
 
-    Triggered (lax.cond) when any row's occupancy reaches min(L_evict,
-    capacity·15/16) — or unconditionally when ``force``.
+    The trigger is PER ROW: a row prunes only when its own occupancy reaches
+    min(its L_evict, capacity·15/16) — or unconditionally when ``force``.
+    Rows below their threshold pass through bit-identically (their keep-set
+    is the full valid set, under which ``compact`` is the identity gather),
+    so one request's eviction schedule never depends on which neighbors
+    share the batch. That row-independence is what lets the continuous-
+    batching scheduler refill slots mid-decode and still reproduce
+    per-request generation exactly. The surrounding ``lax.cond`` skips the
+    whole round when no row triggered (the common decode step).
+
+    ``cur_pos`` may be a scalar (lockstep decode) or [B] (continuous
+    batching, one position per slot); ``layer.budget``/``layer.evict_at``
+    are per-row [B].
     """
     C = layer.capacity
     if policy.kind == FULLKV:
         return layer
 
+    B = layer.pos.shape[0]
+    cur_b = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (B,))
+    trigger_at = jnp.minimum(layer.evict_at, (C * 15) // 16)      # [B]
+    row_trig = (layer.length >= trigger_at) | force               # [B]
+
     def do_prune(l: cache_lib.KVCache) -> cache_lib.KVCache:
         dec = jax.vmap(
-            lambda s, p, n: decide_row(
-                s, p, n, cur_pos, policy=policy, budget=l.budget,
-                evict_at=l.evict_at, window=window)
-        )(l.score, l.pos, l.length)
-        compacted = cache_lib.compact(l, dec.keep)
-        # evict threshold: rows agree up to data-dependence; take the max so
-        # the most conservative row governs the next trigger.
-        new_evict = jnp.max(dec.new_evict_at).astype(jnp.int32)
+            lambda s, p, n, c, bg, ev: decide_row(
+                s, p, n, c, policy=policy, budget=bg, evict_at=ev,
+                window=window)
+        )(l.score, l.pos, l.length, cur_b, l.budget, l.evict_at)
+        keep = jnp.where(row_trig[:, None], dec.keep,
+                         cache_lib.valid_mask(l.pos))
+        compacted = cache_lib.compact(l, keep)
+        new_evict = jnp.where(row_trig, dec.new_evict_at,
+                              l.evict_at).astype(jnp.int32)
         return cache_lib.KVCache(
             k=compacted.k, v=compacted.v, pos=compacted.pos,
             score=compacted.score, length=compacted.length,
@@ -223,6 +240,4 @@ def prune_layer(layer: cache_lib.KVCache, cur_pos: jax.Array, *,
     if force:
         return do_prune(layer)
 
-    trigger_at = jnp.minimum(layer.evict_at, (C * 15) // 16)
-    triggered = jnp.any(layer.length >= trigger_at)
-    return jax.lax.cond(triggered, do_prune, lambda l: l, layer)
+    return jax.lax.cond(jnp.any(row_trig), do_prune, lambda l: l, layer)

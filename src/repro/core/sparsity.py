@@ -50,13 +50,30 @@ def layer_sparsity_from_probs(probs: jax.Array,
     return jnp.mean(s)
 
 
+def row_sparsity_from_probs(probs: jax.Array,
+                            where: jax.Array | None = None,
+                            n_valid: jax.Array | None = None) -> jax.Array:
+    """Per-request Hoyer sparsity of an attention-prob tensor [B, ..., K]
+    -> [B]: reduces over heads/query rows but keeps the batch axis, so each
+    serving slot carries its own layerwise sparsity estimate (a slot refilled
+    with a new request must not inherit its predecessor's — or its
+    neighbors' — attention statistics).
+    """
+    s = hoyer_sparsity(probs, axis=-1, where=where, n_valid=n_valid)
+    return jnp.mean(s.reshape(s.shape[0], -1), axis=-1) if s.ndim > 1 else s
+
+
 def allocate_budgets(sparsity: jax.Array, *, capacity: int, nominal: int,
                      min_budget: int, sink_len: int, recent_len: int) -> jax.Array:
     """Layerwise sparsity-aware budget allocation (spatial dimension).
 
-    ``sparsity``: [L] per-layer Hoyer estimates. Denser layers (low sparsity)
-    receive proportionally larger budgets; the total budget is conserved at
-    ``L * nominal`` so Lethe is iso-memory with a uniform allocator.
+    ``sparsity``: [L] per-layer Hoyer estimates *of one request*. Denser
+    layers (low sparsity) receive proportionally larger budgets; the total
+    budget is conserved at ``L * nominal`` so Lethe is iso-memory with a
+    uniform allocator. Batched callers vmap over the batch axis (see
+    ``allocate_budgets_batched``) so every serving slot gets its own
+    allocation — budget conservation is per request, exactly as in the
+    single-request paper setting.
 
     Returns int32 budgets [L], each in [min_budget, ~capacity).
     """
@@ -77,7 +94,15 @@ def allocate_budgets(sparsity: jax.Array, *, capacity: int, nominal: int,
     return budgets.astype(jnp.int32)
 
 
+def allocate_budgets_batched(sparsity: jax.Array, **kw) -> jax.Array:
+    """Per-request allocation over a batched sparsity estimate [L, B] ->
+    budgets [L, B] (vmap of ``allocate_budgets`` over the slot axis)."""
+    return jax.vmap(lambda sp: allocate_budgets(sp, **kw),
+                    in_axes=1, out_axes=1)(sparsity)
+
+
 def update_sparsity_ema(prev: jax.Array, observed: jax.Array,
                         ema: float) -> jax.Array:
-    """Temporal smoothing of the layerwise sparsity estimate ([L] arrays)."""
+    """Temporal smoothing of the layerwise sparsity estimate (shape-generic;
+    [L] or per-slot [L, B] / [B] arrays)."""
     return ema * prev + (1.0 - ema) * observed

@@ -179,8 +179,10 @@ def _cache_specs(cache: KVCache, mesh: Mesh, batch_size: int) -> KVCache:
             kv = P(None, None, None, None, None)
             vec = P(None, None, None)
         ln = P(None, None)
+    # budget/evict_at/sparsity are per-row [L, B] (continuous batching keeps
+    # per-request pruning state) — shard them like ``length``.
     return KVCache(k=kv, v=kv, pos=vec, score=vec, length=ln,
-                   budget=P(None), evict_at=P(None), sparsity=P(None))
+                   budget=ln, evict_at=ln, sparsity=ln)
 
 
 def state_specs(state: Any, cfg: ArchConfig, mesh: Mesh,

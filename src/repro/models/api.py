@@ -13,6 +13,7 @@ from typing import Any, Callable
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import cache as cache_lib
 from repro.core.policy import PolicyConfig
 from repro.models import rglru, rwkv6, transformer, vlm, whisper
 
@@ -49,6 +50,26 @@ class ModelAPI:
                           dtype=jnp.float32, **kw):
         return self.module.init_decode_state(
             self.cfg, policy, batch_size, dtype=dtype, **kw)
+
+    def prefill_into_slot(self, params, batch: dict, policy: PolicyConfig,
+                          state, slots, *, cache_dtype=jnp.float32):
+        """Slot-scoped prefill — the admission primitive of continuous
+        batching. Prefills a group of requests (``batch`` has batch size k,
+        row j destined for live slot ``slots[j]``) through the normal
+        per-family prefill (so each row's RASR scores, per-layer budgets
+        and forced prune round are exactly those of a solo run), then
+        overwrites the addressed batch rows of the live decode ``state``
+        with the resulting rows — a donated masked select, so every other
+        slot's K/V, scores, and budget state passes through bit-identically
+        and ``state`` is consumed.
+
+        Returns (last-token logits [k, V], new state).
+        """
+        logits, rows = self.prefill(params, batch, policy,
+                                    cache_dtype=cache_dtype)
+        state = cache_lib.update_slots_donated(
+            state, jnp.asarray(slots, jnp.int32), rows)
+        return logits, state
 
 
 _FAMILY_MODULES = {

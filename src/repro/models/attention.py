@@ -103,7 +103,7 @@ def prefill_stats(qh: jax.Array, kh: jax.Array, cfg: ArchConfig,
     """Observation-window RASR init scores + layerwise Hoyer sparsity.
 
     qh [B, Hq, S, Dh], kh [B, Hkv, S, Dh] (post-RoPE).
-    Returns (scores [B, S], sparsity scalar)."""
+    Returns (scores [B, S], sparsity [B] — one estimate per request)."""
     B, Hq, S, Dh = qh.shape
     W = min(policy.obs_window, S)
     q_win = jax.lax.dynamic_slice_in_dim(qh, S - W, W, axis=2)
@@ -111,7 +111,7 @@ def prefill_stats(qh: jax.Array, kh: jax.Array, cfg: ArchConfig,
         q_win, kh, win_start=S - W, window=window,
         softcap=cfg.attn_logit_softcap, scale=cfg.d_head ** -0.5)
     scores = rasr.prefill_scores(colsums, W)
-    spars = sparsity_lib.layer_sparsity_from_probs(probs)
+    spars = sparsity_lib.row_sparsity_from_probs(probs)
     return scores, spars
 
 
@@ -121,32 +121,36 @@ def decode_attend(x: jax.Array, p: dict, layer: cache_lib.KVCache,
                   prune: bool = True) -> tuple[jax.Array, cache_lib.KVCache]:
     """One decode step for one layer. x [B, D] -> (attn_out [B, D], cache').
 
-    Appends the token's K/V, runs the fused masked-attention + RASR kernel
-    (attention output, probability column-sums, and the Eq. 5 score EMA in
-    one pass — no separate ``rasr.update_scores`` sweep over [B, C]),
-    updates the layerwise sparsity estimate, then runs the (conditionally
-    triggered) pruning round. The cache's ``length`` bounds the kernel's
-    occupancy-adaptive early exit, so attention cost tracks live tokens.
+    ``cur_pos`` may be a scalar (all rows at one position — lockstep decode)
+    or [B] (continuous batching: each slot hosts a request at its own
+    position). Appends the token's K/V, runs the fused masked-attention +
+    RASR kernel (attention output, probability column-sums, and the Eq. 5
+    score EMA in one pass — no separate ``rasr.update_scores`` sweep over
+    [B, C]), updates the per-row layerwise sparsity estimate, then runs the
+    (conditionally triggered) pruning round. The cache's ``length`` bounds
+    the kernel's occupancy-adaptive early exit, so attention cost tracks
+    live tokens.
     """
     B, D = x.shape
     q, k, v = project_qkv(x[:, None, :], p, cfg)   # [B, 1, H, Dh]
-    pos_b = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (B, 1))
-    q, k = _rope(q, k, pos_b, cfg,
+    cur = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (B,))
+    q, k = _rope(q, k, cur[:, None], cfg,
                  positions3 if positions3 is None else positions3[:, :, None])
     q1 = q[:, 0]                                   # [B, Hq, Dh]
     k1 = jnp.swapaxes(k, 1, 2)[:, :, 0]            # [B, Hkv, Dh]
     v1 = jnp.swapaxes(v, 1, 2)[:, :, 0]
 
-    layer = cache_lib.append_token(layer, k1, v1, cur_pos, policy.init_score)
+    layer = cache_lib.append_token(layer, k1, v1, cur, policy.init_score)
     out, probsum, new_score = ops.decode_attention_fused(
-        q1, layer.k, layer.v, layer.pos, cur_pos, layer.score,
+        q1, layer.k, layer.v, layer.pos, cur, layer.score,
         gamma=policy.gamma, window=window, softcap=cfg.attn_logit_softcap,
         scale=cfg.d_head ** -0.5, lengths=layer.length)
     layer = dataclasses.replace(layer, score=new_score)
-    # layerwise sparsity EMA from this step's head-aggregated attention
+    # per-row layerwise sparsity EMA from this step's head-aggregated
+    # attention (each slot tracks its own request's profile)
     valid = cache_lib.valid_mask(layer.pos)
     p_norm = probsum / cfg.n_heads
-    obs = sparsity_lib.layer_sparsity_from_probs(
+    obs = sparsity_lib.row_sparsity_from_probs(
         p_norm, where=valid, n_valid=jnp.maximum(layer.length, 2))
     new_spars = sparsity_lib.update_sparsity_ema(
         layer.sparsity, obs, policy.sparsity_ema)
@@ -154,7 +158,7 @@ def decode_attend(x: jax.Array, p: dict, layer: cache_lib.KVCache,
 
     if prune and policy.prunes:
         from repro.core import pruning
-        layer = pruning.prune_layer(layer, cur_pos, policy=policy,
+        layer = pruning.prune_layer(layer, cur, policy=policy,
                                     window=window)
     attn_out = out.reshape(B, -1) @ p["wo"]
     return attn_out, layer

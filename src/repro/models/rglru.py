@@ -247,7 +247,7 @@ def prefill(params, tokens, cfg: ArchConfig, policy: PolicyConfig, *,
         k=k, v=v, scores=s, capacity=C))
     k_c, v_c, pos_c, score_c, len_c = fill(k_all, v_all, sc_all)
     nominal = min(policy.nominal_budget, C)
-    budgets = jnp.full((len(attn_ids),), nominal, jnp.int32)
+    budgets = jnp.full((len(attn_ids), B), nominal, jnp.int32)
     kv = cache_lib.KVCache(
         k=k_c, v=v_c, pos=pos_c, score=score_c, length=len_c,
         budget=budgets, evict_at=budgets, sparsity=sp_all)

@@ -225,7 +225,7 @@ def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
     k_c, v_c, pos_c, score_c, len_c = fill(k_all, v_all, scores_all)
 
     if policy.kind == LETHE:
-        budgets = sparsity_lib.allocate_budgets(
+        budgets = sparsity_lib.allocate_budgets_batched(
             spars_all, capacity=C,
             nominal=min(policy.nominal_budget, C),
             min_budget=max(policy.sink_len + policy.recent_len + 2,
@@ -233,7 +233,8 @@ def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
                                * min(policy.nominal_budget, C))),
             sink_len=policy.sink_len, recent_len=policy.recent_len)
     else:
-        budgets = _init_budgets(cfg, policy)
+        budgets = jnp.broadcast_to(_init_budgets(cfg, policy)[:, None],
+                                   (cfg.n_layers, B))
     cache = cache_lib.KVCache(
         k=k_c, v=v_c, pos=pos_c, score=score_c, length=len_c,
         budget=budgets, evict_at=jnp.minimum(budgets, C).astype(jnp.int32),
@@ -291,10 +292,11 @@ def decode_step(params: dict, cache: cache_lib.KVCache, token: jax.Array,
 
     x, new_cache = layer_scan(body, x, (params["layers"], cache, windows))
 
-    # Temporal re-allocation of spatial budgets from the sparsity EMA.
+    # Temporal re-allocation of spatial budgets from the per-row sparsity
+    # EMA (each serving slot gets its own per-layer allocation).
     if policy.kind == LETHE:
         C = cache.capacity
-        budgets = sparsity_lib.allocate_budgets(
+        budgets = sparsity_lib.allocate_budgets_batched(
             new_cache.sparsity, capacity=C,
             nominal=min(policy.nominal_budget, C),
             min_budget=max(policy.sink_len + policy.recent_len + 2,
@@ -318,7 +320,8 @@ def init_decode_state(cfg: ArchConfig, policy: PolicyConfig, batch: int,
         n_layers=cfg.n_layers, batch=batch, n_kv_heads=cfg.n_kv_heads,
         capacity=policy.capacity, d_head=cfg.d_head, policy=policy,
         dtype=dtype)
-    budgets = _init_budgets(cfg, policy)
+    budgets = jnp.broadcast_to(_init_budgets(cfg, policy)[:, None],
+                               (cfg.n_layers, batch))
     return cache_lib.KVCache(
         k=cache.k, v=cache.v, pos=cache.pos, score=cache.score,
         length=cache.length, budget=budgets,

@@ -182,7 +182,7 @@ def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
         k=k, v=v, scores=s, capacity=C))
     k_c, v_c, pos_c, score_c, len_c = fill(k_all, v_all, sc_all)
     nominal = min(policy.nominal_budget, C)
-    budgets = jnp.full((cfg.n_layers,), nominal, jnp.int32)
+    budgets = jnp.full((cfg.n_layers, B), nominal, jnp.int32)
     kv = cache_lib.KVCache(k=k_c, v=v_c, pos=pos_c, score=score_c,
                            length=len_c, budget=budgets, evict_at=budgets,
                            sparsity=sp_all)
@@ -203,9 +203,8 @@ def decode_step(params: dict, state: dict, token: jax.Array, cur_pos,
     from repro.kernels import ops
     kv, ck, cv = state["kv"], state["cross_k"], state["cross_v"]
     B = token.shape[0]
-    pos_emb = jax.lax.dynamic_index_in_dim(params["pos_embed"],
-                                           jnp.asarray(cur_pos, jnp.int32),
-                                           keepdims=False)
+    # cur_pos may be scalar or [B] (continuous batching: per-slot positions)
+    pos_emb = params["pos_embed"][jnp.asarray(cur_pos, jnp.int32)]
     x = params["embed"][token] + pos_emb
 
     S_enc = ck.shape[-2]

@@ -1,12 +1,22 @@
-"""Serving engine: lockstep batched prefill + decode with Lethe cache
-management.
+"""Serving engine: batched prefill + decode with Lethe cache management.
 
-Two decode drivers:
+Two whole-request decode drivers (both EOS-aware — pass ``eos_id`` and a
+row freezes once it emits EOS; decode stops early when every row is done):
   * ``generate``      — Python-stepped loop (per-step stats: cache occupancy,
                         prune activity, memory) used by benchmarks/examples.
-  * ``generate_scan`` — whole decode under one ``lax.scan`` (single XLA
-                        program; the throughput-measurement path and the
+  * ``generate_scan`` — whole decode under one XLA program (``lax.scan``,
+                        or an early-exiting ``lax.while_loop`` when an EOS
+                        is set; the throughput-measurement path and the
                         shape that ``serve_step`` dry-runs lower).
+
+Plus the slot-scoped primitives the continuous-batching scheduler composes
+(per-request lifecycles over a fixed-width live batch):
+  * ``new_decode_state`` — empty B-slot live state.
+  * ``admit_slot``       — B=1 prefill of one request, inserted into a slot
+                           of the live state (donated masked select).
+  * ``release_slot``     — retire a finished slot back to empty.
+  * ``decode_segment``   — ``segment_len`` greedy steps with *per-row*
+                           positions and done-flags under one ``lax.scan``.
 """
 from __future__ import annotations
 
@@ -49,14 +59,29 @@ def _cache_stats(state) -> dict:
 
 @dataclass
 class GenerationResult:
-    tokens: np.ndarray                 # [B, N]
+    tokens: np.ndarray                 # [B, N] (rows frozen at eos_id once done)
     prefill_seconds: float
     decode_seconds: float
     tokens_per_second: float
-    steps: int
+    steps: int                         # decode steps actually executed (≤ N)
     cache_bytes: int
     live_token_trace: list = field(default_factory=list)
     logits_trace: Any = None
+    gen_lens: np.ndarray | None = None  # [B] tokens up to & incl. EOS
+    finished: np.ndarray | None = None  # [B] bool — row emitted EOS
+
+
+def _gen_lens(tokens: np.ndarray, eos_id: int | None) -> tuple[np.ndarray,
+                                                               np.ndarray]:
+    """Per-row generated length (truncated after the first EOS, inclusive)
+    and finished flags. tokens [B, N]."""
+    B, N = tokens.shape
+    if eos_id is None:
+        return np.full((B,), N, np.int32), np.zeros((B,), bool)
+    hit = tokens == eos_id
+    finished = hit.any(axis=1)
+    first = np.where(finished, hit.argmax(axis=1) + 1, N)
+    return first.astype(np.int32), finished
 
 
 class Engine:
@@ -68,6 +93,8 @@ class Engine:
         self.params = params
         self.policy = policy
         self.cache_dtype = cache_dtype
+        self._segment_cache: dict = {}
+        self._scan_cache: dict = {}
 
     def prefill(self, batch: dict):
         return self.model.prefill(self.params, batch, self.policy,
@@ -75,6 +102,7 @@ class Engine:
 
     def generate(self, batch: dict, max_new_tokens: int, *,
                  temperature: float = 0.0, seed: int = 0,
+                 eos_id: int | None = None,
                  trace_live: bool = False,
                  collect_logits: bool = False) -> GenerationResult:
         B, S = batch["tokens"].shape
@@ -85,17 +113,24 @@ class Engine:
 
         key = jax.random.PRNGKey(seed)
         tok = _sample(logits, key, temperature)
+        done = ((tok == eos_id) if eos_id is not None
+                else jnp.zeros((B,), bool))
         s_img = (batch.get("img_embeds").shape[1]
                  if batch.get("img_embeds") is not None else 0)
         out = [np.asarray(tok)]
         logit_rows = [np.asarray(logits)] if collect_logits else None
         live_trace = []
         for t in range(max_new_tokens - 1):
+            if eos_id is not None and bool(jnp.all(done)):
+                break   # EOS-aware early termination
             cur = jnp.asarray(S + s_img + t, jnp.int32)
             key, sub = jax.random.split(key)
             logits, state = self.model.decode_step(
                 self.params, state, tok, cur, self.policy)
             tok = _sample(logits, sub, temperature)
+            if eos_id is not None:
+                tok = jnp.where(done, eos_id, tok)   # freeze finished rows
+                done = done | (tok == eos_id)
             out.append(np.asarray(tok))
             if collect_logits:
                 logit_rows.append(np.asarray(logits))
@@ -104,23 +139,35 @@ class Engine:
         jax.block_until_ready(tok)
         t2 = time.perf_counter()
         stats = _cache_stats(state)
-        n = max_new_tokens
+        steps = len(out)
+        tokens = np.stack(out, axis=1)
+        if steps < max_new_tokens:   # pad early-terminated decode to full N
+            pad = np.full((B, max_new_tokens - steps), eos_id, np.int32)
+            tokens = np.concatenate([tokens, pad], axis=1)
+        lens, finished = _gen_lens(tokens, eos_id)
         return GenerationResult(
-            tokens=np.stack(out, axis=1),
+            tokens=tokens,
             prefill_seconds=t1 - t0,
             decode_seconds=t2 - t1,
-            tokens_per_second=B * n / max(t2 - t1, 1e-9),
-            steps=n,
+            tokens_per_second=B * steps / max(t2 - t1, 1e-9),
+            steps=steps,
             cache_bytes=stats["cache_bytes"],
             live_token_trace=live_trace,
             logits_trace=(np.stack(logit_rows, axis=1)
                           if collect_logits else None),
+            gen_lens=lens, finished=finished,
         )
 
     def generate_scan(self, batch: dict, max_new_tokens: int, *,
-                      temperature: float = 0.0, seed: int = 0
-                      ) -> GenerationResult:
-        """Whole decode inside one jitted lax.scan (throughput path)."""
+                      temperature: float = 0.0, seed: int = 0,
+                      eos_id: int | None = None) -> GenerationResult:
+        """Whole decode inside one XLA program (throughput path).
+
+        Without an EOS this is the unchanged ``lax.scan``. With ``eos_id``
+        the decode becomes a ``lax.while_loop`` that terminates as soon as
+        every row has emitted EOS — same freeze semantics as ``generate``,
+        so the two drivers stay token-identical under greedy decoding.
+        """
         B, S = batch["tokens"].shape
         s_img = (batch.get("img_embeds").shape[1]
                  if batch.get("img_embeds") is not None else 0)
@@ -129,35 +176,174 @@ class Engine:
         logits.block_until_ready()
         t1 = time.perf_counter()
 
-        model, params, policy = self.model, self.params, self.policy
-
-        def step(carry, t):
-            state, tok, key = carry
-            key, sub = jax.random.split(key)
-            logits, state = model.module.decode_step(
-                params, state, tok, S + s_img + t, model.cfg, policy)
-            nxt = _sample(logits, sub, temperature)
-            return (state, nxt, key), nxt
-
         tok0 = _sample(logits, jax.random.PRNGKey(seed), temperature)
-
-        # Donate the prefill state into the scan: the whole decode loop then
-        # runs against one in-place cache allocation (the per-step
-        # decode_step donation covers the Python-stepped `generate` driver).
-        @functools.partial(jax.jit, donate_argnums=(0,))
-        def run(state, tok0, key):
-            (state, _, _), toks = jax.lax.scan(
-                step, (state, tok0, key),
-                jnp.arange(max_new_tokens - 1, dtype=jnp.int32))
-            return state, toks
-
-        state, toks = run(state, tok0, jax.random.PRNGKey(seed + 1))
+        run = self._scan_run(B, S, s_img, max_new_tokens, temperature, eos_id)
+        state, toks, t_done = run(state, tok0, jax.random.PRNGKey(seed + 1))
         jax.block_until_ready(toks)
         t2 = time.perf_counter()
         tokens = np.concatenate(
             [np.asarray(tok0)[:, None], np.asarray(toks).T], axis=1)
+        steps = int(t_done) + 1
         stats = _cache_stats(state)
+        lens, finished = _gen_lens(tokens, eos_id)
         return GenerationResult(
             tokens=tokens, prefill_seconds=t1 - t0, decode_seconds=t2 - t1,
-            tokens_per_second=B * max_new_tokens / max(t2 - t1, 1e-9),
-            steps=max_new_tokens, cache_bytes=stats["cache_bytes"])
+            tokens_per_second=B * steps / max(t2 - t1, 1e-9),
+            steps=steps, cache_bytes=stats["cache_bytes"],
+            gen_lens=lens, finished=finished)
+
+    def _scan_run(self, B: int, S: int, s_img: int, max_new_tokens: int,
+                  temperature: float, eos_id: int | None):
+        """Build (or fetch) the jitted whole-decode program for one serving
+        shape. Cached per engine so repeated ``generate_scan`` calls with
+        the same shape — the scheduler's lockstep mode, throughput
+        benchmarks — pay tracing + compilation once."""
+        cache_key = (B, S, s_img, max_new_tokens, temperature, eos_id)
+        cached = self._scan_cache.get(cache_key)
+        if cached is not None:
+            return cached
+
+        model, params, policy = self.model, self.params, self.policy
+        N1 = max_new_tokens - 1
+
+        def one_step(state, tok, key, t):
+            key, sub = jax.random.split(key)
+            logits, state = model.module.decode_step(
+                params, state, tok, S + s_img + t, model.cfg, policy)
+            return state, _sample(logits, sub, temperature), key
+
+        # Donate the prefill state into the loop: the whole decode then runs
+        # against one in-place cache allocation (the per-step decode_step
+        # donation covers the Python-stepped `generate` driver).
+        if eos_id is None:
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def run(state, tok0, key):
+                def step(carry, t):
+                    state, tok, key = carry
+                    state, nxt, key = one_step(state, tok, key, t)
+                    return (state, nxt, key), nxt
+                (state, _, _), toks = jax.lax.scan(
+                    step, (state, tok0, key),
+                    jnp.arange(N1, dtype=jnp.int32))
+                return state, toks, jnp.asarray(N1, jnp.int32)
+        else:
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def run(state, tok0, key):
+                out0 = jnp.full((N1, B), eos_id, jnp.int32)
+                done0 = tok0 == eos_id
+
+                def cond(c):
+                    _, _, _, t, done, _ = c
+                    return (t < N1) & ~jnp.all(done)
+
+                def body(c):
+                    state, tok, key, t, done, out = c
+                    state, nxt, key = one_step(state, tok, key, t)
+                    nxt = jnp.where(done, eos_id, nxt)
+                    done = done | (nxt == eos_id)
+                    return (state, nxt, key, t + 1, done,
+                            out.at[t].set(nxt))
+
+                state, _, _, t, _, out = jax.lax.while_loop(
+                    cond, body, (state, tok0, key,
+                                 jnp.asarray(0, jnp.int32), done0, out0))
+                return state, out, t
+
+        self._scan_cache[cache_key] = run
+        return run
+
+    # ---- continuous-batching slot primitives ------------------------------
+    # A live decode state is a fixed-width batch of B slots; requests are
+    # admitted into / retired from individual slots between decode segments.
+    # All three mutators are jitted with the live state donated, so slot
+    # turnover is an in-place masked select over the standing allocation.
+
+    def new_decode_state(self, batch_slots: int, **kw):
+        """Empty live state with ``batch_slots`` decode slots."""
+        return self.model.init_decode_state(
+            self.policy, batch_slots, dtype=self.cache_dtype, **kw)
+
+    def admit_slots(self, state, slot_ids, batch: dict):
+        """Admit a group of same-length requests (``batch["tokens"]`` is
+        [k, S], row j destined for live slot ``slot_ids[j]``) in one
+        prefill + one donated insert (``ModelAPI.prefill_into_slot``).
+        Each row goes through the full per-request policy machinery (RASR
+        init, spatial budgets, forced prune round) — identical to a solo
+        prefill, since every statistic is per-row.
+        Returns (state', greedy first tokens [k])."""
+        logits, state = self.model.prefill_into_slot(
+            self.params, batch, self.policy, state, slot_ids,
+            cache_dtype=self.cache_dtype)
+        return state, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def admit_slot(self, state, slot: int, batch: dict):
+        """Admit one request (``batch`` is a B=1 prompt) into slot ``slot``
+        of the live state: solo prefill through the full policy machinery,
+        then a donated insert. Returns (state', last-token logits [V])."""
+        logits, state = self.model.prefill_into_slot(
+            self.params, batch, self.policy, state, [slot],
+            cache_dtype=self.cache_dtype)
+        return state, logits[0]
+
+    def release_slots(self, state, slot_ids, *, pad_to: int | None = None):
+        """Retire a group of slots back to empty (K/V zeroed, pos −1,
+        occupancy 0, eviction threshold parked at capacity). ``pad_to``
+        right-pads the id list with -1 (no-op) so every call shares one
+        compiled program regardless of how many slots retire."""
+        ids = list(slot_ids)
+        if pad_to is not None:
+            ids += [-1] * (pad_to - len(ids))
+        return cache_lib.reset_slots_donated(state,
+                                             jnp.asarray(ids, jnp.int32))
+
+    def release_slot(self, state, slot: int):
+        """Single-slot form of ``release_slots``."""
+        return self.release_slots(state, [slot])
+
+    def decode_segment(self, state, tok, pos, done, n_steps: int, *,
+                       eos_id: int | None = None):
+        """Run ``n_steps`` greedy decode steps over the live batch with
+        per-row positions — the inner loop of continuous batching, one
+        ``lax.scan`` per segment.
+
+        ``tok``/``pos``/``done``: [B] — each slot's last emitted token, its
+        next position, and whether it is finished (finished/empty slots keep
+        stepping but emit frozen ``eos_id`` tokens; their wasted work is
+        bounded by the segment length, which is the scheduler's refill
+        granularity). Returns (state', tokens [B, n_steps], pos', done').
+        """
+        key = (n_steps, eos_id)
+        fn = self._segment_cache.get(key)
+        if fn is None:
+            model, params, policy = self.model, self.params, self.policy
+
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def fn(state, tok, pos, done):
+                def step(carry, _):
+                    state, tok, pos, done = carry
+                    logits, state = model.module.decode_step(
+                        params, state, tok, pos, model.cfg, policy)
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    if eos_id is not None:
+                        nxt = jnp.where(done, eos_id, nxt)
+                        done = done | (nxt == eos_id)
+                    return (state, nxt, pos + 1, done), nxt
+
+                (state, tok, pos, done), toks = jax.lax.scan(
+                    step, (state, tok, pos, done), None, length=n_steps)
+                return state, jnp.swapaxes(toks, 0, 1), pos, done
+
+            self._segment_cache[key] = fn
+        return fn(state, jnp.asarray(tok, jnp.int32),
+                  jnp.asarray(pos, jnp.int32), jnp.asarray(done, bool))
+
+    def slot_lengths(self, state) -> np.ndarray:
+        """Per-slot live-token occupancy, maxed over layers/caches ([B]).
+        Telemetry for the capacity invariant: never exceeds ``capacity``."""
+        caches = [x for x in jax.tree.leaves(
+            state, is_leaf=lambda t: isinstance(t, cache_lib.KVCache))
+            if isinstance(x, cache_lib.KVCache)]
+        if not caches:
+            return np.zeros((0,), np.int32)
+        return np.max(np.stack([np.asarray(c.length).max(axis=0)
+                                for c in caches]), axis=0)

@@ -1,21 +1,47 @@
-"""Request scheduler: continuous lockstep batching over fixed decode slots.
+"""Request scheduler: continuous batching over a fixed-width live batch.
 
-Requests queue up, get packed into a fixed-width batch (right-aligned padded
-prompts so every row's last prompt token sits at the same position), decode
-in lockstep, and finished rows are refilled from the queue between decode
-segments. This is the serving shape of the paper's multi-batch experiments
-(Tables 2–3: batch sizes 1..32 under memory pressure).
+The serving shape of the paper's multi-batch experiments (Tables 2–3: batch
+sizes 1..32 under memory pressure), under the ROADMAP's mixed-traffic regime
+where request lengths differ wildly. Two scheduling modes:
+
+* ``run()`` — **continuous batching** (the default). The live decode state
+  has ``batch_slots`` slots; decode proceeds in fixed segments of
+  ``segment_len`` steps (one ``lax.scan`` each, per-row positions). Every
+  request walks the lifecycle
+
+      QUEUED -> PREFILLING -> DECODING -> FINISHED (EOS or length)
+
+  and between segments finished slots are retired (``Engine.release_slot``)
+  and queued requests admitted into them (``Engine.admit_slot``: a solo B=1
+  prefill inserted into the live state). Because pruning, RASR scores,
+  sparsity estimates and per-layer budgets are all per-row, a request's
+  tokens are exactly those of a solo ``Engine.generate`` run — neighbors
+  and admission order cannot change them; only latency changes.
+
+* ``run_lockstep()`` — the old run-to-completion mode kept as the
+  throughput baseline: requests are packed into right-aligned padded
+  batches and every batch decodes until its *longest* request finishes, so
+  one long reasoning request holds all slots hostage and finished rows burn
+  kernel work on dead slots. ``benchmarks/serving_traffic.py`` measures the
+  gap.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Iterable
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.engine import Engine
+
+# Request lifecycle states (per-uid log in ``Scheduler.lifecycle``).
+QUEUED = "queued"
+PREFILLING = "prefilling"
+DECODING = "decoding"
+FINISHED = "finished"
 
 
 @dataclasses.dataclass
@@ -28,22 +54,162 @@ class Request:
 @dataclasses.dataclass
 class Completion:
     uid: int
-    tokens: np.ndarray
-    latency_steps: int
+    tokens: np.ndarray          # generated tokens (incl. EOS if emitted)
+    latency_steps: int          # == len(tokens)
+    finish_reason: str = "length"       # "eos" | "length"
+    queue_wait_s: float = 0.0   # submit -> prefill start
+    ttft_s: float = 0.0         # submit -> first token (incl. queue wait)
+    decode_steps: int = 0       # decode steps after the prefill token
+    tokens_per_second: float = 0.0      # generated tokens / residency time
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    tokens: list
+    admit_ts: float
+    ttft: float = 0.0
 
 
 class Scheduler:
     def __init__(self, engine: Engine, batch_slots: int, pad_token: int = 0,
-                 segment_len: int = 32):
+                 segment_len: int = 32, eos_id: int | None = None,
+                 track_occupancy: bool = False):
         self.engine = engine
         self.batch_slots = batch_slots
         self.pad_token = pad_token
         self.segment_len = segment_len
+        self.eos_id = eos_id
+        self.track_occupancy = track_occupancy
         self.queue: collections.deque[Request] = collections.deque()
         self.completed: list[Completion] = []
+        self.lifecycle: dict[int, list[str]] = {}
+        self._submit_ts: dict[int, float] = {}
+        # telemetry (filled by run()): per-segment live-slot counts and the
+        # max per-slot cache occupancy ever observed across refills
+        self.occupancy_trace: list[int] = []
+        self.max_slot_tokens: int = 0
 
     def submit(self, reqs: Iterable[Request]) -> None:
-        self.queue.extend(reqs)
+        now = time.perf_counter()
+        for r in reqs:
+            self.queue.append(r)
+            self._submit_ts[r.uid] = now
+            self.lifecycle[r.uid] = [QUEUED]
+
+    # ---- continuous batching ---------------------------------------------
+
+    def _finish(self, slot: _Slot, reason: str) -> None:
+        now = time.perf_counter()
+        r = slot.req
+        toks = np.asarray(slot.tokens, np.int32)
+        resid = max(now - slot.admit_ts, 1e-9)
+        self.lifecycle[r.uid].append(FINISHED)
+        self.completed.append(Completion(
+            uid=r.uid, tokens=toks, latency_steps=len(toks),
+            finish_reason=reason,
+            queue_wait_s=slot.admit_ts - self._submit_ts[r.uid],
+            ttft_s=slot.ttft - self._submit_ts[r.uid],
+            decode_steps=len(toks) - 1,
+            tokens_per_second=len(toks) / resid))
+
+    def run(self) -> list[Completion]:
+        """Drain the queue with continuous batching; returns completions
+        (uid-ordered). Greedy decoding (the deterministic serving mode)."""
+        eng = self.engine
+        B = self.batch_slots
+        eos = self.eos_id
+        state = eng.new_decode_state(B)
+        slots: list[_Slot | None] = [None] * B
+        tok = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        done = np.ones((B,), bool)          # empty slots are frozen
+
+        while self.queue or any(s is not None for s in slots):
+            # -- between segments: admit queued requests into free slots.
+            # Admissions are grouped by prompt length so one prefill + one
+            # donated insert covers a whole refill wave; the loop repeats in
+            # case a request finished at its very first token and freed its
+            # slot again.
+            while self.queue and any(s is None for s in slots):
+                pending = []
+                for i in range(B):
+                    if slots[i] is None and self.queue:
+                        pending.append((i, self.queue.popleft()))
+                admit_ts = time.perf_counter()
+                by_len: dict[int, list] = {}
+                for i, r in pending:
+                    self.lifecycle[r.uid].append(PREFILLING)
+                    by_len.setdefault(len(r.prompt), []).append((i, r))
+                for _, group in sorted(by_len.items()):
+                    ids = [i for i, _ in group]
+                    prompts = np.stack([r.prompt for _, r in group]
+                                       ).astype(np.int32)
+                    state, first = eng.admit_slots(
+                        state, ids, {"tokens": jnp.asarray(prompts)})
+                    first = np.asarray(first)
+                    ttft = time.perf_counter()
+                    for (i, r), f in zip(group, first):
+                        slot = _Slot(req=r, tokens=[int(f)],
+                                     admit_ts=admit_ts, ttft=ttft)
+                        if eos is not None and f == eos:
+                            self._finish(slot, "eos")
+                        elif r.max_new_tokens <= 1:
+                            self._finish(slot, "length")
+                        else:
+                            self.lifecycle[r.uid].append(DECODING)
+                            slots[i] = slot
+                            tok[i] = f
+                            pos[i] = len(r.prompt)
+                            done[i] = False
+
+            # -- reset every unoccupied slot (batched, one fused op; a
+            # no-op at steady state when all slots are live). Re-resetting
+            # idle slots each boundary matters: decode_segment still steps
+            # them, so without it a dead row's occupancy would creep up to
+            # the prune trigger during a long drain-out tail — this bounds
+            # dead-row occupancy to segment_len. -------------------------
+            to_reset = [i for i in range(B) if slots[i] is None]
+            if to_reset:
+                state = eng.release_slots(state, to_reset, pad_to=B)
+
+            active = [i for i in range(B) if slots[i] is not None]
+            self.occupancy_trace.append(len(active))
+            if not active:
+                break                        # queue drained, nothing live
+
+            # -- one decode segment over the live batch --------------------
+            state, seg, pos_j, done_j = eng.decode_segment(
+                state, tok, pos, done, self.segment_len, eos_id=eos)
+            seg = np.asarray(seg)
+            pos, done = np.array(pos_j), np.array(done_j)
+            tok = seg[:, -1].astype(np.int32)
+            if self.track_occupancy:
+                self.max_slot_tokens = max(
+                    self.max_slot_tokens, int(eng.slot_lengths(state).max()))
+
+            # -- harvest: retire slots that finished inside the segment ----
+            for i in active:
+                slot = slots[i]
+                want = slot.req.max_new_tokens
+                reason = None
+                for t in seg[i]:
+                    slot.tokens.append(int(t))
+                    if eos is not None and t == eos:
+                        reason = "eos"
+                        break
+                    if len(slot.tokens) >= want:
+                        reason = "length"
+                        break
+                if reason is not None:
+                    self._finish(slot, reason)
+                    slots[i] = None
+                    done[i] = True
+
+        self.completed.sort(key=lambda c: c.uid)
+        return self.completed
+
+    # ---- lockstep baseline -----------------------------------------------
 
     def _take_batch(self) -> list[Request]:
         batch = []
@@ -51,20 +217,39 @@ class Scheduler:
             batch.append(self.queue.popleft())
         return batch
 
-    def run(self) -> list[Completion]:
-        """Drain the queue; returns completions (uid-ordered)."""
+    def run_lockstep(self) -> list[Completion]:
+        """Drain the queue run-to-completion (the pre-continuous baseline):
+        each packed batch decodes ``max(max_new_tokens)`` steps (or until
+        every row hits EOS), so short requests wait on the batch's longest.
+        Returns completions (uid-ordered)."""
         while self.queue:
             batch = self._take_batch()
+            t_batch = time.perf_counter()
             S = max(len(r.prompt) for r in batch)
             toks = np.full((len(batch), S), self.pad_token, np.int32)
             for i, r in enumerate(batch):
                 toks[i, S - len(r.prompt):] = r.prompt  # right-aligned
             want = max(r.max_new_tokens for r in batch)
-            res = self.engine.generate({"tokens": jnp.asarray(toks)}, want)
+            res = self.engine.generate_scan({"tokens": jnp.asarray(toks)},
+                                            want, eos_id=self.eos_id)
+            t_done = time.perf_counter()
+            # residency = batch start -> batch done, matching run()'s
+            # admit->finish accounting so per-request tok/s is comparable
+            resid = max(t_done - t_batch, 1e-9)
             for i, r in enumerate(batch):
+                self.lifecycle[r.uid] += [PREFILLING, DECODING, FINISHED]
+                n = r.max_new_tokens
+                gl = int(res.gen_lens[i])       # EOS-truncated (inclusive)
+                row = res.tokens[i, :min(n, gl)]
+                reason = ("eos" if res.finished[i] and gl <= n
+                          else "length")
                 self.completed.append(Completion(
-                    uid=r.uid,
-                    tokens=res.tokens[i, :r.max_new_tokens],
-                    latency_steps=r.max_new_tokens))
+                    uid=r.uid, tokens=row, latency_steps=len(row),
+                    finish_reason=reason,
+                    queue_wait_s=t_batch - self._submit_ts[r.uid],
+                    ttft_s=(t_batch - self._submit_ts[r.uid]
+                            + res.prefill_seconds),
+                    decode_steps=len(row) - 1,
+                    tokens_per_second=len(row) / resid))
         self.completed.sort(key=lambda c: c.uid)
         return self.completed

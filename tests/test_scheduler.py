@@ -1,0 +1,332 @@
+"""Continuous-batching scheduler battery.
+
+Covers the serving-core guarantees DESIGN.md §Serving promises:
+  * differential — continuous batching reproduces solo per-request greedy
+    tokens exactly, for every policy, under any admission order;
+  * lifecycle/starvation fuzz (hypothesis) — random request mixes all
+    complete exactly once, per-slot cache occupancy never exceeds capacity
+    across refills;
+  * slot isolation — reset/insert leave every other row bit-identical
+    (and the slot ops donate their input buffers, PR-1 style);
+  * EOS-aware early termination in both whole-request decode drivers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import cache as cache_lib
+from repro.core.policy import make_policy
+from repro.models.api import build_model
+from repro.serving.engine import Engine
+from repro.serving.scheduler import (DECODING, FINISHED, PREFILLING, QUEUED,
+                                     Request, Scheduler)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("qwen2.5-32b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, spec, seed=0):
+    """spec: list of (prompt_len, max_new) tuples -> uid-ordered Requests."""
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=s).astype(np.int32),
+                    max_new_tokens=n)
+            for i, (s, n) in enumerate(spec)]
+
+
+def _solo(engine, req, eos_id=None):
+    """Reference: per-request greedy generate, truncated after EOS."""
+    res = engine.generate({"tokens": jnp.asarray(req.prompt)[None, :]},
+                          req.max_new_tokens, eos_id=eos_id)
+    return np.asarray(res.tokens[0, :res.gen_lens[0]])
+
+
+# --------------------------------------------------------------------------
+# Differential: continuous == per-request greedy, all policies, any order
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["lethe", "h2o", "streaming"])
+def test_continuous_matches_solo_generate(setup, kind):
+    cfg, model, params = setup
+    pol = make_policy(kind, capacity=24, sink_len=2, sparse_ratio=4.0,
+                      target_fill=0.5)
+    eng = Engine(model, params, pol)
+    seed = {"lethe": 0, "h2o": 1, "streaming": 2}[kind]
+    reqs = _requests(cfg, [(8, 3), (12, 9), (8, 14), (12, 6), (8, 1),
+                           (12, 11), (8, 7)], seed=seed)
+    solo = {r.uid: _solo(eng, r) for r in reqs}
+
+    sched = Scheduler(eng, batch_slots=3, segment_len=4)
+    sched.submit(reqs)
+    done = sched.run()
+    assert [c.uid for c in done] == [r.uid for r in reqs]
+    for c in done:
+        np.testing.assert_array_equal(np.asarray(c.tokens), solo[c.uid],
+                                      err_msg=f"uid {c.uid}")
+
+
+def test_continuous_admission_order_invariant(setup):
+    """Reversed submission order must not change any request's tokens —
+    only its latency. (Neighbors can't leak into a slot's generation.)"""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2, sparse_ratio=4.0)
+    eng = Engine(model, params, pol)
+    reqs = _requests(cfg, [(8, 4), (12, 10), (8, 8), (12, 5), (8, 12)],
+                     seed=7)
+
+    by_uid = {}
+    for order in (list(reqs), list(reqs)[::-1]):
+        sched = Scheduler(eng, batch_slots=2, segment_len=3)
+        sched.submit(order)
+        for c in sched.run():
+            by_uid.setdefault(c.uid, []).append(np.asarray(c.tokens))
+    for uid, (a, b) in by_uid.items():
+        np.testing.assert_array_equal(a, b, err_msg=f"uid {uid}")
+
+
+def test_lockstep_mode_still_drains(setup):
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=32, sink_len=2)
+    eng = Engine(model, params, pol)
+    reqs = _requests(cfg, [(8, 6)] * 5, seed=3)
+    sched = Scheduler(eng, batch_slots=2)
+    sched.submit(reqs)
+    done = sched.run_lockstep()
+    assert [c.uid for c in done] == list(range(5))
+    assert all(len(c.tokens) == 6 for c in done)
+
+
+# --------------------------------------------------------------------------
+# Lifecycle + metrics
+# --------------------------------------------------------------------------
+
+def test_lifecycle_and_metrics(setup):
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2)
+    eng = Engine(model, params, pol)
+    reqs = _requests(cfg, [(8, 5), (12, 9), (8, 2)], seed=5)
+    sched = Scheduler(eng, batch_slots=2, segment_len=4)
+    sched.submit(reqs)
+    done = sched.run()
+    for c in done:
+        states = sched.lifecycle[c.uid]
+        assert states[0] == QUEUED and states[-1] == FINISHED
+        assert PREFILLING in states and DECODING in states
+        assert states.count(FINISHED) == 1           # completed exactly once
+        assert c.finish_reason == "length"
+        assert c.decode_steps == len(c.tokens) - 1
+        assert 0.0 <= c.queue_wait_s <= c.ttft_s
+        assert c.tokens_per_second > 0
+
+
+# --------------------------------------------------------------------------
+# Starvation-freedom / capacity fuzz
+# --------------------------------------------------------------------------
+
+def _fuzz_case(setup, spec, slots, eos_id):
+    """Invariants for one random request mix: every uid completes exactly
+    once, within its token budget, and no slot's cache ever exceeds
+    capacity across refills."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=16, sink_len=2, sparse_ratio=3.0,
+                      target_fill=0.5)
+    eng = Engine(model, params, pol)
+    reqs = _requests(cfg, spec, seed=len(spec))
+    sched = Scheduler(eng, batch_slots=slots, segment_len=3, eos_id=eos_id,
+                      track_occupancy=True)
+    sched.submit(reqs)
+    done = sched.run()
+
+    assert [c.uid for c in done] == list(range(len(reqs)))   # exactly once
+    for c, r in zip(done, reqs):
+        assert 1 <= len(c.tokens) <= r.max_new_tokens
+        if c.finish_reason == "eos":
+            assert c.tokens[-1] == eos_id
+            assert not (c.tokens[:-1] == eos_id).any()
+        else:
+            assert len(c.tokens) == r.max_new_tokens
+        assert sched.lifecycle[r.uid].count(FINISHED) == 1
+    assert sched.max_slot_tokens <= pol.capacity
+    assert not sched.queue                                   # fully drained
+
+
+# prompt lengths drawn from a small set so jit compiles stay bounded
+_LENS, _MAXNEW = (4, 6, 9), (1, 10)
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    _REQ = st.tuples(st.sampled_from(_LENS),
+                     st.integers(*_MAXNEW))
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.lists(_REQ, min_size=1, max_size=9),
+           st.sampled_from([1, 2, 3]),
+           st.sampled_from([None, 0, 3]))
+    def test_fuzz_no_starvation_no_overflow(setup, spec, slots, eos_id):
+        """Hypothesis form: random request mixes (prompt lengths, budgets,
+        EOS ids that random logits may or may not emit)."""
+        _fuzz_case(setup, spec, slots, eos_id)
+except ImportError:                          # pragma: no cover
+    pass                                     # seeded sweep below still runs
+
+
+@pytest.mark.parametrize("case_seed,slots,eos_id",
+                         [(0, 1, None), (1, 2, 3), (2, 3, 0), (3, 2, None)])
+def test_seeded_random_mixes(setup, case_seed, slots, eos_id):
+    """Deterministic fallback sweep over random mixes — runs (unlike the
+    hypothesis form) even where hypothesis isn't installed."""
+    rng = np.random.default_rng(case_seed)
+    n = int(rng.integers(1, 10))
+    spec = [(int(rng.choice(_LENS)), int(rng.integers(*_MAXNEW) + 1))
+            for _ in range(n)]
+    _fuzz_case(setup, spec, slots, eos_id)
+
+
+# --------------------------------------------------------------------------
+# Slot isolation: reset/insert leave every other row bit-identical
+# --------------------------------------------------------------------------
+
+def _snapshot_rows(state, skip_slot):
+    rows = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        arr = np.asarray(leaf)
+        rows[jax.tree_util.keystr(path)] = np.delete(arr, skip_slot, axis=1)
+    return rows
+
+
+def test_slot_ops_leave_neighbors_bit_identical(setup):
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2, sparse_ratio=4.0)
+    eng = Engine(model, params, pol)
+    B, target = 3, 1
+
+    # build a live state: admit three requests, decode a segment
+    state = eng.new_decode_state(B)
+    rng = np.random.default_rng(0)
+    for i in range(B):
+        state, _ = eng.admit_slot(
+            state, i, {"tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=10))[None, :]})
+    state, _, pos, done = eng.decode_segment(
+        state, np.zeros(B, np.int32), np.full(B, 10, np.int32),
+        np.zeros(B, bool), 5)
+
+    before = _snapshot_rows(state, target)
+
+    # retire the middle slot...
+    state = eng.release_slot(state, target)
+    after_reset = _snapshot_rows(state, target)
+    for name, arr in before.items():
+        np.testing.assert_array_equal(arr, after_reset[name], err_msg=name)
+    # ...the retired row really is empty
+    assert int(np.asarray(state.length)[:, target].max()) == 0
+    assert (np.asarray(state.pos)[:, target] == -1).all()
+
+    # ...and refill it with a fresh (longer) request
+    state, _ = eng.admit_slot(
+        state, target, {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=14))[None, :]})
+    after_insert = _snapshot_rows(state, target)
+    for name, arr in before.items():
+        np.testing.assert_array_equal(arr, after_insert[name], err_msg=name)
+
+    # the KVCache-level ops give the same guarantee directly (transformer
+    # decode state IS the cache)
+    _, row = eng.prefill({"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=9))[None, :]})
+    direct = cache_lib.insert_slot(cache_lib.reset_slot(state, target),
+                                   target, row)
+    for name, arr in _snapshot_rows(direct, target).items():
+        np.testing.assert_array_equal(arr, after_insert[name], err_msg=name)
+
+
+def test_refill_leaves_neighbor_rasr_scores_untouched(setup):
+    """RASR scores of surviving slots must be bit-identical across a
+    neighbor's retire+refill cycle (the per-row scoring guarantee)."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2, sparse_ratio=4.0)
+    eng = Engine(model, params, pol)
+    state = eng.new_decode_state(2)
+    rng = np.random.default_rng(1)
+    for i in range(2):
+        state, _ = eng.admit_slot(
+            state, i, {"tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=12))[None, :]})
+    score_before = np.asarray(state.score)[:, 0]
+    budget_before = np.asarray(state.budget)[:, 0]
+    state = eng.release_slot(state, 1)
+    state, _ = eng.admit_slot(
+        state, 1, {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=8))[None, :]})
+    np.testing.assert_array_equal(np.asarray(state.score)[:, 0],
+                                  score_before)
+    np.testing.assert_array_equal(np.asarray(state.budget)[:, 0],
+                                  budget_before)
+
+
+def test_slot_ops_donate_buffers(setup):
+    """PR-1-style acceptance: the slot insert/reset ops must update the
+    live state in place — input K/V buffers deleted after the call."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=16, sink_len=2)
+    eng = Engine(model, params, pol)
+    state = eng.new_decode_state(2)
+    old_k, old_v = state.k, state.v
+    state, _ = eng.admit_slot(
+        state, 0, {"tokens": jnp.asarray(np.arange(8))[None, :]})
+    assert old_k.is_deleted() and old_v.is_deleted()
+    old_k = state.k
+    state = eng.release_slot(state, 0)
+    assert old_k.is_deleted()
+
+
+# --------------------------------------------------------------------------
+# EOS-aware early termination in both whole-request drivers
+# --------------------------------------------------------------------------
+
+def test_generate_eos_early_termination_both_drivers(setup):
+    cfg, model, params = setup
+    pol = make_policy("h2o", capacity=24, sink_len=2)
+    eng = Engine(model, params, pol)
+    prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(3), (2, 10),
+                                           0, cfg.vocab_size)}
+    ref = eng.generate(prompt, 12)
+    eos = int(ref.tokens[0, 4])      # row 0 will stop at step 5
+
+    r_loop = eng.generate(prompt, 12, eos_id=eos)
+    r_scan = eng.generate_scan(prompt, 12, eos_id=eos)
+    np.testing.assert_array_equal(r_loop.tokens, r_scan.tokens)
+    assert r_loop.steps == r_scan.steps
+    assert r_loop.tokens.shape == (2, 12)            # padded to full width
+    assert r_loop.finished[0] and r_loop.gen_lens[0] <= 5
+    # frozen rows emit eos forever after finishing
+    assert (r_loop.tokens[0, r_loop.gen_lens[0]:] == eos).all()
+    # early termination: if every row finished, fewer steps than max_new
+    if r_loop.finished.all():
+        assert r_loop.steps < 12
+
+
+def test_generate_eos_matches_scheduler(setup):
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2, sparse_ratio=4.0)
+    eng = Engine(model, params, pol)
+    reqs = _requests(cfg, [(10, 12), (6, 12), (8, 12)], seed=11)
+    probe = _solo(eng, reqs[0])
+    eos = int(probe[3])
+    solo = {r.uid: _solo(eng, r, eos_id=eos) for r in reqs}
+    sched = Scheduler(eng, batch_slots=2, segment_len=4, eos_id=eos)
+    sched.submit(reqs)
+    for c in sched.run():
+        np.testing.assert_array_equal(np.asarray(c.tokens), solo[c.uid])
+        if c.tokens[-1] == eos:
+            assert c.finish_reason == "eos"
