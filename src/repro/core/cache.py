@@ -242,6 +242,43 @@ def append_token(layer: KVCache, k_new: jax.Array, v_new: jax.Array,
                    sparsity=layer.sparsity)
 
 
+def append_chunk(layer: KVCache, k_new: jax.Array, v_new: jax.Array,
+                 pos_new: jax.Array, init_score: float = 0.0) -> KVCache:
+    """Append one prefill chunk's K/V to a layer slice (chunked prefill).
+
+    ``k_new``/``v_new``: [B, Hkv, n, Dh]; ``pos_new``: [n] absolute token
+    positions (shared across rows — a chunk spans the same prompt span for
+    every request in the admission group). Chunk token j lands at each
+    row's slot ``length + j`` — the multi-token form of ``append_token``,
+    written as the same elementwise masked select so it donates/shards
+    identically and rows at different (post-compression) occupancies append
+    independently. Rows must have ``length + n <= capacity``; the chunked
+    prefill driver guarantees that by compressing before the next chunk.
+    """
+    B, Hkv, C, Dh = layer.k.shape
+    n = k_new.shape[2]
+    # chunk-relative target index of each slot: slot c takes chunk token
+    # (c - length) when that lies in [0, n)
+    rel = (jnp.arange(C, dtype=jnp.int32)[None, :]
+           - layer.length[:, None])                          # [B, C]
+    hit = (rel >= 0) & (rel < n)
+    take = jnp.clip(rel, 0, n - 1)
+    k = jnp.where(hit[:, None, :, None],
+                  jnp.take_along_axis(k_new.astype(layer.k.dtype),
+                                      take[:, None, :, None], axis=2),
+                  layer.k)
+    v = jnp.where(hit[:, None, :, None],
+                  jnp.take_along_axis(v_new.astype(layer.v.dtype),
+                                      take[:, None, :, None], axis=2),
+                  layer.v)
+    pos = jnp.where(hit, jnp.asarray(pos_new, jnp.int32)[take], layer.pos)
+    score = jnp.where(hit, jnp.float32(init_score), layer.score)
+    length = jnp.minimum(layer.length + n, C)
+    return KVCache(k=k, v=v, pos=pos, score=score, length=length,
+                   budget=layer.budget, evict_at=layer.evict_at,
+                   sparsity=layer.sparsity)
+
+
 def compact(layer: KVCache, keep: jax.Array) -> KVCache:
     """Evict all slots where ``keep`` [B, C] is False, packing survivors to
     the front in increasing position order (static shapes throughout).
@@ -280,40 +317,42 @@ def compact(layer: KVCache, keep: jax.Array) -> KVCache:
                    sparsity=layer.sparsity)
 
 
-def fill_from_prefill(*, k: jax.Array, v: jax.Array, scores: jax.Array,
-                      capacity: int, layer_budget: jax.Array | None = None
-                      ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
-                                 jax.Array]:
-    """Initialise a layer slice from prefill K/V ([B, Hkv, S, Dh]) and prefill
-    RASR scores ([B, S]).
+def fill_from_prefill_slotted(k: jax.Array, v: jax.Array, pos: jax.Array,
+                              score: jax.Array, length: jax.Array, *,
+                              capacity: int
+                              ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                         jax.Array, jax.Array]:
+    """Initialise a layer slice from a *slotted* prefill working set
+    (k/v [B, Hkv, E, Dh], pos/score [B, E], length [B], E >= capacity).
 
-    If S > capacity, keeps the ``capacity`` highest-priority tokens (the
-    proper policy-specific prune round runs immediately afterwards through the
-    shared machinery). Priority protects the final token unconditionally (it
-    is the query's own position).
+    Keeps the ``capacity`` highest-priority slots (invalid slots carry -inf
+    priority; the last live token — the query's own position — is pinned),
+    then packs them in slot order. When at most ``capacity`` slots are live
+    (every chunked prefill, whose compression round maintains that bound)
+    the selection is an identity gather of the packed prefix — bit-exact.
+    The priority path is the whole-prompt S > capacity case.
 
-    Returns (k, v, pos, score, length) with the static ``capacity`` slot axis.
+    Returns (k, v, pos, score, length) with the static ``capacity`` axis.
     """
-    B, Hkv, S, Dh = k.shape
-    if S <= capacity:
-        pad = capacity - S
-        k_c = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        v_c = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-        pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
-        score = jnp.pad(scores.astype(jnp.float32), ((0, 0), (0, pad)))
-        length = jnp.full((B,), S, jnp.int32)
-        return k_c, v_c, pos, score, length
-
-    # S > capacity: select top-`capacity` by score with the last token pinned.
-    prio = scores.astype(jnp.float32)
-    prio = prio.at[:, -1].set(jnp.inf)
-    _, top_idx = jax.lax.top_k(prio, capacity)               # [B, capacity]
-    top_idx = jnp.sort(top_idx, axis=-1)                     # temporal order
+    B, Hkv, E, Dh = k.shape
+    if E == capacity:
+        return k, v, pos, score, jnp.minimum(length, capacity)
+    valid = pos >= 0
+    prio = jnp.where(valid, score.astype(jnp.float32), -jnp.inf)
+    last = jnp.maximum(length - 1, 0)
+    prio = prio.at[jnp.arange(B), last].set(
+        jnp.where(length > 0, jnp.inf, prio[jnp.arange(B), last]))
+    _, top_idx = jax.lax.top_k(prio, capacity)
+    top_idx = jnp.sort(top_idx, axis=-1)             # temporal (slot) order
     take = jax.vmap(lambda buf, o: jnp.take(buf, o, axis=1))
     k_c = take(k, top_idx)
     v_c = take(v, top_idx)
-    pos = top_idx.astype(jnp.int32)
-    score = jnp.take_along_axis(scores.astype(jnp.float32), top_idx, axis=-1)
-    length = jnp.full((B,), capacity, jnp.int32)
-    return k_c, v_c, pos, score, length
+    pos_c = jnp.take_along_axis(pos, top_idx, axis=-1)
+    score_c = jnp.take_along_axis(score.astype(jnp.float32), top_idx,
+                                  axis=-1)
+    return k_c, v_c, pos_c, score_c, jnp.minimum(length, capacity)
+
+
+# (The old dense ``fill_from_prefill`` is gone: every prefill path now
+# routes through ``fill_from_prefill_slotted`` inside the shared
+# ``chunked.finalize_pipeline`` program.)

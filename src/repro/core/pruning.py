@@ -106,12 +106,19 @@ def _protected_mask(pos: jax.Array, cur_pos: jax.Array, *, sink_len: int,
 def decide_row(scores: jax.Array, pos: jax.Array, length: jax.Array,
                cur_pos: jax.Array, *, policy: PolicyConfig,
                budget: jax.Array, evict_at: jax.Array,
-               window: jax.Array | None = None) -> PruneDecision:
+               window: jax.Array | None = None,
+               max_keep: jax.Array | None = None) -> PruneDecision:
     """Keep/evict decision for one layer, one batch row.
 
     ``scores``/``pos``: [C]; ``length``: scalar; ``budget``/``evict_at``:
     scalar traced; ``window``: optional sliding-attention window (slots whose
     position fell out of a local layer's window are dead for every policy).
+
+    ``max_keep``: optional explicit occupancy ceiling (traced ok) for the
+    capacity backstop — chunked prefill compresses its working buffer
+    through this (the buffer is larger than the final cache, so the
+    backstop's 15/16-of-C default would leave no room for the next chunk).
+    The decode path never passes it.
 
     Performs exactly ONE argsort over C; every ranking below is derived from
     it (see module docstring).
@@ -172,6 +179,9 @@ def decide_row(scores: jax.Array, pos: jax.Array, length: jax.Array,
     # slots win ties). This turns the Algorithm-1 "delay" path into a proper
     # multi-round sawtooth instead of riding at full capacity.
     cap_target = jnp.asarray(max(1, (C * 15) // 16), jnp.int32)
+    if max_keep is not None:
+        cap_target = jnp.minimum(cap_target,
+                                 jnp.asarray(max_keep, jnp.int32))
     if kind != FULLKV:
         n_protected = jnp.sum(protected & valid_w)
         trunc_to = jnp.clip(jnp.maximum(budget, n_protected + 1), 1,
@@ -241,3 +251,48 @@ def prune_layer(layer: cache_lib.KVCache, cur_pos: jax.Array, *,
         return do_prune(layer)
 
     return jax.lax.cond(jnp.any(row_trig), do_prune, lambda l: l, layer)
+
+
+def compress_prefill_layer(layer: cache_lib.KVCache, cur_pos: jax.Array, *,
+                           policy: PolicyConfig, max_keep: int,
+                           window: jax.Array | None = None
+                           ) -> cache_lib.KVCache:
+    """Prefill-phase compression round for a chunked-prefill working buffer
+    (one layer slice, all batch rows).
+
+    Runs the same ``decide_row``/Algorithm-1 machinery as decode pruning
+    but with an explicit occupancy ceiling ``max_keep`` (the *final* cache
+    capacity, smaller than the working buffer): any row whose occupancy
+    exceeds the ceiling is forced down — through the per-layer budget when
+    the keep-set overflows — so prompts longer than capacity stream through
+    a bounded buffer while the layerwise budget split stays faithful. Rows
+    at or below the ceiling pass through bit-identically (keep = the full
+    valid set, under which ``compact`` is the identity gather): a prompt
+    that fits capacity is never perturbed by sharing a chunk program with
+    one that does not.
+
+    ``evict_at`` is left untouched — the Algorithm-1 eviction *schedule*
+    belongs to decode and is (re)initialised at prefill finalize.
+    """
+    if policy.kind == FULLKV:
+        return layer        # nothing can be evicted; caller rejects S > C
+
+    B = layer.pos.shape[0]
+    cur_b = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (B,))
+    row_over = layer.length > max_keep                      # [B]
+
+    def do_compress(l: cache_lib.KVCache) -> cache_lib.KVCache:
+        dec = jax.vmap(
+            lambda s, p, n, c, bg, ev: decide_row(
+                s, p, n, c, policy=policy, budget=bg, evict_at=ev,
+                window=window, max_keep=jnp.asarray(max_keep, jnp.int32))
+        )(l.score, l.pos, l.length, cur_b, l.budget, l.evict_at)
+        keep = jnp.where(row_over[:, None], dec.keep,
+                         cache_lib.valid_mask(l.pos))
+        compacted = cache_lib.compact(l, keep)
+        return cache_lib.KVCache(
+            k=compacted.k, v=compacted.v, pos=compacted.pos,
+            score=compacted.score, length=compacted.length,
+            budget=l.budget, evict_at=l.evict_at, sparsity=l.sparsity)
+
+    return jax.lax.cond(jnp.any(row_over), do_compress, lambda l: l, layer)

@@ -114,13 +114,56 @@ def prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out
 
 
+def chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    k_pos: jax.Array, q_start, *, window=None,
+                    softcap: float | None = None,
+                    scale: float | None = None,
+                    contiguous_offset: int | None = None,
+                    impl: str | None = None) -> jax.Array:
+    """Chunk-of-queries attention over a slotted cache (chunked prefill).
+
+    q [B,Hq,n,Dh] at absolute positions ``q_start..q_start+n-1`` (traced
+    ok); k, v [B,Hkv,C,Dh]; k_pos [B,C] (−1 = invalid slot).
+
+    ``contiguous_offset``: pass the *static* chunk offset when the buffer
+    prefix is known contiguous (slot i == position i — every chunk before
+    prefill-phase compression first triggers). That dispatches the Pallas
+    flash kernel through its existing ``q_offset`` path: invalid tail slots
+    sit at arange positions beyond every real query and are causally
+    masked, so the slotted call and the flash call agree. Without it (or
+    with ``impl="ref"``) the XLA-native slotted oracle runs, which accepts
+    traced offsets and arbitrary (compressed) key layouts.
+    """
+    impl = _resolve(impl)
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    win = None
+    if window is not None and contiguous_offset is not None:
+        try:
+            win = int(window)    # flash path needs a static window
+        except (jax.errors.TracerIntegerConversionError,
+                jax.errors.ConcretizationTypeError):
+            # traced per-layer window (local/global layer scans): the
+            # flash kernel can't take it — use the slotted oracle
+            contiguous_offset = None
+    if impl == "ref" or contiguous_offset is None:
+        return ref_impl.chunk_attention_ref(
+            q, k, v, k_pos, q_start, window=window, softcap=softcap,
+            scale=scale)
+    out, _ = flash_prefill_pallas(
+        q, k, v, scale=scale, softcap=softcap, causal=True, window=win,
+        q_offset=contiguous_offset, interpret=(impl == "interpret"))
+    return out
+
+
 def obs_colsums(q_win: jax.Array, k: jax.Array, *, win_start,
                 window: int | None = None, softcap: float | None = None,
-                scale: float | None = None
+                scale: float | None = None,
+                k_pos: jax.Array | None = None
                 ) -> tuple[jax.Array, jax.Array]:
     """Observation-window exact column sums + probs (prefill RASR init and
-    layerwise Hoyer estimate). Small (W ≤ 64 rows), always XLA-native."""
+    layerwise Hoyer estimate). Small (W ≤ 64 rows), always XLA-native.
+    ``k_pos`` [B, S] masks a slotted (compressed-prefill) key layout."""
     scale = scale if scale is not None else q_win.shape[-1] ** -0.5
     return ref_impl.obs_colsums_ref(
         q_win, k, win_start=win_start, window=window, softcap=softcap,
-        scale=scale)
+        scale=scale, k_pos=k_pos)

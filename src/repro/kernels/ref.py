@@ -167,16 +167,69 @@ def prefill_attention_chunked_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return out[:, :, :S]
 
 
+def chunk_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        k_pos: jax.Array, q_start, *,
+                        window=None,
+                        softcap: float | None = None,
+                        scale: float | None = None) -> jax.Array:
+    """Chunk-of-queries attention over a *slotted* cache — the inner step of
+    chunked prefill once prefill-phase compression has made the key layout
+    non-contiguous.
+
+    q:     [B, Hq, n, Dh]  — n consecutive prompt tokens at absolute
+                             positions ``q_start .. q_start+n-1`` (``q_start``
+                             may be traced).
+    k, v:  [B, Hkv, C, Dh] — slotted working buffer.
+    k_pos: [B, C]          — original key positions; -1 marks invalid slots.
+
+    Masking: validity (k_pos ≥ 0), causality (k_pos ≤ q_pos) and the
+    optional sliding ``window`` (a traced per-layer scalar is fine). On a
+    contiguous buffer (slot i holds position i) this reproduces
+    ``prefill_attention_ref(..., q_offset=q_start)`` bit-for-bit: the masked
+    score tensors are identical and the extra invalid columns contribute
+    exact zeros to the softmax sums.
+
+    Returns out [B, Hq, n, Dh].
+    """
+    B, Hq, n, Dh = q.shape
+    _, Hkv, C, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else Dh ** -0.5
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, n, Dh)
+    s = jnp.einsum("bhgsd,bhcd->bhgsc", qf, k.astype(jnp.float32)) * scale
+    s = _softcap(s, softcap)
+
+    q_pos = jnp.arange(n) + q_start                          # [n]
+    mask = (k_pos[:, None, :] >= 0) \
+        & (k_pos[:, None, :] <= q_pos[None, :, None])        # [B, n, C]
+    if window is not None:
+        mask &= k_pos[:, None, :] >= (q_pos[None, :, None] - window + 1)
+    s = jnp.where(mask[:, None, None], s, _NEG_INF)
+
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgsc,bhcd->bhgsd", p / jnp.maximum(denom, 1e-30),
+                     v.astype(jnp.float32))
+    return out.reshape(B, Hq, n, Dh).astype(q.dtype)
+
+
 def obs_colsums_ref(q_win: jax.Array, k: jax.Array, *,
                     win_start: int | jax.Array,
                     window: int | None = None,
                     softcap: float | None = None,
-                    scale: float | None = None
+                    scale: float | None = None,
+                    k_pos: jax.Array | None = None
                     ) -> tuple[jax.Array, jax.Array]:
     """Exact attention-mass column sums over an observation window.
 
     q_win: [B, Hq, W, Dh] — the last W prefill queries (absolute positions
     win_start .. win_start+W-1); k: [B, Hkv, S, Dh].
+
+    ``k_pos`` [B, S] gives explicit key positions for slotted buffers
+    (chunked prefill after compression; -1 = invalid slot, fully masked).
+    When omitted, keys are contiguous at positions 0..S-1.
 
     Returns (colsums [B, S] = Σ_h Σ_{q∈win} probs, probs [B, Hq, W, S]) —
     the probs feed the layerwise Hoyer sparsity estimator.
@@ -191,11 +244,14 @@ def obs_colsums_ref(q_win: jax.Array, k: jax.Array, *,
     s = _softcap(s, softcap)
 
     q_pos = jnp.arange(W) + win_start
-    k_pos = jnp.arange(S)
-    mask = k_pos[None, :] <= q_pos[:, None]
+    if k_pos is None:
+        kp = jnp.broadcast_to(jnp.arange(S), (B, S))
+    else:
+        kp = k_pos
+    mask = (kp[:, None, :] >= 0) & (kp[:, None, :] <= q_pos[None, :, None])
     if window is not None:
-        mask &= k_pos[None, :] >= (q_pos[:, None] - window + 1)
-    s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        mask &= kp[:, None, :] >= (q_pos[None, :, None] - window + 1)
+    s = jnp.where(mask[:, None, None], s, _NEG_INF)
     probs = jax.nn.softmax(s, axis=-1)                      # [B,Hkv,G,W,S]
     colsums = jnp.sum(probs, axis=(1, 2, 3))                # [B, S]
     return colsums, probs.reshape(B, Hq, W, S)

@@ -51,6 +51,104 @@ class ModelAPI:
         return self.module.init_decode_state(
             self.cfg, policy, batch_size, dtype=dtype, **kw)
 
+    # ---- chunked prefill (DESIGN.md §Prefill) -----------------------------
+
+    def total_prompt_len(self, batch: dict) -> int:
+        """Combined prefill sequence length (image patches + text for VLM;
+        decoder tokens for the audio family)."""
+        s_img = (batch.get("img_embeds").shape[1]
+                 if batch.get("img_embeds") is not None else 0)
+        return batch["tokens"].shape[1] + s_img
+
+    def chunked_compress(self, policy: PolicyConfig, s_total: int,
+                         capacity: int | None = None) -> bool:
+        """THE admission decision for chunked prefill (one spelling, shared
+        by the engine and the one-shot driver): whether prefill-phase
+        compression must run for a prompt of ``s_total`` tokens — and a
+        ``ValueError`` when it must but the policy cannot evict.
+        Recurrence-only families (O(1) state, no KV cache) accept any
+        length without compression."""
+        C = capacity or policy.capacity
+        compress = s_total > C and self.cfg.family != "ssm"
+        if compress and not policy.prunes:
+            raise ValueError(
+                f"prompt of {s_total} tokens exceeds capacity {C} and "
+                f"policy {policy.kind!r} cannot evict")
+        return compress
+
+    def prefill_chunk_init(self, params, batch: dict, policy: PolicyConfig,
+                           *, chunk_max: int, capacity: int | None = None,
+                           cache_dtype=jnp.float32):
+        """Fresh chunked-prefill carry for one admission group (working
+        buffers + family state: VLM pre-embeds the combined sequence, the
+        audio family runs its encoder here). Outside the VLM family only
+        the batch *width* matters, so the token array is sliced to one
+        column — init compiles once per width, not once per prompt
+        length."""
+        toks = batch["tokens"]
+        if self.cfg.family != "vlm":
+            toks = toks[:, :1]
+        return self.module.prefill_chunk_init(
+            params, toks, self.cfg, policy, chunk_max=chunk_max,
+            capacity=capacity, cache_dtype=cache_dtype, **_extras(batch))
+
+    def prefill_chunk(self, params, carry, tokens_chunk, policy:
+                      PolicyConfig, *, n: int, capacity: int | None = None,
+                      compress: bool = False,
+                      contiguous_offset: int | None = None):
+        """Advance the carry by one prompt chunk (``tokens_chunk`` [B, n];
+        None for the VLM family, whose chunks come from the pre-embedded
+        combined sequence). ``compress`` turns on mid-prefill scoring and
+        the compression round (prompts longer than capacity)."""
+        return self.module.prefill_chunk(
+            params, carry, tokens_chunk, self.cfg, policy, n=n,
+            capacity=capacity, compress=compress,
+            contiguous_offset=contiguous_offset)
+
+    def prefill_finalize(self, params, carry, policy: PolicyConfig, *,
+                         s_total: int, capacity: int | None = None):
+        """Carry -> (last-token logits [B, V], decode state) — the same
+        contract as ``prefill``. The observation window and the bucketed
+        statistics extent both derive from ``s_total`` (the combined
+        prompt length), so finalize programs are shared per power-of-two
+        length bucket, not per length."""
+        from repro.models import chunked
+        C = capacity or policy.capacity
+        return self.module.prefill_finalize(
+            params, carry, self.cfg, policy,
+            w_eff=min(policy.obs_window, s_total),
+            k_extent=chunked.finalize_extent(s_total, C),
+            capacity=capacity)
+
+    def prefill_chunked(self, params, batch: dict, policy: PolicyConfig, *,
+                        chunk_plan: tuple[int, ...],
+                        capacity: int | None = None,
+                        cache_dtype=jnp.float32):
+        """One-shot chunked prefill: drive every chunk of ``chunk_plan``
+        (which must sum to the combined prompt length) then finalize.
+        Differentially equal to ``prefill`` for prompts that fit capacity;
+        longer prompts stream through prefill-phase compression."""
+        S_total = self.total_prompt_len(batch)
+        assert sum(chunk_plan) == S_total, (chunk_plan, S_total)
+        # admission decision before any device work (encoder etc.)
+        compress = self.chunked_compress(policy, S_total, capacity)
+        carry = self.prefill_chunk_init(
+            params, batch, policy, chunk_max=max(chunk_plan),
+            capacity=capacity, cache_dtype=cache_dtype)
+        if "buf" not in carry:
+            compress = False
+        toks = batch["tokens"]
+        done = 0
+        for n in chunk_plan:
+            chunk = (None if self.cfg.family == "vlm"
+                     else jnp.asarray(toks[:, done:done + n]))
+            carry = self.prefill_chunk(
+                params, carry, chunk, policy, n=n, capacity=capacity,
+                compress=compress)
+            done += n
+        return self.prefill_finalize(
+            params, carry, policy, s_total=S_total, capacity=capacity)
+
     def prefill_into_slot(self, params, batch: dict, policy: PolicyConfig,
                           state, slots, *, cache_dtype=jnp.float32):
         """Slot-scoped prefill — the admission primitive of continuous

@@ -2,8 +2,9 @@
 
 Three call modes:
   * full-sequence (train / prefill compute)      -> attend_full
-  * prefill cache construction + RASR/sparsity   -> prefill_stats
   * single-token decode over a slotted cache     -> decode_attend
+(Prefill RASR/sparsity statistics live in ``chunked.finalize_pipeline`` —
+the one compiled tail program shared by whole-prompt and chunked prefill.)
 """
 from __future__ import annotations
 
@@ -15,7 +16,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import cache as cache_lib
-from repro.core import rasr
 from repro.core import sparsity as sparsity_lib
 from repro.core.policy import PolicyConfig
 from repro.kernels import ops
@@ -95,24 +95,6 @@ def attend_full(x: jax.Array, p: dict, cfg: ArchConfig, *,
     if return_kv:
         return out, (kh, vh)
     return out
-
-
-def prefill_stats(qh: jax.Array, kh: jax.Array, cfg: ArchConfig,
-                  policy: PolicyConfig, *, window=None
-                  ) -> tuple[jax.Array, jax.Array]:
-    """Observation-window RASR init scores + layerwise Hoyer sparsity.
-
-    qh [B, Hq, S, Dh], kh [B, Hkv, S, Dh] (post-RoPE).
-    Returns (scores [B, S], sparsity [B] — one estimate per request)."""
-    B, Hq, S, Dh = qh.shape
-    W = min(policy.obs_window, S)
-    q_win = jax.lax.dynamic_slice_in_dim(qh, S - W, W, axis=2)
-    colsums, probs = ops.obs_colsums(
-        q_win, kh, win_start=S - W, window=window,
-        softcap=cfg.attn_logit_softcap, scale=cfg.d_head ** -0.5)
-    scores = rasr.prefill_scores(colsums, W)
-    spars = sparsity_lib.row_sparsity_from_probs(probs)
-    return scores, spars
 
 
 def decode_attend(x: jax.Array, p: dict, layer: cache_lib.KVCache,

@@ -1,0 +1,281 @@
+"""Shared chunked-prefill machinery (DESIGN.md §Prefill).
+
+Admission prefill as a *schedulable unit of work*: instead of one monolithic
+full-sequence pass, a prompt streams through fixed-budget chunks. Each chunk
+runs every layer once, appending its K/V to a per-layer working buffer and
+attending over (compressed prefix ∪ chunk). The working buffer is larger
+than the final cache by one chunk (`buf_capacity = capacity + chunk_max`),
+so a chunk always fits; when a prompt outgrows `capacity`, a prefill-phase
+compression round (`pruning.compress_prefill_layer` — the same
+`decide_row`/Algorithm-1 machinery as decode pruning, with the final cache
+capacity as an explicit ceiling) shrinks the buffer between chunks. Prompts
+up to buffer-bounded *any* length therefore admit in bounded memory.
+
+Differential guarantee: for prompts that fit `capacity`, chunked prefill is
+**bit-identical** to whole-prompt prefill — same first token, same per-layer
+budgets, same RASR scores, same cache tensors. Three properties deliver it:
+
+1. Per-token ops (norms, projections, FFN) are row-independent, so chunk
+   hidden states equal the corresponding rows of the full pass bitwise.
+2. Masked attention over the working buffer equals full-sequence attention:
+   invalid tail slots score the same `-1e30` sentinel the causal mask uses,
+   whose softmax terms underflow to exact zeros — the reductions agree
+   bit-for-bit with the shorter full-pass reductions.
+3. The statistics/fill/budget/prune tail runs as ONE compiled program —
+   `finalize_pipeline` below — invoked by BOTH the whole-prompt `prefill`
+   and chunked finalize with canonically-shaped inputs (pow2-bucketed key
+   extent, fixed-width right-aligned query tail). Sharing the *program*
+   (not just the math) matters: the same reduction expressed inside two
+   different XLA programs can fuse differently and drift by an ulp.
+
+For compressed prompts (S > capacity) the mid-prefill eviction score is the
+Eq. 5 EMA unrolled over the chunk (per-query-row γ-decayed attention
+column-sums), and the surviving tokens' RASR scores are re-seeded at
+finalize from the observation window over the survivors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cache as cache_lib
+from repro.core import rasr
+from repro.core import sparsity as sparsity_lib
+from repro.core.policy import LETHE, PolicyConfig
+from repro.kernels import ops
+
+GLOBAL_WINDOW = 1 << 30     # no-window sentinel (same as the decode kernel)
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << max(n - 1, 1).bit_length() if n > 1 else 1
+
+
+def finalize_extent(s_total: int, capacity: int) -> int:
+    """Static key extent for finalize observation statistics, bucketed to a
+    power of two so a refill wave over many distinct prompt lengths shares
+    O(log) finalize programs. Matches the whole-prompt ``prefill``'s padded
+    extent on uncompressed prompts; compressed prompts (whose survivors
+    number at most ``capacity``) all share one extent."""
+    return next_pow2(min(s_total, capacity) if s_total > capacity
+                     else s_total)
+
+
+def pad_to_extent(x: jax.Array, extent: int, axis: int, fill=0) -> jax.Array:
+    """Slice or zero/``fill``-pad ``x`` along ``axis`` to a static extent."""
+    n = x.shape[axis]
+    if n == extent:
+        return x
+    if n > extent:
+        return jax.lax.slice_in_dim(x, 0, extent, axis=axis)
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, extent - n)
+    return jnp.pad(x, pad, constant_values=fill)
+
+
+# --------------------------------------------------------------------------
+# Carry construction
+# --------------------------------------------------------------------------
+
+def init_buffer(*, n_layers: int, batch: int, n_kv_heads: int, d_head: int,
+                buf_capacity: int, budgets0: jax.Array,
+                dtype=jnp.float32) -> cache_lib.KVCache:
+    """Empty chunked-prefill working buffer ([L, B, Hkv, Cbuf, Dh]).
+
+    ``budgets0`` [L, B]: the policy's static budget schedule — used by
+    prefill-phase compression until (LETHE) live sparsity estimates exist.
+    ``evict_at`` is parked at the buffer capacity: the Algorithm-1 decode
+    schedule does not run during prefill.
+    """
+    shape = (n_layers, batch, n_kv_heads, buf_capacity, d_head)
+    return cache_lib.KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        pos=jnp.full((n_layers, batch, buf_capacity), -1, jnp.int32),
+        score=jnp.zeros((n_layers, batch, buf_capacity), jnp.float32),
+        length=jnp.zeros((n_layers, batch), jnp.int32),
+        budget=budgets0.astype(jnp.int32),
+        evict_at=jnp.full((n_layers, batch), buf_capacity, jnp.int32),
+        sparsity=jnp.zeros((n_layers, batch), jnp.float32),
+    )
+
+
+def init_q_tail(*, n_layers: int, batch: int, n_heads: int, d_head: int,
+                obs_window: int) -> jax.Array:
+    """Zero rolling query-tail [L, B, Hq, W, Dh]; real queries fill from the
+    right as chunks stream through (``roll_q_tail``)."""
+    return jnp.zeros((n_layers, batch, n_heads, obs_window, d_head),
+                     jnp.float32)
+
+
+def roll_q_tail(tail: jax.Array, qh: jax.Array) -> jax.Array:
+    """Shift a chunk's post-RoPE queries ([B, Hq, n, Dh]) into the rolling
+    tail ([B, Hq, W, Dh]): the last W of (tail ++ chunk)."""
+    W = tail.shape[2]
+    return jnp.concatenate([tail, qh.astype(tail.dtype)], axis=2)[:, :, -W:]
+
+
+def alloc_budgets(sparsity: jax.Array, policy: PolicyConfig,
+                  capacity: int) -> jax.Array:
+    """The Lethe spatial allocation with the decode-path floor expression
+    (one spelling, shared by chunk compression and finalize)."""
+    nominal = min(policy.nominal_budget, capacity)
+    return sparsity_lib.allocate_budgets_batched(
+        sparsity, capacity=capacity, nominal=nominal,
+        min_budget=max(policy.sink_len + policy.recent_len + 2,
+                       int(policy.min_budget_ratio * nominal)),
+        sink_len=policy.sink_len, recent_len=policy.recent_len)
+
+
+# --------------------------------------------------------------------------
+# Per-layer chunk step
+# --------------------------------------------------------------------------
+
+def attend_chunk_layer(lay: cache_lib.KVCache, qh: jax.Array, kh: jax.Array,
+                       vh: jax.Array, q_start, *, policy: PolicyConfig,
+                       window, softcap, scale: float, capacity: int,
+                       compress: bool,
+                       contiguous_offset: int | None = None
+                       ) -> tuple[jax.Array, cache_lib.KVCache]:
+    """One layer's chunk step: append the chunk's K/V to the working buffer,
+    attend the chunk queries over it, and (when ``compress`` — prompts
+    longer than ``capacity``) update the mid-prefill eviction scores and run
+    the compression round.
+
+    qh/kh/vh: [B, Hq|Hkv, n, Dh] post-RoPE; ``q_start`` traced scalar.
+    Returns (attn out [B, Hq, n, Dh], buffer').
+    """
+    n = qh.shape[2]
+    pos_new = jnp.arange(n, dtype=jnp.int32) + jnp.asarray(q_start,
+                                                           jnp.int32)
+    lay = cache_lib.append_chunk(lay, kh, vh, pos_new)
+    out = ops.chunk_attention(
+        qh, lay.k, lay.v, lay.pos, q_start, window=window, softcap=softcap,
+        scale=scale, contiguous_offset=contiguous_offset)
+
+    if compress:
+        # Eq. 5 unrolled over the chunk: each query row i contributes its
+        # attention column-sums decayed by γ^(n-1-i), on top of γ^n times
+        # the pre-chunk score — the exact arithmetic a token-at-a-time
+        # decode of the chunk would produce.
+        colsums, probs = ops.obs_colsums(
+            qh, lay.k, win_start=q_start, window=window, softcap=softcap,
+            scale=scale, k_pos=lay.pos)
+        del colsums
+        gam = jnp.float32(policy.gamma)
+        w_rows = gam ** jnp.arange(n - 1, -1, -1, dtype=jnp.float32)
+        weighted = jnp.einsum("bhwc,w->bc", probs.astype(jnp.float32),
+                              w_rows)
+        valid = cache_lib.valid_mask(lay.pos)
+        new_score = jnp.where(valid, gam ** n * lay.score + weighted, 0.0)
+        obs = sparsity_lib.row_sparsity_from_probs(
+            probs, where=valid[:, None, None, :],
+            n_valid=jnp.maximum(lay.length, 2)[:, None, None])
+        new_spars = sparsity_lib.update_sparsity_ema(
+            lay.sparsity, obs, policy.sparsity_ema)
+        lay = dataclasses.replace(lay, score=new_score, sparsity=new_spars)
+
+        from repro.core import pruning
+        cur = jnp.asarray(q_start, jnp.int32) + n - 1
+        lay = pruning.compress_prefill_layer(
+            lay, cur, policy=policy, max_keep=capacity, window=window)
+    return out, lay
+
+
+# --------------------------------------------------------------------------
+# Finalize: THE shared prefill tail pipeline.
+#
+# Observation-window RASR scores + Hoyer sparsity over the retained keys,
+# spatial budget allocation, top-capacity fill, forced prune round — as ONE
+# top-level jitted program invoked by both the whole-prompt ``prefill`` and
+# chunked ``prefill_finalize`` with canonically-shaped inputs. Sharing the
+# compiled program (not just the math) is what makes the two admission
+# paths bit-identical: the same statistics expressed inside two different
+# programs can fuse differently under XLA and drift by an ulp.
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=(
+    "policy", "capacity", "w_eff", "k_extent", "softcap", "scale",
+    "allocate", "evict_cap"))
+def finalize_pipeline(k: jax.Array, v: jax.Array, pos: jax.Array,
+                      length: jax.Array, q_tail: jax.Array,
+                      windows: jax.Array, cur_pos, budgets_default:
+                      jax.Array, *, policy: PolicyConfig, capacity: int,
+                      w_eff: int, k_extent: int, softcap, scale: float,
+                      allocate: bool, evict_cap: bool) -> cache_lib.KVCache:
+    """Slotted prefill working set -> initialised decode cache.
+
+    k/v [L, B, Hkv, Eb, Dh], pos [L, B, Eb], length [L, B] with the
+    canonical buffer extent Eb = max(capacity, k_extent); q_tail
+    [L, B, Hq, W, Dh] holds the last ``w_eff`` post-RoPE queries
+    right-aligned (zeros to the left for prompts shorter than W);
+    ``windows`` [L] per-layer attention windows (GLOBAL_WINDOW sentinel =
+    unwindowed); ``cur_pos``: last prompt position (traced);
+    ``budgets_default`` [L, B]: the schedule used when ``allocate`` is off
+    (non-LETHE policies, or families that skip prefill allocation).
+
+    ``k_extent``: the static, power-of-two bucketed (``finalize_extent``)
+    key extent the statistics reduce over — it must cover every live slot.
+    Bucketing it is what lets a refill wave over many distinct prompt
+    lengths share O(log) compiled pipelines. ``evict_cap``: clamp evict_at
+    to capacity (transformer-family spelling); otherwise evict_at=budgets.
+    """
+    L, B = length.shape
+    cur = jnp.asarray(cur_pos, jnp.int32)
+    win_start = cur - (w_eff - 1)
+
+    def layer_stats(k_l, pos_l, len_l, qt, w):
+        q_win = qt[:, :, -w_eff:]
+        k_e = k_l[..., :k_extent, :]
+        pos_e = pos_l[..., :k_extent]
+        colsums, probs = ops.obs_colsums(
+            q_win, k_e, win_start=win_start, window=w, softcap=softcap,
+            scale=scale, k_pos=pos_e)
+        scores = pad_to_extent(rasr.prefill_scores(colsums, w_eff),
+                               pos_l.shape[-1], axis=1)
+        valid = pos_e >= 0
+        spars = sparsity_lib.row_sparsity_from_probs(
+            probs, where=valid[:, None, None, :],
+            n_valid=jnp.maximum(len_l, 2)[:, None, None])
+        return scores, spars
+
+    scores_all, spars_all = jax.vmap(layer_stats)(k, pos, length, q_tail,
+                                                  windows)
+
+    if allocate and policy.kind == LETHE:
+        budgets = alloc_budgets(spars_all, policy, capacity)
+    else:
+        budgets = budgets_default.astype(jnp.int32)
+
+    fill = jax.vmap(functools.partial(cache_lib.fill_from_prefill_slotted,
+                                      capacity=capacity))
+    k_c, v_c, pos_c, score_c, len_c = fill(k, v, pos, scores_all, length)
+    cache = cache_lib.KVCache(
+        k=k_c, v=v_c, pos=pos_c, score=score_c, length=len_c,
+        budget=budgets,
+        evict_at=(jnp.minimum(budgets, capacity).astype(jnp.int32)
+                  if evict_cap else budgets),
+        sparsity=spars_all)
+
+    if policy.prunes:
+        from repro.core import pruning
+        cache = jax.vmap(
+            lambda lay, w: pruning.prune_layer(
+                lay, cur, policy=policy, window=w, force=True)
+        )(cache, windows)
+    return cache
+
+
+def finalize_inputs(buf: cache_lib.KVCache, *, capacity: int,
+                    k_extent: int):
+    """Pad/slice a chunked working buffer to the pipeline's canonical
+    extent Eb = max(capacity, k_extent) (pure data movement, exact)."""
+    eb = max(capacity, k_extent)
+    return (pad_to_extent(buf.k, eb, axis=3),
+            pad_to_extent(buf.v, eb, axis=3),
+            pad_to_extent(buf.pos, eb, axis=2, fill=-1),
+            buf.length)

@@ -149,10 +149,14 @@ def _rglru_block_seq(x: jax.Array, lp: dict, cfg: ArchConfig,
     h2 = common.apply_norm(x, lp["ffn_norm"], cfg)
     x = x + common.apply_mlp(h2, lp["mlp"], cfg)
     cw = cfg.conv_width
+    # Conv history for the next step/chunk: the last cw-1 *inputs including
+    # any carried-in history* (a chunk shorter than the conv width must not
+    # refill the window with zeros — that would desynchronise chunked
+    # prefill from the whole-sequence pass).
+    hist_in = (jnp.zeros((y.shape[0], cw - 1, y.shape[2]), y.dtype)
+               if prev is None else prev)
     new_state = {"h": h_last,
-                 "conv": y[:, -(cw - 1):] if y.shape[1] >= cw - 1 else
-                 jnp.concatenate([jnp.zeros((y.shape[0], cw - 1 - y.shape[1],
-                                             y.shape[2]), y.dtype), y], 1)}
+                 "conv": jnp.concatenate([hist_in, y], 1)[:, -(cw - 1):]}
     return x, new_state
 
 
@@ -203,13 +207,15 @@ def forward_train(params, tokens, cfg: ArchConfig, **_):
     return common.unembed(x, params, cfg), jnp.float32(0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "policy", "capacity",
-                                             "cache_dtype"))
-def prefill(params, tokens, cfg: ArchConfig, policy: PolicyConfig, *,
-            capacity=None, cache_dtype=jnp.float32, **_):
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "cache_dtype"))
+def _prefill_compute(params, tokens, cfg: ArchConfig, policy: PolicyConfig,
+                     *, cache_dtype=jnp.float32):
+    """Prefill compute (recurrent blocks + local-attention K/V + obs-window
+    query tails); cache construction runs in the shared
+    ``chunked.finalize_pipeline`` (see ``prefill``)."""
     B, S = tokens.shape
-    C = capacity or policy.capacity
-    attn_ids = _attn_layer_ids(cfg)
+    W = policy.obs_window
+    w_eff = min(W, S)
     x = common.embed_tokens(tokens, params, cfg)
     rec_states, kv_layers = [], []
     for i, kind in enumerate(cfg.layer_kinds):
@@ -229,38 +235,179 @@ def prefill(params, tokens, cfg: ArchConfig, policy: PolicyConfig, *,
                 scale=cfg.d_head ** -0.5)
             out = jnp.swapaxes(attn_raw, 1, 2).reshape(B, S, -1) \
                 @ lp["attn"]["wo"]
-            scores, spars = attention.prefill_stats(
-                qh, kh, cfg, policy, window=cfg.sliding_window)
+            q_tail = jnp.pad(qh[:, :, S - w_eff:].astype(jnp.float32),
+                             ((0, 0), (0, 0), (W - w_eff, 0), (0, 0)))
             x = x + out
             h2 = common.apply_norm(x, lp["ffn_norm"], cfg)
             x = x + common.apply_mlp(h2, lp["mlp"], cfg)
             kv_layers.append((kh.astype(cache_dtype), vh.astype(cache_dtype),
-                              scores, spars))
-    logits = common.unembed(x[:, -1], params, cfg)
-
-    # Build the (attention-layers-only) slotted cache.
+                              q_tail))
     k_all = jnp.stack([t[0] for t in kv_layers])
     v_all = jnp.stack([t[1] for t in kv_layers])
-    sc_all = jnp.stack([t[2] for t in kv_layers])
-    sp_all = jnp.stack([t[3] for t in kv_layers])
-    fill = jax.vmap(lambda k, v, s: cache_lib.fill_from_prefill(
-        k=k, v=v, scores=s, capacity=C))
-    k_c, v_c, pos_c, score_c, len_c = fill(k_all, v_all, sc_all)
+    q_tails = jnp.stack([t[2] for t in kv_layers])
+    rec = jax.tree.map(lambda *xs: jnp.stack(xs), *rec_states)
+    return x[:, -1], k_all, v_all, q_tails, rec
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _head(params, x_last, cfg: ArchConfig):
+    return common.unembed(x_last, params, cfg)
+
+
+def _finalize_kv(k, v, pos, length, q_tails, cfg: ArchConfig,
+                 policy: PolicyConfig, *, capacity: int, w_eff: int,
+                 k_extent: int, cur_pos, batch: int):
+    from repro.models import chunked
+    n_attn = len(_attn_layer_ids(cfg))
+    nominal = min(policy.nominal_budget, capacity)
+    return chunked.finalize_pipeline(
+        k, v, pos, length, q_tails,
+        jnp.full((n_attn,), cfg.sliding_window, jnp.int32), cur_pos,
+        jnp.full((n_attn, batch), nominal, jnp.int32),
+        policy=policy, capacity=capacity, w_eff=w_eff, k_extent=k_extent,
+        softcap=None, scale=cfg.d_head ** -0.5, allocate=False,
+        evict_cap=False)
+
+
+def prefill(params, tokens, cfg: ArchConfig, policy: PolicyConfig, *,
+            capacity=None, cache_dtype=jnp.float32, **_):
+    from repro.models import chunked
+    B, S = tokens.shape
+    C = capacity or policy.capacity
+    n_attn = len(_attn_layer_ids(cfg))
+    x_last, k_all, v_all, q_tails, rec = _prefill_compute(
+        params, tokens, cfg, policy, cache_dtype=cache_dtype)
+    logits = _head(params, x_last, cfg)
+    k_extent = chunked.next_pow2(S)
+    eb = max(C, k_extent)
+    pos = jnp.broadcast_to(
+        jnp.where(jnp.arange(eb) < S, jnp.arange(eb), -1).astype(jnp.int32),
+        (n_attn, B, eb))
+    kv = _finalize_kv(
+        chunked.pad_to_extent(k_all, eb, axis=3),
+        chunked.pad_to_extent(v_all, eb, axis=3), pos,
+        jnp.full((n_attn, B), S, jnp.int32), q_tails, cfg, policy,
+        capacity=C, w_eff=min(policy.obs_window, S), k_extent=k_extent,
+        cur_pos=jnp.asarray(S - 1, jnp.int32), batch=B)
+    return logits, {"rec": rec, "kv": kv}
+
+
+# --------------------------------------------------------------------------
+# Chunked prefill: recurrent blocks carry their (h, conv) state across
+# chunks (exact — the recurrence is sequential); only the 1-in-3 local-
+# attention layers stream through a working buffer. Note the recurrent
+# layers run ``associative_scan`` whose reduction tree depends on the chunk
+# split, so chunked hidden states match the whole pass to float tolerance,
+# not bit-for-bit (tests/test_chunked_prefill.py treats this family
+# accordingly).
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "chunk_max",
+                                             "capacity", "cache_dtype"))
+def prefill_chunk_init(params, tokens, cfg: ArchConfig,
+                       policy: PolicyConfig, *, chunk_max: int,
+                       capacity: int | None = None,
+                       cache_dtype=jnp.float32, **_) -> dict:
+    from repro.models import chunked
+    B = tokens.shape[0]
+    C = capacity or policy.capacity
+    n_attn = len(_attn_layer_ids(cfg))
+    n_rec = cfg.n_layers - n_attn
+    w = cfg.lru_width or cfg.d_model
     nominal = min(policy.nominal_budget, C)
-    budgets = jnp.full((len(attn_ids), B), nominal, jnp.int32)
-    kv = cache_lib.KVCache(
-        k=k_c, v=v_c, pos=pos_c, score=score_c, length=len_c,
-        budget=budgets, evict_at=budgets, sparsity=sp_all)
-    if policy.prunes:
-        from repro.core import pruning
-        cur = jnp.asarray(S - 1, jnp.int32)
-        kv = jax.vmap(lambda lay: pruning.prune_layer(
-            lay, cur, policy=policy,
-            window=jnp.asarray(cfg.sliding_window, jnp.int32),
-            force=True))(kv)
-    state = {"rec": jax.tree.map(lambda *xs: jnp.stack(xs), *rec_states),
-             "kv": kv}
-    return logits, state
+    return {
+        "buf": chunked.init_buffer(
+            n_layers=n_attn, batch=B, n_kv_heads=cfg.n_kv_heads,
+            d_head=cfg.d_head, buf_capacity=C + chunk_max,
+            budgets0=jnp.full((n_attn, B), nominal, jnp.int32),
+            dtype=cache_dtype),
+        "q_tail": chunked.init_q_tail(
+            n_layers=n_attn, batch=B, n_heads=cfg.n_heads,
+            d_head=cfg.d_head, obs_window=policy.obs_window),
+        "extra": {"rec": {
+            "h": jnp.zeros((n_rec, B, w), jnp.float32),
+            "conv": jnp.zeros((n_rec, B, cfg.conv_width - 1, w),
+                              jnp.float32)}},
+        "x_last": jnp.zeros((B, cfg.d_model), jnp.float32),
+        "done": jnp.zeros((), jnp.int32),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "n",
+                                             "capacity", "compress",
+                                             "contiguous_offset"),
+                   donate_argnames=("carry",))
+def prefill_chunk(params, carry, tokens, cfg: ArchConfig,
+                  policy: PolicyConfig, *, n: int,
+                  capacity: int | None = None, compress: bool = False,
+                  contiguous_offset: int | None = None) -> dict:
+    import dataclasses as _dc
+
+    from repro.core.policy import LETHE
+    from repro.models import chunked
+    del n
+    C = capacity or policy.capacity
+    buf, q_tail, done = carry["buf"], carry["q_tail"], carry["done"]
+    rec = carry["extra"]["rec"]
+    B, nn = tokens.shape
+    if compress and policy.kind == LETHE:
+        buf = _dc.replace(buf, budget=chunked.alloc_budgets(
+            buf.sparsity, policy, C))
+    x = common.embed_tokens(tokens, params, cfg)
+    positions = jnp.broadcast_to(jnp.arange(nn, dtype=jnp.int32)
+                                 + jnp.asarray(done, jnp.int32), (B, nn))
+    win = jnp.asarray(cfg.sliding_window, jnp.int32)
+    new_rec, new_kv, new_tails = [], [], []
+    ri = ai = 0
+    for i, kind in enumerate(cfg.layer_kinds):
+        lp = params["layers"][i]
+        if kind == RGLRU:
+            st = jax.tree.map(lambda a: a[ri], rec)
+            x, st2 = _rglru_block_seq(x, lp, cfg, st)
+            new_rec.append(st2)
+            ri += 1
+        else:
+            lay = buf.layer(ai)
+            h = common.apply_norm(x, lp["norm"], cfg)
+            q, k, v = attention.project_qkv(h, lp["attn"], cfg)
+            q, k = attention._rope(q, k, positions, cfg)
+            qh, kh, vh = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+            attn_raw, lay = chunked.attend_chunk_layer(
+                lay, qh, kh, vh, done, policy=policy, window=win,
+                softcap=None, scale=cfg.d_head ** -0.5, capacity=C,
+                compress=compress, contiguous_offset=contiguous_offset)
+            out = jnp.swapaxes(attn_raw, 1, 2).reshape(B, nn, -1) \
+                @ lp["attn"]["wo"]
+            x = x + out
+            h2 = common.apply_norm(x, lp["ffn_norm"], cfg)
+            x = x + common.apply_mlp(h2, lp["mlp"], cfg)
+            new_kv.append(lay)
+            new_tails.append(chunked.roll_q_tail(q_tail[ai], qh))
+            ai += 1
+    return {
+        "buf": jax.tree.map(lambda *xs: jnp.stack(xs), *new_kv),
+        "q_tail": jnp.stack(new_tails),
+        "extra": {"rec": jax.tree.map(lambda *xs: jnp.stack(xs), *new_rec)},
+        "x_last": x[:, -1].astype(jnp.float32),
+        "done": jnp.asarray(done, jnp.int32) + nn,
+    }
+
+
+def prefill_finalize(params, carry, cfg: ArchConfig, policy: PolicyConfig,
+                     *, w_eff: int, k_extent: int,
+                     capacity: int | None = None
+                     ) -> tuple[jax.Array, dict]:
+    from repro.models import chunked
+    C = capacity or policy.capacity
+    B = carry["x_last"].shape[0]
+    logits = _head(params, carry["x_last"].astype(jnp.float32), cfg)
+    k_e, v_e, pos_e, length = chunked.finalize_inputs(
+        carry["buf"], capacity=C, k_extent=k_extent)
+    kv = _finalize_kv(
+        k_e, v_e, pos_e, length, carry["q_tail"], cfg, policy,
+        capacity=C, w_eff=w_eff, k_extent=k_extent,
+        cur_pos=jnp.asarray(carry["done"], jnp.int32) - 1, batch=B)
+    return logits, {"rec": carry["extra"]["rec"], "kv": kv}
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "policy"),

@@ -187,10 +187,8 @@ def forward_train(params: dict, tokens: jax.Array, cfg: ArchConfig, **_
 
 @functools.partial(jax.jit, static_argnames=("cfg", "policy", "capacity",
                                              "cache_dtype"))
-def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig, policy=None,
-            *, capacity=None, cache_dtype=None, **_):
-    """Returns (last-token logits, recurrent state). Policy is ignored —
-    the state is O(1); there is nothing to prune."""
+def _prefill_compute(params: dict, tokens: jax.Array, cfg: ArchConfig,
+                     policy=None, *, capacity=None, cache_dtype=None, **_):
     B, S = tokens.shape
     x = common.embed_tokens(tokens, params, cfg)
     state = init_state(cfg, B, x.dtype)
@@ -201,8 +199,74 @@ def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig, policy=None,
         return y, new_st
 
     x, new_state = layer_scan(body, x, (params["layers"], state))
-    logits = common.unembed(x[:, -1], params, cfg)
-    return logits, new_state
+    return x[:, -1], new_state
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _head(params: dict, x_last: jax.Array, cfg: ArchConfig):
+    return common.unembed(x_last, params, cfg)
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig, policy=None,
+            *, capacity=None, cache_dtype=None, **_):
+    """Returns (last-token logits, recurrent state). Policy is ignored —
+    the state is O(1); there is nothing to prune. The logits head is the
+    same compiled program chunked prefill finalizes through."""
+    x_last, state = _prefill_compute(params, tokens, cfg, policy,
+                                     capacity=capacity,
+                                     cache_dtype=cache_dtype)
+    return _head(params, x_last, cfg), state
+
+
+# --------------------------------------------------------------------------
+# Chunked prefill: the recurrence is a sequential time-scan, so chunking is
+# exact by construction — run the same scan chunk by chunk with the carried
+# state. No KV cache exists, hence no working buffer, no compression, and
+# no capacity limit on prompt length (memory is O(1) in S).
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "chunk_max",
+                                             "capacity", "cache_dtype"))
+def prefill_chunk_init(params: dict, tokens: jax.Array, cfg: ArchConfig,
+                       policy=None, *, chunk_max: int = 0, capacity=None,
+                       cache_dtype=None, **_) -> dict:
+    B = tokens.shape[0]
+    return {
+        "state": init_state(cfg, B, jnp.float32),
+        "extra": {},
+        "x_last": jnp.zeros((B, cfg.d_model), jnp.float32),
+        "done": jnp.zeros((), jnp.int32),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "n",
+                                             "capacity", "compress",
+                                             "contiguous_offset"),
+                   donate_argnames=("carry",))
+def prefill_chunk(params: dict, carry: dict, tokens: jax.Array,
+                  cfg: ArchConfig, policy=None, *, n: int = 0,
+                  capacity=None, compress: bool = False,
+                  contiguous_offset=None) -> dict:
+    del n, compress, contiguous_offset
+    B, nn = tokens.shape
+    x = common.embed_tokens(tokens, params, cfg)
+
+    def body(xc, xs):
+        lp, st = xs
+        y, new_st = _layer_seq(lp, cfg, xc, st)
+        return y, new_st
+
+    x, new_state = layer_scan(body, x, (params["layers"], carry["state"]))
+    return {"state": new_state, "extra": {},
+            "x_last": x[:, -1].astype(jnp.float32),
+            "done": jnp.asarray(carry["done"], jnp.int32) + nn}
+
+
+def prefill_finalize(params: dict, carry: dict, cfg: ArchConfig,
+                     policy=None, *, w_eff: int = 0, k_extent: int = 0,
+                     capacity=None) -> tuple[jax.Array, dict]:
+    del w_eff, k_extent
+    return _head(params, carry["x_last"], cfg), carry["state"]
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "policy"),

@@ -157,26 +157,24 @@ def _init_budgets(cfg: ArchConfig, policy: PolicyConfig) -> jax.Array:
     return jnp.full((L,), nominal, jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "policy", "capacity",
-                                             "cache_dtype"))
-def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
-            policy: PolicyConfig, *, capacity: int | None = None,
-            embeds: jax.Array | None = None,
-            positions3: jax.Array | None = None,
-            cache_dtype=jnp.float32
-            ) -> tuple[jax.Array, cache_lib.KVCache]:
-    """tokens [B, S] -> (last-token logits [B, V], initialised KVCache).
-
-    Runs full-sequence attention per layer, collects per-layer K/V +
-    observation-window RASR scores + Hoyer sparsity, fills the slotted cache,
-    performs Lethe's spatial budget allocation and one forced prune round.
-    """
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "cache_dtype"))
+def _prefill_compute(params: dict, tokens: jax.Array, cfg: ArchConfig,
+                     policy: PolicyConfig, *,
+                     embeds: jax.Array | None = None,
+                     positions3: jax.Array | None = None,
+                     cache_dtype=jnp.float32):
+    """Full-sequence prefill *compute*: per-layer attention + FFN, emitting
+    the raw ingredients of cache construction — per-layer K/V, the
+    right-aligned observation-window query tail, and the last token's final
+    hidden state. The statistics/fill/budget/prune tail runs in the shared
+    ``chunked.finalize_pipeline`` program (see ``prefill``)."""
     B, S = tokens.shape[0], tokens.shape[1]
-    C = capacity or policy.capacity
     x = common.embed_tokens(tokens, params, cfg)
     if embeds is not None:
         x = embeds.astype(x.dtype)
     windows = layer_windows(cfg)
+    W = policy.obs_window
+    w_eff = min(W, S)
 
     def body(carry, xs):
         lp, w = xs
@@ -196,7 +194,8 @@ def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
         attn_raw = shard_hints.prefill_out_hint(attn_raw)
         attn_out = jnp.swapaxes(attn_raw, 1, 2).reshape(B, S, -1) \
             @ lp["attn"]["wo"]
-        scores, spars = attention.prefill_stats(qh, kh, cfg, policy, window=w)
+        q_tail = jnp.pad(qh[:, :, S - w_eff:].astype(jnp.float32),
+                         ((0, 0), (0, 0), (W - w_eff, 0), (0, 0)))
 
         if cfg.parallel_block:
             ffn_out, _ = _ffn(h, lp, cfg)
@@ -211,42 +210,197 @@ def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
             if cfg.sandwich_norm:
                 ffn_out = common.apply_norm(ffn_out, lp["post_ffn_norm"], cfg)
             y = y + ffn_out
-        return y, (kh.astype(cache_dtype), vh.astype(cache_dtype), scores,
-                   spars)
+        return y, (kh.astype(cache_dtype), vh.astype(cache_dtype), q_tail)
 
-    x, (k_all, v_all, scores_all, spars_all) = layer_scan(
+    x, (k_all, v_all, q_tails) = layer_scan(
         body, x, (params["layers"], windows))
+    return x[:, -1], k_all, v_all, q_tails
 
-    logits = common.unembed(x[:, -1], params, cfg)
 
-    # ---- cache construction -------------------------------------------------
-    fill = jax.vmap(lambda k, v, s: cache_lib.fill_from_prefill(
-        k=k, v=v, scores=s, capacity=C))
-    k_c, v_c, pos_c, score_c, len_c = fill(k_all, v_all, scores_all)
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _head(params: dict, x_last: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Last-token logits — one compiled program shared by whole-prompt and
+    chunked prefill (both feed it the same final hidden state)."""
+    return common.unembed(x_last, params, cfg)
 
-    if policy.kind == LETHE:
-        budgets = sparsity_lib.allocate_budgets_batched(
-            spars_all, capacity=C,
-            nominal=min(policy.nominal_budget, C),
-            min_budget=max(policy.sink_len + policy.recent_len + 2,
-                           int(policy.min_budget_ratio
-                               * min(policy.nominal_budget, C))),
-            sink_len=policy.sink_len, recent_len=policy.recent_len)
-    else:
-        budgets = jnp.broadcast_to(_init_budgets(cfg, policy)[:, None],
-                                   (cfg.n_layers, B))
-    cache = cache_lib.KVCache(
-        k=k_c, v=v_c, pos=pos_c, score=score_c, length=len_c,
-        budget=budgets, evict_at=jnp.minimum(budgets, C).astype(jnp.int32),
-        sparsity=spars_all)
 
-    if policy.prunes:
-        from repro.core import pruning
-        cur = jnp.asarray(S - 1, jnp.int32)
-        prune_l = jax.vmap(
-            lambda lay, w: pruning.prune_layer(lay, cur, policy=policy,
-                                               window=w, force=True))
-        cache = prune_l(cache, windows)
+def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
+            policy: PolicyConfig, *, capacity: int | None = None,
+            embeds: jax.Array | None = None,
+            positions3: jax.Array | None = None,
+            cache_dtype=jnp.float32
+            ) -> tuple[jax.Array, cache_lib.KVCache]:
+    """tokens [B, S] -> (last-token logits [B, V], initialised KVCache).
+
+    Orchestrates two compiled programs: the full-sequence compute
+    (``_prefill_compute``) and the shared statistics/fill/budget/prune tail
+    (``chunked.finalize_pipeline`` — the *same* program chunked prefill
+    finalizes through, which is what makes chunked admission bit-identical
+    to this whole-prompt path).
+    """
+    from repro.models import chunked
+    B, S = tokens.shape[0], tokens.shape[1]
+    C = capacity or policy.capacity
+    x_last, k_all, v_all, q_tails = _prefill_compute(
+        params, tokens, cfg, policy, embeds=embeds, positions3=positions3,
+        cache_dtype=cache_dtype)
+    logits = _head(params, x_last, cfg)
+
+    k_extent = chunked.next_pow2(S)
+    eb = max(C, k_extent)
+    pos = jnp.broadcast_to(
+        jnp.where(jnp.arange(eb) < S, jnp.arange(eb), -1).astype(jnp.int32),
+        (cfg.n_layers, B, eb))
+    cache = chunked.finalize_pipeline(
+        chunked.pad_to_extent(k_all, eb, axis=3),
+        chunked.pad_to_extent(v_all, eb, axis=3),
+        pos, jnp.full((cfg.n_layers, B), S, jnp.int32), q_tails,
+        layer_windows(cfg), jnp.asarray(S - 1, jnp.int32),
+        _default_budgets(cfg, policy, B), policy=policy, capacity=C,
+        w_eff=min(policy.obs_window, S), k_extent=k_extent,
+        softcap=cfg.attn_logit_softcap, scale=cfg.d_head ** -0.5,
+        allocate=True, evict_cap=True)
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# Chunked prefill (DESIGN.md §Prefill): admission as a schedulable unit.
+# carry = {"buf": KVCache working buffer [L,B,Hkv,Cbuf,Dh], "q_tail":
+# rolling obs-window queries [L,B,Hq,W,Dh], "extra": family state,
+# "x_last": [B,D] last final-layer hidden, "done": traced token count}.
+# --------------------------------------------------------------------------
+
+def _default_budgets(cfg: ArchConfig, policy: PolicyConfig,
+                     batch: int) -> jax.Array:
+    return jnp.broadcast_to(_init_budgets(cfg, policy)[:, None],
+                            (cfg.n_layers, batch))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "chunk_max",
+                                             "capacity", "cache_dtype"))
+def prefill_chunk_init(params: dict, tokens: jax.Array, cfg: ArchConfig,
+                       policy: PolicyConfig, *, chunk_max: int,
+                       capacity: int | None = None,
+                       cache_dtype=jnp.float32, **_) -> dict:
+    """Empty chunked-prefill carry (working buffer one chunk larger than
+    the final cache, so any chunk fits before compression runs)."""
+    from repro.models import chunked
+    B = tokens.shape[0]
+    C = capacity or policy.capacity
+    return {
+        "buf": chunked.init_buffer(
+            n_layers=cfg.n_layers, batch=B, n_kv_heads=cfg.n_kv_heads,
+            d_head=cfg.d_head, buf_capacity=C + chunk_max,
+            budgets0=_default_budgets(cfg, policy, B), dtype=cache_dtype),
+        "q_tail": chunked.init_q_tail(
+            n_layers=cfg.n_layers, batch=B, n_heads=cfg.n_heads,
+            d_head=cfg.d_head, obs_window=policy.obs_window),
+        "extra": {},
+        "x_last": jnp.zeros((B, cfg.d_model), jnp.float32),
+        "done": jnp.zeros((), jnp.int32),
+    }
+
+
+def _prefill_chunk_impl(params: dict, carry: dict, tokens: jax.Array | None,
+                        cfg: ArchConfig, policy: PolicyConfig, *,
+                        capacity: int | None, compress: bool,
+                        contiguous_offset: int | None,
+                        embeds: jax.Array | None = None,
+                        positions3: jax.Array | None = None) -> dict:
+    """Process one prompt chunk through every layer (shared by the dense /
+    MoE / VLM families). ``tokens`` [B, n] (or None with ``embeds``
+    [B, n, D] supplied — the VLM path). Returns the advanced carry."""
+    import dataclasses as _dc
+
+    from repro.models import chunked
+    C = capacity or policy.capacity
+    buf, q_tail, done = carry["buf"], carry["q_tail"], carry["done"]
+    if tokens is not None:
+        x = common.embed_tokens(tokens, params, cfg)
+    if embeds is not None:
+        x = embeds.astype(jnp.float32) if tokens is None \
+            else embeds.astype(x.dtype)
+    B, n, _ = x.shape
+    if compress and policy.kind == LETHE:
+        buf = _dc.replace(buf, budget=chunked.alloc_budgets(
+            buf.sparsity, policy, C))
+    windows = layer_windows(cfg)
+    positions = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)
+                                 + jnp.asarray(done, jnp.int32), (B, n))
+
+    def body(xc, xs):
+        lp, lay, w, qt = xs
+        h = common.apply_norm(xc, lp["attn_norm"], cfg)
+        q, k, v = attention.project_qkv(h, lp["attn"], cfg)
+        q, k = attention._rope(q, k, positions, cfg, positions3)
+        qh = jnp.swapaxes(q, 1, 2)
+        kh = jnp.swapaxes(k, 1, 2)
+        vh = jnp.swapaxes(v, 1, 2)
+        attn_raw, lay = chunked.attend_chunk_layer(
+            lay, qh, kh, vh, done, policy=policy, window=w,
+            softcap=cfg.attn_logit_softcap, scale=cfg.d_head ** -0.5,
+            capacity=C, compress=compress,
+            contiguous_offset=contiguous_offset)
+        attn_out = jnp.swapaxes(attn_raw, 1, 2).reshape(B, n, -1) \
+            @ lp["attn"]["wo"]
+        if cfg.parallel_block:
+            ffn_out, _ = _ffn(h, lp, cfg)
+            y = xc + attn_out + ffn_out
+        else:
+            if cfg.sandwich_norm:
+                attn_out = common.apply_norm(attn_out, lp["post_attn_norm"],
+                                             cfg)
+            y = xc + attn_out
+            h2 = common.apply_norm(y, lp["ffn_norm"], cfg)
+            ffn_out, _ = _ffn(h2, lp, cfg)
+            if cfg.sandwich_norm:
+                ffn_out = common.apply_norm(ffn_out, lp["post_ffn_norm"],
+                                            cfg)
+            y = y + ffn_out
+        qt = chunked.roll_q_tail(qt, qh)
+        return y, (lay, qt)
+
+    x, (new_buf, new_tail) = layer_scan(
+        body, x, (params["layers"], buf, windows, q_tail))
+    return {"buf": new_buf, "q_tail": new_tail, "extra": carry["extra"],
+            "x_last": x[:, -1].astype(jnp.float32),
+            "done": jnp.asarray(done, jnp.int32) + n}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "n",
+                                             "capacity", "compress",
+                                             "contiguous_offset"),
+                   donate_argnames=("carry",))
+def prefill_chunk(params: dict, carry: dict, tokens: jax.Array,
+                  cfg: ArchConfig, policy: PolicyConfig, *, n: int,
+                  capacity: int | None = None, compress: bool = False,
+                  contiguous_offset: int | None = None) -> dict:
+    del n   # implied by tokens.shape; kept for a uniform family signature
+    return _prefill_chunk_impl(
+        params, carry, tokens, cfg, policy, capacity=capacity,
+        compress=compress, contiguous_offset=contiguous_offset)
+
+
+def prefill_finalize(params: dict, carry: dict, cfg: ArchConfig,
+                     policy: PolicyConfig, *, w_eff: int, k_extent: int,
+                     capacity: int | None = None
+                     ) -> tuple[jax.Array, cache_lib.KVCache]:
+    """Working buffer -> (last-token logits, decode cache) through the SAME
+    compiled head + tail-pipeline programs the whole-prompt ``prefill``
+    uses — bit-identity between the two admission paths is a property of
+    the shared programs, not of matching math in separate ones."""
+    from repro.models import chunked
+    C = capacity or policy.capacity
+    B = carry["x_last"].shape[0]
+    logits = _head(params, carry["x_last"].astype(jnp.float32), cfg)
+    k_e, v_e, pos_e, length = chunked.finalize_inputs(
+        carry["buf"], capacity=C, k_extent=k_extent)
+    cache = chunked.finalize_pipeline(
+        k_e, v_e, pos_e, length, carry["q_tail"], layer_windows(cfg),
+        jnp.asarray(carry["done"], jnp.int32) - 1,
+        _default_budgets(cfg, policy, B), policy=policy, capacity=C,
+        w_eff=w_eff, k_extent=k_extent, softcap=cfg.attn_logit_softcap,
+        scale=cfg.d_head ** -0.5, allocate=True, evict_cap=True)
     return logits, cache
 
 

@@ -72,18 +72,70 @@ def forward_train(params, tokens, cfg: ArchConfig, *,
                                      positions3=pos3)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "policy", "capacity",
-                                             "cache_dtype"))
 def prefill(params, tokens, cfg: ArchConfig, policy: PolicyConfig, *,
             img_embeds: jax.Array | None = None, capacity=None,
             cache_dtype=jnp.float32, **_):
-    x, pos3 = build_inputs(params, tokens, cfg, img_embeds)
+    # Orchestrator, deliberately NOT jitted: transformer.prefill routes the
+    # tail pipeline through the shared `chunked.finalize_pipeline` program
+    # (jitting here would inline and re-fuse it, breaking the bit-identity
+    # contract with chunked admission).
+    x, pos3 = _build_inputs_jit(params, tokens, cfg, img_embeds)
     # transformer.prefill keys its shapes off `tokens`; pass a dummy token
     # array covering the full (img+text) sequence.
     full_tokens = jnp.zeros((tokens.shape[0], x.shape[1]), jnp.int32)
     return transformer.prefill(params, full_tokens, cfg, policy,
                                capacity=capacity, embeds=x, positions3=pos3,
                                cache_dtype=cache_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _build_inputs_jit(params, tokens, cfg: ArchConfig,
+                      img_embeds: jax.Array | None = None):
+    return build_inputs(params, tokens, cfg, img_embeds)
+
+
+# --------------------------------------------------------------------------
+# Chunked prefill: chunks span the *combined* (image patches ++ text)
+# sequence; the precomputed input embeddings and M-RoPE streams live in the
+# carry and are sliced per chunk.
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "chunk_max",
+                                             "capacity", "cache_dtype"))
+def prefill_chunk_init(params, tokens, cfg: ArchConfig,
+                       policy: PolicyConfig, *, chunk_max: int,
+                       capacity: int | None = None,
+                       cache_dtype=jnp.float32,
+                       img_embeds: jax.Array | None = None, **_) -> dict:
+    x, pos3 = build_inputs(params, tokens, cfg, img_embeds)
+    carry = transformer.prefill_chunk_init(
+        params, tokens, cfg, policy, chunk_max=chunk_max,
+        capacity=capacity, cache_dtype=cache_dtype)
+    carry["extra"] = {"embeds": x, "pos3": pos3}
+    return carry
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "n",
+                                             "capacity", "compress",
+                                             "contiguous_offset"),
+                   donate_argnames=("carry",))
+def prefill_chunk(params, carry, tokens, cfg: ArchConfig,
+                  policy: PolicyConfig, *, n: int,
+                  capacity: int | None = None, compress: bool = False,
+                  contiguous_offset: int | None = None) -> dict:
+    del tokens   # chunk content comes from the precomputed embeddings
+    done = jnp.asarray(carry["done"], jnp.int32)
+    emb = jax.lax.dynamic_slice_in_dim(carry["extra"]["embeds"], done, n,
+                                       axis=1)
+    pos3 = jax.lax.dynamic_slice_in_dim(carry["extra"]["pos3"], done, n,
+                                        axis=2)
+    return transformer._prefill_chunk_impl(
+        params, carry, None, cfg, policy, capacity=capacity,
+        compress=compress, contiguous_offset=contiguous_offset,
+        embeds=emb, positions3=pos3)
+
+
+prefill_finalize = transformer.prefill_finalize
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "policy"),

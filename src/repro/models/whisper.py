@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import cache as cache_lib
-from repro.core.policy import PolicyConfig
+from repro.core.policy import LETHE, PolicyConfig
 from repro.models import attention, common
 from repro.models.scan_config import layer_scan
 
@@ -144,15 +144,18 @@ def forward_train(params: dict, tokens: jax.Array, cfg: ArchConfig, *,
     return logits, jnp.float32(0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "policy", "capacity",
-                                             "cache_dtype"))
-def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
-            policy: PolicyConfig, *, enc_frames: jax.Array,
-            capacity: int | None = None, cache_dtype=jnp.float32, **_):
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "cache_dtype"))
+def _prefill_compute(params: dict, tokens: jax.Array, cfg: ArchConfig,
+                     policy: PolicyConfig, *, enc_frames: jax.Array,
+                     cache_dtype=jnp.float32):
+    """Decoder prefill compute (encoder + cross K/V + per-layer self K/V +
+    observation-window query tail); the cache-construction tail runs in the
+    shared ``chunked.finalize_pipeline`` (see ``prefill``)."""
     enc_out = encode(params, enc_frames, cfg)
     ck, cv = _cross_kv(params, enc_out, cfg, cache_dtype)
     B, S = tokens.shape
-    C = capacity or policy.capacity
+    W = policy.obs_window
+    w_eff = min(W, S)
     x = params["embed"][tokens] + params["pos_embed"][:S]
 
     def body(carry, xs):
@@ -164,34 +167,163 @@ def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
         raw = ops.prefill_attention(qh, kh, vh, causal=True,
                                     scale=cfg.d_head ** -0.5)
         out = jnp.swapaxes(raw, 1, 2).reshape(B, S, -1) @ lp["attn"]["wo"]
-        scores, spars = attention.prefill_stats(qh, kh, cfg, policy)
+        q_tail = jnp.pad(qh[:, :, S - w_eff:].astype(jnp.float32),
+                         ((0, 0), (0, 0), (W - w_eff, 0), (0, 0)))
         y = carry + out
         h2 = common.apply_norm(y, lp["xnorm"], cfg)
         y = y + _cross_attend_full(h2, lp, ck_l, cv_l, cfg)
         h3 = common.apply_norm(y, lp["ffn_norm"], cfg)
         y = y + common.apply_mlp(h3, lp["mlp"], cfg)
-        return y, (kh.astype(cache_dtype), vh.astype(cache_dtype), scores,
-                   spars)
+        return y, (kh.astype(cache_dtype), vh.astype(cache_dtype), q_tail)
 
-    x, (k_all, v_all, sc_all, sp_all) = layer_scan(
+    x, (k_all, v_all, q_tails) = layer_scan(
         body, x, (params["dec_layers"], ck, cv))
-    x = common.apply_norm(x[:, -1], params["final_norm"], cfg)
-    logits = x @ params["embed"].T
+    return x[:, -1], k_all, v_all, q_tails, ck, cv
 
-    fill = jax.vmap(lambda k, v, s: cache_lib.fill_from_prefill(
-        k=k, v=v, scores=s, capacity=C))
-    k_c, v_c, pos_c, score_c, len_c = fill(k_all, v_all, sc_all)
-    nominal = min(policy.nominal_budget, C)
-    budgets = jnp.full((cfg.n_layers, B), nominal, jnp.int32)
-    kv = cache_lib.KVCache(k=k_c, v=v_c, pos=pos_c, score=score_c,
-                           length=len_c, budget=budgets, evict_at=budgets,
-                           sparsity=sp_all)
-    if policy.prunes:
-        from repro.core import pruning
-        cur = jnp.asarray(S - 1, jnp.int32)
-        kv = jax.vmap(lambda lay: pruning.prune_layer(
-            lay, cur, policy=policy, force=True))(kv)
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _head(params: dict, x_last: jax.Array, cfg: ArchConfig) -> jax.Array:
+    x = common.apply_norm(x_last, params["final_norm"], cfg)
+    return x @ params["embed"].T
+
+
+def _finalize_kv(params, k, v, pos, length, q_tails, cfg: ArchConfig,
+                 policy: PolicyConfig, *, capacity: int, w_eff: int,
+                 k_extent: int, cur_pos, batch: int):
+    from repro.models import chunked
+    nominal = min(policy.nominal_budget, capacity)
+    return chunked.finalize_pipeline(
+        k, v, pos, length, q_tails,
+        jnp.full((cfg.n_layers,), chunked.GLOBAL_WINDOW, jnp.int32),
+        cur_pos,
+        jnp.full((cfg.n_layers, batch), nominal, jnp.int32),
+        policy=policy, capacity=capacity, w_eff=w_eff, k_extent=k_extent,
+        softcap=None, scale=cfg.d_head ** -0.5, allocate=False,
+        evict_cap=False)
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
+            policy: PolicyConfig, *, enc_frames: jax.Array,
+            capacity: int | None = None, cache_dtype=jnp.float32, **_):
+    from repro.models import chunked
+    B, S = tokens.shape
+    C = capacity or policy.capacity
+    x_last, k_all, v_all, q_tails, ck, cv = _prefill_compute(
+        params, tokens, cfg, policy, enc_frames=enc_frames,
+        cache_dtype=cache_dtype)
+    logits = _head(params, x_last, cfg)
+    k_extent = chunked.next_pow2(S)
+    eb = max(C, k_extent)
+    pos = jnp.broadcast_to(
+        jnp.where(jnp.arange(eb) < S, jnp.arange(eb), -1).astype(jnp.int32),
+        (cfg.n_layers, B, eb))
+    kv = _finalize_kv(
+        params, chunked.pad_to_extent(k_all, eb, axis=3),
+        chunked.pad_to_extent(v_all, eb, axis=3), pos,
+        jnp.full((cfg.n_layers, B), S, jnp.int32), q_tails, cfg, policy,
+        capacity=C, w_eff=min(policy.obs_window, S), k_extent=k_extent,
+        cur_pos=jnp.asarray(S - 1, jnp.int32), batch=B)
     return logits, {"kv": kv, "cross_k": ck, "cross_v": cv}
+
+
+# --------------------------------------------------------------------------
+# Chunked prefill (DESIGN.md §Prefill). The encoder runs once at init (the
+# cross-attention K/V are static); only the decoder self-attention streams
+# through the working buffer.
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "chunk_max",
+                                             "capacity", "cache_dtype"))
+def prefill_chunk_init(params: dict, tokens: jax.Array, cfg: ArchConfig,
+                       policy: PolicyConfig, *, chunk_max: int,
+                       capacity: int | None = None,
+                       cache_dtype=jnp.float32,
+                       enc_frames: jax.Array | None = None, **_) -> dict:
+    from repro.models import chunked
+    B = tokens.shape[0]
+    C = capacity or policy.capacity
+    enc_out = encode(params, enc_frames, cfg)
+    ck, cv = _cross_kv(params, enc_out, cfg, cache_dtype)
+    nominal = min(policy.nominal_budget, C)
+    return {
+        "buf": chunked.init_buffer(
+            n_layers=cfg.n_layers, batch=B, n_kv_heads=cfg.n_kv_heads,
+            d_head=cfg.d_head, buf_capacity=C + chunk_max,
+            budgets0=jnp.full((cfg.n_layers, B), nominal, jnp.int32),
+            dtype=cache_dtype),
+        "q_tail": chunked.init_q_tail(
+            n_layers=cfg.n_layers, batch=B, n_heads=cfg.n_heads,
+            d_head=cfg.d_head, obs_window=policy.obs_window),
+        "extra": {"cross_k": ck, "cross_v": cv},
+        "x_last": jnp.zeros((B, cfg.d_model), jnp.float32),
+        "done": jnp.zeros((), jnp.int32),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "n",
+                                             "capacity", "compress",
+                                             "contiguous_offset"),
+                   donate_argnames=("carry",))
+def prefill_chunk(params: dict, carry: dict, tokens: jax.Array,
+                  cfg: ArchConfig, policy: PolicyConfig, *, n: int,
+                  capacity: int | None = None, compress: bool = False,
+                  contiguous_offset: int | None = None) -> dict:
+    import dataclasses as _dc
+
+    from repro.models import chunked
+    del n
+    C = capacity or policy.capacity
+    buf, q_tail, done = carry["buf"], carry["q_tail"], carry["done"]
+    ck, cv = carry["extra"]["cross_k"], carry["extra"]["cross_v"]
+    B, nn = tokens.shape
+    if compress and policy.kind == LETHE:
+        buf = _dc.replace(buf, budget=chunked.alloc_budgets(
+            buf.sparsity, policy, C))
+    pos_emb = jax.lax.dynamic_slice_in_dim(
+        params["pos_embed"], jnp.asarray(done, jnp.int32), nn, axis=0)
+    x = params["embed"][tokens] + pos_emb
+
+    def body(xc, xs):
+        lp, lay, qt, ck_l, cv_l = xs
+        h = common.apply_norm(xc, lp["norm"], cfg)
+        q, k, v = attention.project_qkv(h, lp["attn"], cfg)
+        qh, kh, vh = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+        attn_raw, lay = chunked.attend_chunk_layer(
+            lay, qh, kh, vh, done, policy=policy, window=None,
+            softcap=None, scale=cfg.d_head ** -0.5, capacity=C,
+            compress=compress, contiguous_offset=contiguous_offset)
+        out = jnp.swapaxes(attn_raw, 1, 2).reshape(B, nn, -1) \
+            @ lp["attn"]["wo"]
+        y = xc + out
+        h2 = common.apply_norm(y, lp["xnorm"], cfg)
+        y = y + _cross_attend_full(h2, lp, ck_l, cv_l, cfg)
+        h3 = common.apply_norm(y, lp["ffn_norm"], cfg)
+        y = y + common.apply_mlp(h3, lp["mlp"], cfg)
+        qt = chunked.roll_q_tail(qt, qh)
+        return y, (lay, qt)
+
+    x, (new_buf, new_tail) = layer_scan(
+        body, x, (params["dec_layers"], buf, q_tail, ck, cv))
+    return {"buf": new_buf, "q_tail": new_tail, "extra": carry["extra"],
+            "x_last": x[:, -1].astype(jnp.float32),
+            "done": jnp.asarray(done, jnp.int32) + nn}
+
+
+def prefill_finalize(params: dict, carry: dict, cfg: ArchConfig,
+                     policy: PolicyConfig, *, w_eff: int, k_extent: int,
+                     capacity: int | None = None) -> tuple[jax.Array, dict]:
+    from repro.models import chunked
+    C = capacity or policy.capacity
+    B = carry["x_last"].shape[0]
+    logits = _head(params, carry["x_last"].astype(jnp.float32), cfg)
+    k_e, v_e, pos_e, length = chunked.finalize_inputs(
+        carry["buf"], capacity=C, k_extent=k_extent)
+    kv = _finalize_kv(
+        params, k_e, v_e, pos_e, length, carry["q_tail"], cfg, policy,
+        capacity=C, w_eff=w_eff, k_extent=k_extent,
+        cur_pos=jnp.asarray(carry["done"], jnp.int32) - 1, batch=B)
+    return logits, {"kv": kv, "cross_k": carry["extra"]["cross_k"],
+                    "cross_v": carry["extra"]["cross_v"]}
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "policy"),

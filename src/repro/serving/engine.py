@@ -17,10 +17,23 @@ Plus the slot-scoped primitives the continuous-batching scheduler composes
   * ``release_slot``     — retire a finished slot back to empty.
   * ``decode_segment``   — ``segment_len`` greedy steps with *per-row*
                            positions and done-flags under one ``lax.scan``.
+
+And the chunked-prefill admission path (DESIGN.md §Prefill) that turns a
+prompt into a stream of schedulable work units so admission never stalls
+live decodes:
+  * ``start_prefill_chunked``  — open a ``PrefillJob`` (pow2 ``chunk_plan``,
+                                 working-buffer carry; prompts longer than
+                                 capacity stream through prefill-phase
+                                 compression).
+  * ``prefill_chunk_step``     — advance one chunk (donated carry).
+  * ``finish_prefill_chunked`` — finalize + donated insert, first tokens.
+  * ``admit_slots_chunked``    — one-shot form, differentially equal to
+                                 ``admit_slots`` for fits-capacity prompts.
 """
 from __future__ import annotations
 
 import functools
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -82,6 +95,51 @@ def _gen_lens(tokens: np.ndarray, eos_id: int | None) -> tuple[np.ndarray,
     finished = hit.any(axis=1)
     first = np.where(finished, hit.argmax(axis=1) + 1, N)
     return first.astype(np.int32), finished
+
+
+def chunk_plan(s_total: int, chunk_budget: int) -> tuple[int, ...]:
+    """Power-of-two chunk decomposition of a prompt length.
+
+    The plan is ``P = 2^⌊log2(budget)⌋`` repeated, then the binary
+    decomposition of the remainder (descending) — so across *every* prompt
+    length the set of distinct chunk shapes is {1, 2, 4, …, P}: a refill
+    wave over arbitrarily mixed lengths compiles O(log chunk_budget) chunk
+    programs instead of one prefill program per distinct length (the chunk
+    offset is traced, not baked into the program).
+    """
+    assert s_total > 0 and chunk_budget > 0
+    p = 1
+    while p * 2 <= chunk_budget:
+        p *= 2
+    plan = [p] * (s_total // p)
+    rem = s_total % p
+    for b in reversed(range(rem.bit_length())):
+        if rem & (1 << b):
+            plan.append(1 << b)
+    return tuple(plan)
+
+
+@dataclass
+class PrefillJob:
+    """Host-side handle for an in-flight chunked prefill (one admission
+    group of equal-length prompts). Advanced one chunk at a time by
+    ``Engine.prefill_chunk_step``; the device carry is donated through each
+    step."""
+    carry: Any
+    batch: dict                  # (possibly row-padded) admission batch
+    plan: tuple[int, ...]
+    s_total: int
+    compress: bool
+    n_real: int                  # real request rows (before row padding)
+    next_chunk: int = 0
+
+    @property
+    def finished(self) -> bool:
+        return self.next_chunk >= len(self.plan)
+
+    @property
+    def chunks_total(self) -> int:
+        return len(self.plan)
 
 
 class Engine:
@@ -284,6 +342,93 @@ class Engine:
             self.params, batch, self.policy, state, [slot],
             cache_dtype=self.cache_dtype)
         return state, logits[0]
+
+    # ---- chunked prefill (stall-free admission; DESIGN.md §Prefill) -------
+
+    def start_prefill_chunked(self, batch: dict, *, chunk_size: int,
+                              pad_rows_to: int | None = None) -> PrefillJob:
+        """Open a chunked prefill for one group of equal-length requests.
+
+        ``pad_rows_to`` right-pads the batch with dummy rows so every
+        admission group shares one program per chunk shape regardless of
+        group size (dummy rows are discarded at insert — their slot id is
+        -1). Prompts longer than capacity stream through prefill-phase
+        compression; a policy that cannot evict (FullKV) rejects them here.
+        """
+        s_total = self.model.total_prompt_len(batch)
+        plan = chunk_plan(s_total, chunk_size)
+        # Admission decision before any device work (the audio family's
+        # init runs its whole encoder); raises for an over-capacity prompt
+        # the policy cannot evict.
+        compress = self.model.chunked_compress(self.policy, s_total)
+        n_real = batch["tokens"].shape[0]
+        if pad_rows_to is not None and n_real < pad_rows_to:
+            pad = pad_rows_to - n_real
+
+            def pad_rows(x):
+                return jnp.concatenate(
+                    [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+            batch = {k: (pad_rows(jnp.asarray(v)) if v is not None else v)
+                     for k, v in batch.items()}
+        carry = self.model.prefill_chunk_init(
+            self.params, batch, self.policy, chunk_max=max(plan),
+            cache_dtype=self.cache_dtype)
+        if "buf" not in carry:
+            compress = False     # recurrence-only family: O(1) state
+        return PrefillJob(carry=carry, batch=batch, plan=plan,
+                          s_total=s_total, compress=compress,
+                          n_real=n_real)
+
+    def prefill_chunk_step(self, job: PrefillJob) -> PrefillJob:
+        """Advance one chunk — the schedulable unit of prefill work. The
+        carry is donated: each step mutates the standing working buffers.
+
+        REPRO_CHUNK_FLASH=1 passes the chunk's *static* offset while the
+        buffer is still contiguous, dispatching the Pallas flash kernel's
+        ``q_offset`` path on TPU (one program per chunk offset — trades
+        retraces for kernel throughput; windowed layer scans fall back to
+        the slotted oracle inside ``ops.chunk_attention``). The default
+        keeps the offset traced: O(log chunk) programs per refill wave.
+        """
+        assert not job.finished
+        n = job.plan[job.next_chunk]
+        done = sum(job.plan[:job.next_chunk])
+        chunk = (None if self.model.cfg.family == "vlm"
+                 else jnp.asarray(job.batch["tokens"][:, done:done + n]))
+        offset = None
+        if (os.environ.get("REPRO_CHUNK_FLASH", "0") == "1"
+                and done + n <= self.policy.capacity):
+            offset = done        # contiguous: no compression has run yet
+        job.carry = self.model.prefill_chunk(
+            self.params, job.carry, chunk, self.policy, n=n,
+            compress=job.compress, contiguous_offset=offset)
+        job.next_chunk += 1
+        return job
+
+    def finish_prefill_chunked(self, state, job: PrefillJob, slot_ids):
+        """Finalize a completed job and insert its rows into the live
+        state (same donated masked insert as ``admit_slots``). ``slot_ids``
+        addresses the real rows; dummy padding rows map to -1 (no-op).
+        Returns (state', greedy first tokens [n_real])."""
+        assert job.finished
+        logits, rows = self.model.prefill_finalize(
+            self.params, job.carry, self.policy, s_total=job.s_total)
+        ids = list(slot_ids) + [-1] * (logits.shape[0] - len(slot_ids))
+        state = cache_lib.update_slots_donated(
+            state, jnp.asarray(ids, jnp.int32), rows)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return state, first[:job.n_real]
+
+    def admit_slots_chunked(self, state, slot_ids, batch: dict, *,
+                            chunk_size: int, pad_rows_to: int | None = None):
+        """One-shot chunked admission (start -> every chunk -> insert):
+        differentially equal to ``admit_slots`` for prompts that fit
+        capacity, and the only admission path for prompts that don't."""
+        job = self.start_prefill_chunked(batch, chunk_size=chunk_size,
+                                         pad_rows_to=pad_rows_to)
+        while not job.finished:
+            job = self.prefill_chunk_step(job)
+        return self.finish_prefill_chunked(state, job, slot_ids)
 
     def release_slots(self, state, slot_ids, *, pad_to: int | None = None):
         """Retire a group of slots back to empty (K/V zeroed, pos −1,

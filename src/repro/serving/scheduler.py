@@ -56,11 +56,13 @@ class Completion:
     uid: int
     tokens: np.ndarray          # generated tokens (incl. EOS if emitted)
     latency_steps: int          # == len(tokens)
-    finish_reason: str = "length"       # "eos" | "length"
+    finish_reason: str = "length"       # "eos" | "length" | "rejected"
     queue_wait_s: float = 0.0   # submit -> prefill start
     ttft_s: float = 0.0         # submit -> first token (incl. queue wait)
     decode_steps: int = 0       # decode steps after the prefill token
     tokens_per_second: float = 0.0      # generated tokens / residency time
+    ttft_steps: int = 0         # scheduler decode steps executed before the
+    #                             first token (the wall-clock-free TTFT)
 
 
 @dataclasses.dataclass
@@ -69,18 +71,39 @@ class _Slot:
     tokens: list
     admit_ts: float
     ttft: float = 0.0
+    ttft_steps: int = 0
+
+
+@dataclasses.dataclass
+class _PrefillGroup:
+    """One in-flight chunked admission group: the engine job plus the
+    slots it reserved and the requests destined for them."""
+    job: object                     # engine.PrefillJob
+    assignments: list               # [(slot_id, Request)]
+    admit_ts: float
 
 
 class Scheduler:
     def __init__(self, engine: Engine, batch_slots: int, pad_token: int = 0,
                  segment_len: int = 32, eos_id: int | None = None,
-                 track_occupancy: bool = False):
+                 track_occupancy: bool = False,
+                 prefill_chunk_size: int | None = None):
         self.engine = engine
         self.batch_slots = batch_slots
         self.pad_token = pad_token
         self.segment_len = segment_len
         self.eos_id = eos_id
         self.track_occupancy = track_occupancy
+        # Chunked (stall-free) admission: prefill advances at most ONE chunk
+        # of this many tokens per decode segment while any row is decoding,
+        # so no live request ever waits on a whole prompt. None = the
+        # original whole-prompt admission.
+        self.prefill_chunk_size = prefill_chunk_size
+        # Pad admission groups to the full slot width so every refill wave
+        # shares one program per chunk shape (compile-friendly). Turn off
+        # when per-chunk FLOPs matter more than retraces (dummy rows cost
+        # real compute on small groups).
+        self.pad_admission_rows = True
         self.queue: collections.deque[Request] = collections.deque()
         self.completed: list[Completion] = []
         self.lifecycle: dict[int, list[str]] = {}
@@ -89,6 +112,20 @@ class Scheduler:
         # max per-slot cache occupancy ever observed across refills
         self.occupancy_trace: list[int] = []
         self.max_slot_tokens: int = 0
+        # chunked-admission telemetry: one record per segment boundary —
+        # how many live decode rows existed and how many prefill chunk
+        # steps ran before the next segment (the stall-bound witness: the
+        # chunk count is <= 1 whenever live > 0)
+        self.prefill_boundary_trace: list[dict] = []
+        self._decode_steps = 0
+        # per-segment wall-clock gaps: (rows live BEFORE the boundary,
+        # seconds since the previous segment finished). The gap covers the
+        # boundary work that preceded the segment, so it is the inter-token
+        # latency an already-decoding row experiences across an admission
+        # wave (benchmarks take the p95 over live>0 entries; rows admitted
+        # at the boundary itself are waiting on TTFT, not ITL, and don't
+        # tag the gap).
+        self.segment_gap_trace: list[tuple[int, float]] = []
 
     def submit(self, reqs: Iterable[Request]) -> None:
         now = time.perf_counter()
@@ -111,11 +148,77 @@ class Scheduler:
             queue_wait_s=slot.admit_ts - self._submit_ts[r.uid],
             ttft_s=slot.ttft - self._submit_ts[r.uid],
             decode_steps=len(toks) - 1,
-            tokens_per_second=len(toks) / resid))
+            tokens_per_second=len(toks) / resid,
+            ttft_steps=slot.ttft_steps))
+
+    def _activate(self, slots, tok, pos, done, i: int, r: Request, first: int,
+                  admit_ts: float) -> None:
+        """Bring one freshly admitted request live in slot ``i`` (or finish
+        it immediately: EOS on the very first token / a 1-token budget)."""
+        slot = _Slot(req=r, tokens=[int(first)], admit_ts=admit_ts,
+                     ttft=time.perf_counter(), ttft_steps=self._decode_steps)
+        if self.eos_id is not None and first == self.eos_id:
+            self._finish(slot, "eos")
+        elif r.max_new_tokens <= 1:
+            self._finish(slot, "length")
+        else:
+            self.lifecycle[r.uid].append(DECODING)
+            slots[i] = slot
+            tok[i] = first
+            pos[i] = len(r.prompt)
+            done[i] = False
+
+    def _open_prefill_groups(self, slots, reserved: set) -> list:
+        """Reserve free slots for queued requests and open chunked-prefill
+        jobs — one job per (FIFO-popped) equal-length group, padded to the
+        full slot width so a refill wave of any group size reuses one
+        program per chunk shape."""
+        free = [i for i in range(self.batch_slots)
+                if slots[i] is None and i not in reserved]
+        pending = []
+        while self.queue and free:
+            pending.append((free.pop(0), self.queue.popleft()))
+        groups = []
+        by_len: dict[int, list] = {}
+        for i, r in pending:
+            self.lifecycle[r.uid].append(PREFILLING)
+            by_len.setdefault(len(r.prompt), []).append((i, r))
+        admit_ts = time.perf_counter()
+        for _, group in sorted(by_len.items()):
+            prompts = np.stack([r.prompt for _, r in group]).astype(np.int32)
+            try:
+                job = self.engine.start_prefill_chunked(
+                    {"tokens": jnp.asarray(prompts)},
+                    chunk_size=self.prefill_chunk_size,
+                    pad_rows_to=(self.batch_slots if self.pad_admission_rows
+                                 else None))
+            except ValueError:
+                # inadmissible under this policy (prompt exceeds capacity
+                # and nothing can be evicted): reject the requests rather
+                # than abort the run — other in-flight requests must not
+                # lose their tokens to one bad arrival
+                now = time.perf_counter()
+                for _, r in group:
+                    self.lifecycle[r.uid].append(FINISHED)
+                    self.completed.append(Completion(
+                        uid=r.uid, tokens=np.zeros((0,), np.int32),
+                        latency_steps=0, finish_reason="rejected",
+                        queue_wait_s=admit_ts - self._submit_ts[r.uid],
+                        ttft_s=now - self._submit_ts[r.uid]))
+                continue
+            groups.append(_PrefillGroup(job=job, assignments=group,
+                                        admit_ts=admit_ts))
+        return groups
 
     def run(self) -> list[Completion]:
         """Drain the queue with continuous batching; returns completions
-        (uid-ordered). Greedy decoding (the deterministic serving mode)."""
+        (uid-ordered). Greedy decoding (the deterministic serving mode).
+
+        With ``prefill_chunk_size`` set, admission is *stall-free*: a
+        queued request's prefill advances at most one chunk per decode
+        segment while any row is decoding (Sarathi-style interleave), and
+        runs back-to-back only when no decode would be stalled by it.
+        """
         eng = self.engine
         B = self.batch_slots
         eos = self.eos_id
@@ -124,44 +227,68 @@ class Scheduler:
         tok = np.zeros((B,), np.int32)
         pos = np.zeros((B,), np.int32)
         done = np.ones((B,), bool)          # empty slots are frozen
+        jobs: list[_PrefillGroup] = []      # FIFO chunked-admission groups
+        self._decode_steps = 0
+        t_seg = time.perf_counter()
 
-        while self.queue or any(s is not None for s in slots):
-            # -- between segments: admit queued requests into free slots.
-            # Admissions are grouped by prompt length so one prefill + one
-            # donated insert covers a whole refill wave; the loop repeats in
-            # case a request finished at its very first token and freed its
-            # slot again.
-            while self.queue and any(s is None for s in slots):
-                pending = []
-                for i in range(B):
-                    if slots[i] is None and self.queue:
-                        pending.append((i, self.queue.popleft()))
-                admit_ts = time.perf_counter()
-                by_len: dict[int, list] = {}
-                for i, r in pending:
-                    self.lifecycle[r.uid].append(PREFILLING)
-                    by_len.setdefault(len(r.prompt), []).append((i, r))
-                for _, group in sorted(by_len.items()):
-                    ids = [i for i, _ in group]
-                    prompts = np.stack([r.prompt for _, r in group]
-                                       ).astype(np.int32)
-                    state, first = eng.admit_slots(
-                        state, ids, {"tokens": jnp.asarray(prompts)})
-                    first = np.asarray(first)
-                    ttft = time.perf_counter()
-                    for (i, r), f in zip(group, first):
-                        slot = _Slot(req=r, tokens=[int(f)],
-                                     admit_ts=admit_ts, ttft=ttft)
-                        if eos is not None and f == eos:
-                            self._finish(slot, "eos")
-                        elif r.max_new_tokens <= 1:
-                            self._finish(slot, "length")
-                        else:
-                            self.lifecycle[r.uid].append(DECODING)
-                            slots[i] = slot
-                            tok[i] = f
-                            pos[i] = len(r.prompt)
-                            done[i] = False
+        while self.queue or jobs or any(s is not None for s in slots):
+            live_pre = sum(s is not None for s in slots)
+            if self.prefill_chunk_size is None:
+                # -- whole-prompt admission (the original path): admit
+                # queued requests into free slots, grouped by prompt length
+                # so one prefill + one donated insert covers a whole refill
+                # wave; the loop repeats in case a request finished at its
+                # very first token and freed its slot again.
+                while self.queue and any(s is None for s in slots):
+                    pending = []
+                    for i in range(B):
+                        if slots[i] is None and self.queue:
+                            pending.append((i, self.queue.popleft()))
+                    admit_ts = time.perf_counter()
+                    by_len: dict[int, list] = {}
+                    for i, r in pending:
+                        self.lifecycle[r.uid].append(PREFILLING)
+                        by_len.setdefault(len(r.prompt), []).append((i, r))
+                    for _, group in sorted(by_len.items()):
+                        ids = [i for i, _ in group]
+                        prompts = np.stack([r.prompt for _, r in group]
+                                           ).astype(np.int32)
+                        state, first = eng.admit_slots(
+                            state, ids, {"tokens": jnp.asarray(prompts)})
+                        first = np.asarray(first)
+                        for (i, r), f in zip(group, first):
+                            self._activate(slots, tok, pos, done, i, r,
+                                           int(f), admit_ts)
+            else:
+                # -- chunked admission: reserve free slots, then advance
+                # prefill work under the stall bound (one chunk per segment
+                # while anything decodes; run-to-admission when idle).
+                reserved = {i for g in jobs for i, _ in g.assignments}
+                jobs.extend(self._open_prefill_groups(slots, reserved))
+                live = sum(s is not None for s in slots)
+                chunks_this_boundary = 0
+                while jobs:
+                    if live > 0 and chunks_this_boundary >= 1:
+                        break
+                    head = jobs[0]
+                    if not head.job.finished:
+                        head.job = eng.prefill_chunk_step(head.job)
+                        chunks_this_boundary += 1
+                    if head.job.finished:
+                        ids = [i for i, _ in head.assignments]
+                        state, first = eng.finish_prefill_chunked(
+                            state, head.job, ids)
+                        for (i, r), f in zip(head.assignments,
+                                             np.asarray(first)):
+                            self._activate(slots, tok, pos, done, i, r,
+                                           int(f), head.admit_ts)
+                        jobs.pop(0)
+                        if live == 0:
+                            # rows just went live — stop burning boundaries
+                            # on prefill and let them decode
+                            break
+                self.prefill_boundary_trace.append(
+                    {"live": live, "chunks": chunks_this_boundary})
 
             # -- reset every unoccupied slot (batched, one fused op; a
             # no-op at steady state when all slots are live). Re-resetting
@@ -176,6 +303,8 @@ class Scheduler:
             active = [i for i in range(B) if slots[i] is not None]
             self.occupancy_trace.append(len(active))
             if not active:
+                if jobs or self.queue:
+                    continue                 # admission still in flight
                 break                        # queue drained, nothing live
 
             # -- one decode segment over the live batch --------------------
@@ -184,6 +313,11 @@ class Scheduler:
             seg = np.asarray(seg)
             pos, done = np.array(pos_j), np.array(done_j)
             tok = seg[:, -1].astype(np.int32)
+            self._decode_steps += self.segment_len
+            now = time.perf_counter()
+            self.segment_gap_trace.append((min(live_pre, len(active)),
+                                           now - t_seg))
+            t_seg = now
             if self.track_occupancy:
                 self.max_slot_tokens = max(
                     self.max_slot_tokens, int(eng.slot_lengths(state).max()))

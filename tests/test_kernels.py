@@ -162,6 +162,139 @@ def test_flash_prefill_q_offset_chunked():
         rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("S,plan,bq,bk", [
+    (40, (16, 16, 8), 16, 16),      # final partial q_offset chunk
+    (72, (32, 32, 8), 16, 32),      # S % block_k != 0 (72 % 32)
+    (23, (8, 8, 4, 2, 1), 8, 16),   # nothing aligned: pow2 cascade
+])
+def test_flash_prefill_partial_chunk_cascade(S, plan, bq, bk):
+    """Chunked prefill's kernel contract: a cascade of q_offset chunks —
+    including a final chunk smaller than block_q, and sequence lengths not
+    a multiple of either block size — reproduces the full pass, per chunk
+    against the oracle and concatenated against the full oracle."""
+    assert sum(plan) == S
+    B, Hq, Hkv, Dh = 2, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, Dh))
+    k = jax.random.normal(ks[1], (B, Hkv, S, Dh))
+    v = jax.random.normal(ks[2], (B, Hkv, S, Dh))
+    o_full, _ = ref.prefill_attention_ref(q, k, v, causal=True,
+                                          scale=Dh ** -0.5)
+    outs, done = [], 0
+    for n in plan:
+        qc = q[:, :, done:done + n]
+        kc = k[:, :, :done + n]       # keys accumulated so far
+        vc = v[:, :, :done + n]
+        o_pl, _ = flash_prefill_pallas(qc, kc, vc, scale=Dh ** -0.5,
+                                       block_q=bq, block_k=bk,
+                                       q_offset=done, interpret=True)
+        o_ref, _ = ref.prefill_attention_ref(qc, kc, vc, causal=True,
+                                             scale=Dh ** -0.5,
+                                             q_offset=done)
+        np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                                   rtol=2e-5, atol=2e-5,
+                                   err_msg=f"chunk at {done}")
+        outs.append(o_pl)
+        done += n
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, axis=2)), np.asarray(o_full),
+        rtol=2e-5, atol=2e-5)
+
+
+def test_flash_prefill_q_offset_with_window():
+    """Sliding window + q_offset: a middle chunk whose window excludes part
+    of the key prefix (the RG-LRU local-attention chunked path)."""
+    B, Hq, Hkv, S, Dh, W = 1, 4, 2, 64, 32, 20
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, Dh))
+    k = jax.random.normal(ks[1], (B, Hkv, S, Dh))
+    v = jax.random.normal(ks[2], (B, Hkv, S, Dh))
+    o_full, _ = ref.prefill_attention_ref(q, k, v, causal=True, window=W,
+                                          scale=Dh ** -0.5)
+    outs, done = [], 0
+    for n in (32, 16, 16):
+        o_pl, _ = flash_prefill_pallas(
+            q[:, :, done:done + n], k[:, :, :done + n], v[:, :, :done + n],
+            scale=Dh ** -0.5, window=W, block_q=16, block_k=16,
+            q_offset=done, interpret=True)
+        outs.append(o_pl)
+        done += n
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, axis=2)), np.asarray(o_full),
+        rtol=2e-5, atol=2e-5)
+
+
+def test_chunk_attention_contiguous_matches_prefill_ref():
+    """The slotted chunk-attention oracle on a contiguous buffer (invalid
+    tail masked by k_pos = -1) is BIT-identical to the dense q_offset
+    oracle: masked sentinel scores underflow to exact zeros."""
+    B, Hq, Hkv, S, Cbuf, Dh = 2, 4, 2, 12, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(17), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, Dh))
+    k = jax.random.normal(ks[1], (B, Hkv, S, Dh))
+    v = jax.random.normal(ks[2], (B, Hkv, S, Dh))
+    kp = jnp.zeros((B, Hkv, Cbuf, Dh)).at[:, :, :S].set(k)
+    vp = jnp.zeros((B, Hkv, Cbuf, Dh)).at[:, :, :S].set(v)
+    pos = jnp.where(jnp.arange(Cbuf) < S, jnp.arange(Cbuf), -1)
+    pos = jnp.broadcast_to(pos, (B, Cbuf)).astype(jnp.int32)
+    done = 8
+    o_ref, _ = ref.prefill_attention_ref(
+        q[:, :, done:], k, v, causal=True, scale=Dh ** -0.5, q_offset=done)
+    o_ch = ref.chunk_attention_ref(q[:, :, done:], kp, vp, pos, done,
+                                   scale=Dh ** -0.5)
+    np.testing.assert_array_equal(np.asarray(o_ch), np.asarray(o_ref))
+
+
+def test_chunk_attention_single_query_matches_decode_ref():
+    """Cross-oracle check: a one-token chunk over a scattered (compressed)
+    slot layout must agree with the decode-attention oracle."""
+    B, Hq, Hkv, C, Dh = 2, 8, 2, 48, 32
+    ks = jax.random.split(jax.random.PRNGKey(19), 4)
+    q = jax.random.normal(ks[0], (B, Hq, 1, Dh))
+    k = jax.random.normal(ks[1], (B, Hkv, C, Dh))
+    v = jax.random.normal(ks[2], (B, Hkv, C, Dh))
+    # scattered positions with holes, invalid tail
+    pos = jnp.where(jax.random.uniform(ks[3], (B, C)) < 0.6,
+                    jnp.arange(C) * 2, -1).astype(jnp.int32)
+    pos = pos.at[:, 0].set(0)
+    cur = jnp.int32(2 * C)
+    o_dec, _ = ref.decode_attention_ref(q[:, :, 0], k, v, pos, cur,
+                                        scale=Dh ** -0.5)
+    o_ch = ref.chunk_attention_ref(q, k, v, pos, cur, scale=Dh ** -0.5)
+    np.testing.assert_allclose(np.asarray(o_ch[:, :, 0]), np.asarray(o_dec),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("window", [None, 16])
+def test_chunk_attention_window_on_scattered_slots(window):
+    """Slotted chunk attention with a sliding window: windowed-out and
+    invalid slots get no probability mass (checked via a brute-force
+    masked softmax)."""
+    B, Hq, Hkv, n, C, Dh = 1, 2, 1, 4, 24, 16
+    ks = jax.random.split(jax.random.PRNGKey(23), 4)
+    q = jax.random.normal(ks[0], (B, Hq, n, Dh))
+    k = jax.random.normal(ks[1], (B, Hkv, C, Dh))
+    v = jax.random.normal(ks[2], (B, Hkv, C, Dh))
+    pos = jnp.where(jax.random.uniform(ks[3], (B, C)) < 0.5,
+                    jnp.arange(C), -1).astype(jnp.int32)
+    pos = pos.at[:, 0].set(0)
+    q_start = jnp.int32(C)
+    out = ref.chunk_attention_ref(q, k, v, pos, q_start, window=window,
+                                  scale=Dh ** -0.5)
+    # brute force
+    qf = q.astype(jnp.float32).reshape(B, Hkv, Hq // Hkv, n, Dh)
+    s = jnp.einsum("bhgsd,bhcd->bhgsc", qf, k) * Dh ** -0.5
+    q_pos = jnp.arange(n) + q_start
+    mask = (pos[:, None, :] >= 0) & (pos[:, None, :] <= q_pos[None, :, None])
+    if window is not None:
+        mask &= pos[:, None, :] >= (q_pos[None, :, None] - window + 1)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    want = jnp.einsum("bhgsc,bhcd->bhgsd", p, v).reshape(B, Hq, n, Dh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
 def test_obs_colsums_match_full_probs():
     B, Hq, Hkv, S, Dh, W = 1, 4, 2, 48, 16, 8
     ks = jax.random.split(jax.random.PRNGKey(1), 2)
