@@ -147,6 +147,21 @@ def kl_vs_reference(logp: np.ndarray, logp_ref: np.ndarray) -> float:
     return float(np.mean(np.sum(p_ref * (logp_ref - logp), axis=-1)))
 
 
+def merge_json_section(path: str, key: str, value) -> None:
+    """Set one top-level section of a benchmark JSON, preserving the other
+    sections (e.g. BENCH_kv_quant.json's ``kernel``/``serving`` halves are
+    written by different benchmark entry points)."""
+    import json
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    merged = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = json.load(f)
+    merged[key] = value
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2)
+
+
 class CsvOut:
     """Collects ``name,us_per_call,derived`` rows for benchmarks/run.py."""
     def __init__(self):

@@ -1,25 +1,35 @@
 """Kernel microbenchmarks.
 
-Two suites:
+Three suites:
   * fused decode-attention+RASR wall time on the XLA-native ref path
     (interpret-mode kernel timing is meaningless on CPU; this validates the
     FLOP accounting used in the roofline);
   * the occupancy sweep behind the early-exit claim (DESIGN.md §2.3):
     the kernel's in-kernel block counter must track live tokens, not the
     static capacity C. Results land in experiments/BENCH_decode_occupancy.json
-    so the perf trajectory records the claim over time.
+    so the perf trajectory records the claim over time;
+  * ``--quant``: the int8 cache-DMA sweep (DESIGN.md §Quantization) — per
+    executed C-block the int8 path moves an int8 tile + one f32 scale row
+    instead of a bf16 tile, so cache bytes/step drop to (Dh+4)/(2·Dh) of
+    bf16 at every occupancy while the early-exit block counts stay equal.
+    Results land in the kernel section of experiments/BENCH_kv_quant.json.
 """
 from __future__ import annotations
 
 import json
 import os
+import sys
 import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro.core import cache as cache_lib
 from repro.kernels import ops, ref
 from repro.kernels.decode_attention import (GLOBAL_WINDOW,
                                             decode_attention_pallas,
@@ -104,9 +114,94 @@ def _occupancy_sweep(csv: common.CsvOut) -> None:
     os.makedirs(common.CACHE_DIR, exist_ok=True)
     with open(out_path, "w") as f:
         json.dump({"shape": {"B": B, "Hq": Hq, "Hkv": Hkv, "C": C, "Dh": Dh,
-                             "block_c": bc},
+                             "block_c": bc, "kv_format": "bf16",
+                             "kv_payload_itemsize": 2},
                    "sweep": sweep}, f, indent=2)
     print(f"# wrote {out_path}")
+
+
+def _cache_bytes_per_step(blocks: int, block_c: int, Dh: int, *,
+                          kv_format: str) -> int:
+    """Cache-side HBM bytes one (b, h) decode program DMAs: per executed
+    C-block, K + V payload tiles (+ the two f32 scale rows on int8)."""
+    if kv_format == "int8":
+        return blocks * block_c * (Dh * 1 + 4) * 2
+    return blocks * block_c * Dh * 2 * 2            # bf16 payload
+
+
+def _quant_sweep(csv: common.CsvOut) -> dict:
+    """int8-vs-bf16 cache DMA at equal capacity across the occupancy grid:
+    the early-exit block counts must be identical (quantization touches
+    bytes/block, not which blocks run) and the int8 path must match the
+    dequant oracle ≤ 1e-5; bytes/step derive from the measured counts."""
+    B, Hq, Hkv, C, Dh, bc = 4, 8, 2, 1024, 64, 128
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = jax.random.normal(ks[0], (B, Hq, Dh))
+    kd = jax.random.normal(ks[1], (B, Hkv, C, Dh))
+    vd = jax.random.normal(ks[2], (B, Hkv, C, Dh))
+    kq, ksc = cache_lib.quantize_kv(kd)
+    vq, vsc = cache_lib.quantize_kv(vd)
+    gamma = 0.95
+
+    sweep = []
+    for num, den in ((1, 8), (1, 4), (1, 2), (1, 1)):
+        live = max(1, (C * num) // den)
+        pos = jnp.where(jnp.arange(C)[None, :] < live,
+                        jnp.arange(C)[None, :], -1
+                        ).astype(jnp.int32).repeat(B, axis=0)
+        score = jnp.where(pos >= 0, jax.random.uniform(ks[3], (B, C)), 0.0)
+        lens = live_lengths(pos)
+        cur = lens - 1
+
+        o_q, ps_q, ns_q, blocks_q = decode_attention_pallas(
+            q, kq, vq, pos, score, lens, cur, jnp.int32(GLOBAL_WINDOW),
+            scale=Dh ** -0.5, gamma=gamma, block_c=bc, interpret=True,
+            k_scale=ksc, v_scale=vsc)
+        *_, blocks_d = decode_attention_pallas(
+            q, kd, vd, pos, score, lens, cur, jnp.int32(GLOBAL_WINDOW),
+            scale=Dh ** -0.5, gamma=gamma, block_c=bc, interpret=True)
+        o_r, ps_r, ns_r = ref.decode_attention_fused_ref(
+            q, kq, vq, pos, cur, score, gamma=gamma, scale=Dh ** -0.5,
+            k_scale=ksc, v_scale=vsc)
+        maxdiff = max(
+            float(np.abs(np.asarray(o_q) - np.asarray(o_r)).max()),
+            float(np.abs(np.asarray(ps_q) - np.asarray(ps_r)).max()),
+            float(np.abs(np.asarray(ns_q) - np.asarray(ns_r)).max()))
+        nb_q = int(np.asarray(blocks_q)[0, 0])
+        nb_d = int(np.asarray(blocks_d)[0, 0])
+        bytes_q = _cache_bytes_per_step(nb_q, bc, Dh, kv_format="int8")
+        bytes_d = _cache_bytes_per_step(nb_d, bc, Dh, kv_format="bf16")
+        sweep.append({
+            "occupancy": num / den, "live_tokens": live,
+            "blocks_executed_int8": nb_q, "blocks_executed_bf16": nb_d,
+            "cache_bytes_per_step_int8": bytes_q,
+            "cache_bytes_per_step_bf16": bytes_d,
+            "bytes_ratio_int8_over_bf16": bytes_q / bytes_d,
+            "max_abs_diff_vs_oracle": maxdiff,
+        })
+        csv.add(f"kernel/kv_quant/C{C}live{live}", float(bytes_q),
+                f"bf16_bytes={bytes_d};ratio={bytes_q/bytes_d:.3f};"
+                f"maxdiff={maxdiff:.2e}")
+
+    # Acceptance (ISSUE 5): ≤ ~55% of bf16 cache bytes/step at equal
+    # capacity, identical early-exit block counts, oracle-exact ≤ 1e-5.
+    assert all(s["bytes_ratio_int8_over_bf16"] <= 0.55 for s in sweep), sweep
+    assert all(s["blocks_executed_int8"] == s["blocks_executed_bf16"]
+               for s in sweep), sweep
+    assert all(s["max_abs_diff_vs_oracle"] <= 1e-5 for s in sweep), sweep
+
+    kernel_section = {
+        "shape": {"B": B, "Hq": Hq, "Hkv": Hkv, "C": C, "Dh": Dh,
+                  "block_c": bc},
+        "bytes_model": "per (b,h) program: blocks * block_c * "
+                       "(payload_itemsize*Dh + scale_bytes) * 2 [K and V]; "
+                       "bf16: 2*Dh, int8: 1*Dh + 4 (f32 scale/token/head)",
+        "sweep": sweep,
+    }
+    out_path = os.path.join(common.CACHE_DIR, "BENCH_kv_quant.json")
+    common.merge_json_section(out_path, "kernel", kernel_section)
+    print(f"# wrote {out_path} (kernel section)")
+    return kernel_section
 
 
 def run(csv: common.CsvOut) -> None:
@@ -116,3 +211,22 @@ def run(csv: common.CsvOut) -> None:
         csv.add(f"kernel/decode_attn/B{B}H{Hq}C{C}", us,
                 f"gflops_s={flops/us/1e3:.2f};probsum_fused=true")
     _occupancy_sweep(csv)
+    _quant_sweep(csv)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quant", action="store_true",
+                    help="run only the int8 cache-DMA sweep "
+                         "(kernel section of BENCH_kv_quant.json)")
+    args = ap.parse_args()
+    csv = common.CsvOut()
+    if args.quant:
+        _quant_sweep(csv)
+    else:
+        run(csv)
+
+
+if __name__ == "__main__":
+    main()

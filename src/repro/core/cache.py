@@ -16,6 +16,19 @@ Layout (stacked over layers so models can ``lax.scan`` the stack):
   budget    [L, B]     int32, spatial-allocator target (Sec. "Spatial ...")
   evict_at  [L, B]     int32, dynamic L_evict threshold (Algorithm 1)
   sparsity  [L, B]     f32, layerwise Hoyer sparsity EMA
+  k_scale,  [L, B, H_kv, C]  f32 per-(token, kv-head) dequant scales; ONLY
+  v_scale              present when the policy's ``kv_format`` is "int8"
+                       (k/v then hold int8 payloads); None on the dense path
+
+Quantized mode (``kv_format="int8"``, DESIGN.md §Quantization): K/V payloads
+are symmetric-int8 per (token, kv-head) blocks — q = round(x·127/amax(|x|)),
+one f32 scale per Dh-vector — quantised *on write* in every producer
+(``append_token``, ``append_chunk``, ``fill_from_prefill_slotted``) and
+dequantised *inside the attention kernels*, never as a host-visible pass.
+The scales are ordinary cache leaves with batch at axis 1 and the slot axis
+last, so the entire slot/prune machinery below (masked selects, the
+stable-partition ``compact``, slot refill) moves them with their tokens
+without any quantization-aware code.
 
 ``budget``/``evict_at``/``sparsity`` carry a batch axis because under
 continuous batching each slot hosts a *different request*: one row's
@@ -60,6 +73,11 @@ class KVCache:
     budget: jax.Array
     evict_at: jax.Array
     sparsity: jax.Array
+    # int8 mode only: per-(token, kv-head) dequant scales [..., H_kv, C].
+    # None on the dense path — the pytree then flattens to the exact same
+    # eight leaves as before the quantization refactor (bit-identity).
+    k_scale: jax.Array | None = None
+    v_scale: jax.Array | None = None
 
     @property
     def n_layers(self) -> int:
@@ -69,12 +87,71 @@ class KVCache:
     def capacity(self) -> int:
         return self.k.shape[-2]
 
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
     def layer(self, l: int) -> "KVCache":
         return jax.tree.map(lambda x: x[l], self)
 
+    def memory_breakdown(self) -> dict:
+        """Physical bytes per leaf group: K/V payloads, dequant scales, and
+        score/position/metadata — what actually occupies HBM, so benchmark
+        JSONs can record real bytes rather than just slot capacity."""
+        def nbytes(*xs):
+            return sum(x.size * x.dtype.itemsize for x in xs
+                       if x is not None)
+        return {
+            "kv_payload_bytes": nbytes(self.k, self.v),
+            "scale_bytes": nbytes(self.k_scale, self.v_scale),
+            "score_bytes": nbytes(self.score),
+            "meta_bytes": nbytes(self.pos, self.length, self.budget,
+                                 self.evict_at, self.sparsity),
+        }
+
     def memory_bytes(self) -> int:
-        return sum(x.size * x.dtype.itemsize
-                   for x in (self.k, self.v, self.pos, self.score))
+        return sum(self.memory_breakdown().values())
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-vector int8 quantization over the trailing (Dh) axis.
+
+    x [..., Dh] -> (q int8 [..., Dh], scale f32 [...]): q = round(x / scale)
+    with scale = amax(|x|)/127 (1.0 for all-zero vectors, so empty slots
+    round-trip to exact zeros). Worst-case elementwise error is scale/2 =
+    amax/254 — the per-head error bound the tests assert.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array,
+                  dtype=jnp.float32) -> jax.Array:
+    """Inverse of ``quantize_kv``: q [..., Dh] int8, scale [...] f32."""
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+            ).astype(dtype)
+
+
+def init_kv_payload(shape: tuple, *, kv_format: str, dtype
+                    ) -> tuple[jax.Array, jax.Array,
+                               jax.Array | None, jax.Array | None]:
+    """Zero-initialised (k, v, k_scale, v_scale) payload leaves for a
+    slotted buffer of shape [..., C, Dh] — THE one spelling of the
+    kv_format -> dtype/scale-init rule, shared by the decode cache and the
+    chunked-prefill working buffer. int8 mode gives int8 payloads with
+    unit f32 scales; the k/v scale arrays are deliberately distinct (a
+    shared buffer would be donated twice by the slot-refill jits, which
+    XLA rejects)."""
+    quantized = kv_format == "int8"
+    kv_dtype = jnp.int8 if quantized else dtype
+
+    def scale0():
+        return jnp.ones(shape[:-1], jnp.float32) if quantized else None
+    return (jnp.zeros(shape, kv_dtype), jnp.zeros(shape, kv_dtype),
+            scale0(), scale0())
 
 
 def init_cache(*, n_layers: int, batch: int, n_kv_heads: int, capacity: int,
@@ -82,15 +159,17 @@ def init_cache(*, n_layers: int, batch: int, n_kv_heads: int, capacity: int,
                dtype=jnp.bfloat16) -> KVCache:
     shape = (n_layers, batch, n_kv_heads, capacity, d_head)
     nominal = min(policy.nominal_budget, capacity)
+    k, v, k_scale, v_scale = init_kv_payload(
+        shape, kv_format=getattr(policy, "kv_format", "bf16"), dtype=dtype)
     return KVCache(
-        k=jnp.zeros(shape, dtype),
-        v=jnp.zeros(shape, dtype),
+        k=k, v=v,
         pos=jnp.full((n_layers, batch, capacity), -1, jnp.int32),
         score=jnp.zeros((n_layers, batch, capacity), jnp.float32),
         length=jnp.zeros((n_layers, batch), jnp.int32),
         budget=jnp.full((n_layers, batch), nominal, jnp.int32),
         evict_at=jnp.full((n_layers, batch), nominal, jnp.int32),
         sparsity=jnp.zeros((n_layers, batch), jnp.float32),
+        k_scale=k_scale, v_scale=v_scale,
     )
 
 
@@ -171,7 +250,9 @@ def reset_slot(cache: KVCache, slots) -> KVCache:
         k=fill(cache.k, 0), v=fill(cache.v, 0), pos=fill(cache.pos, -1),
         score=fill(cache.score, 0.0), length=fill(cache.length, 0),
         budget=fill(cache.budget, C), evict_at=fill(cache.evict_at, C),
-        sparsity=fill(cache.sparsity, 0.0))
+        sparsity=fill(cache.sparsity, 0.0),
+        k_scale=(fill(cache.k_scale, 1.0) if cache.quantized else None),
+        v_scale=(fill(cache.v_scale, 1.0) if cache.quantized else None))
 
 
 def insert_slot(cache: KVCache, slot, row: KVCache) -> KVCache:
@@ -211,6 +292,11 @@ def append_token(layer: KVCache, k_new: jax.Array, v_new: jax.Array,
     idx = jnp.minimum(layer.length, C - 1)  # [B]
     pos_val = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (B,))
 
+    ks = vs = None
+    if layer.quantized:          # quantize-on-write: one scale per kv-head
+        k_new, ks = quantize_kv(k_new)       # [B, Hkv, Dh] int8, [B, Hkv]
+        v_new, vs = quantize_kv(v_new)
+
     if _onehot_append():
         hot = (jnp.arange(C, dtype=jnp.int32)[None, :] == idx[:, None])
         k = jnp.where(hot[:, None, :, None],
@@ -220,9 +306,16 @@ def append_token(layer: KVCache, k_new: jax.Array, v_new: jax.Array,
         pos = jnp.where(hot, pos_val[:, None], layer.pos)
         score = jnp.where(hot, jnp.float32(init_score), layer.score)
         length = jnp.minimum(layer.length + 1, C)
+        k_scale = v_scale = None
+        if layer.quantized:
+            k_scale = jnp.where(hot[:, None, :], ks[:, :, None],
+                                layer.k_scale)
+            v_scale = jnp.where(hot[:, None, :], vs[:, :, None],
+                                layer.v_scale)
         return KVCache(k=k, v=v, pos=pos, score=score, length=length,
                        budget=layer.budget, evict_at=layer.evict_at,
-                       sparsity=layer.sparsity)
+                       sparsity=layer.sparsity,
+                       k_scale=k_scale, v_scale=v_scale)
 
     def write_row(buf, upd, i):
         return jax.lax.dynamic_update_slice(buf, upd[:, None, :], (0, i, 0))
@@ -237,9 +330,16 @@ def append_token(layer: KVCache, k_new: jax.Array, v_new: jax.Array,
     score = jax.vmap(write_scalar)(
         layer.score, jnp.full((B,), init_score, jnp.float32), idx)
     length = jnp.minimum(layer.length + 1, C)
+    k_scale = v_scale = None
+    if layer.quantized:
+        def write_head(buf, val, i):   # buf [Hkv, C], val [Hkv]
+            return jax.lax.dynamic_update_slice(buf, val[:, None], (0, i))
+        k_scale = jax.vmap(write_head)(layer.k_scale, ks, idx)
+        v_scale = jax.vmap(write_head)(layer.v_scale, vs, idx)
     return KVCache(k=k, v=v, pos=pos, score=score, length=length,
                    budget=layer.budget, evict_at=layer.evict_at,
-                   sparsity=layer.sparsity)
+                   sparsity=layer.sparsity,
+                   k_scale=k_scale, v_scale=v_scale)
 
 
 def append_chunk(layer: KVCache, k_new: jax.Array, v_new: jax.Array,
@@ -257,6 +357,10 @@ def append_chunk(layer: KVCache, k_new: jax.Array, v_new: jax.Array,
     """
     B, Hkv, C, Dh = layer.k.shape
     n = k_new.shape[2]
+    ks = vs = None
+    if layer.quantized:          # quantize-on-write, per (token, kv-head)
+        k_new, ks = quantize_kv(k_new)       # int8, scales [B, Hkv, n]
+        v_new, vs = quantize_kv(v_new)
     # chunk-relative target index of each slot: slot c takes chunk token
     # (c - length) when that lies in [0, n)
     rel = (jnp.arange(C, dtype=jnp.int32)[None, :]
@@ -274,9 +378,18 @@ def append_chunk(layer: KVCache, k_new: jax.Array, v_new: jax.Array,
     pos = jnp.where(hit, jnp.asarray(pos_new, jnp.int32)[take], layer.pos)
     score = jnp.where(hit, jnp.float32(init_score), layer.score)
     length = jnp.minimum(layer.length + n, C)
+    k_scale = v_scale = None
+    if layer.quantized:
+        k_scale = jnp.where(hit[:, None, :],
+                            jnp.take_along_axis(ks, take[:, None, :],
+                                                axis=2), layer.k_scale)
+        v_scale = jnp.where(hit[:, None, :],
+                            jnp.take_along_axis(vs, take[:, None, :],
+                                                axis=2), layer.v_scale)
     return KVCache(k=k, v=v, pos=pos, score=score, length=length,
                    budget=layer.budget, evict_at=layer.evict_at,
-                   sparsity=layer.sparsity)
+                   sparsity=layer.sparsity,
+                   k_scale=k_scale, v_scale=v_scale)
 
 
 def compact(layer: KVCache, keep: jax.Array) -> KVCache:
@@ -312,16 +425,27 @@ def compact(layer: KVCache, keep: jax.Array) -> KVCache:
     gather_kv = jax.vmap(lambda buf, o: jnp.take(buf, o, axis=1))  # over B
     k = gather_kv(layer.k, order)
     v = gather_kv(layer.v, order)
+    k_scale = v_scale = None
+    if layer.quantized:     # scales ride the same permutation as their slot
+        k_scale = jnp.take_along_axis(layer.k_scale, order[:, None, :],
+                                      axis=-1)
+        v_scale = jnp.take_along_axis(layer.v_scale, order[:, None, :],
+                                      axis=-1)
     return KVCache(k=k, v=v, pos=pos, score=score, length=n_kept,
                    budget=layer.budget, evict_at=layer.evict_at,
-                   sparsity=layer.sparsity)
+                   sparsity=layer.sparsity,
+                   k_scale=k_scale, v_scale=v_scale)
 
 
 def fill_from_prefill_slotted(k: jax.Array, v: jax.Array, pos: jax.Array,
                               score: jax.Array, length: jax.Array, *,
-                              capacity: int
+                              capacity: int,
+                              k_scale: jax.Array | None = None,
+                              v_scale: jax.Array | None = None
                               ) -> tuple[jax.Array, jax.Array, jax.Array,
-                                         jax.Array, jax.Array]:
+                                         jax.Array, jax.Array,
+                                         jax.Array | None,
+                                         jax.Array | None]:
     """Initialise a layer slice from a *slotted* prefill working set
     (k/v [B, Hkv, E, Dh], pos/score [B, E], length [B], E >= capacity).
 
@@ -332,11 +456,17 @@ def fill_from_prefill_slotted(k: jax.Array, v: jax.Array, pos: jax.Array,
     the selection is an identity gather of the packed prefix — bit-exact.
     The priority path is the whole-prompt S > capacity case.
 
-    Returns (k, v, pos, score, length) with the static ``capacity`` axis.
+    ``k_scale``/``v_scale`` [B, Hkv, E]: int8 dequant scales, gathered with
+    the same index list so each surviving token keeps its own scale
+    (quantize-on-write happens upstream; this fill is pure data movement).
+
+    Returns (k, v, pos, score, length, k_scale, v_scale) with the static
+    ``capacity`` axis (scales are None on the dense path).
     """
     B, Hkv, E, Dh = k.shape
     if E == capacity:
-        return k, v, pos, score, jnp.minimum(length, capacity)
+        return k, v, pos, score, jnp.minimum(length, capacity), \
+            k_scale, v_scale
     valid = pos >= 0
     prio = jnp.where(valid, score.astype(jnp.float32), -jnp.inf)
     last = jnp.maximum(length - 1, 0)
@@ -350,7 +480,12 @@ def fill_from_prefill_slotted(k: jax.Array, v: jax.Array, pos: jax.Array,
     pos_c = jnp.take_along_axis(pos, top_idx, axis=-1)
     score_c = jnp.take_along_axis(score.astype(jnp.float32), top_idx,
                                   axis=-1)
-    return k_c, v_c, pos_c, score_c, jnp.minimum(length, capacity)
+    ks_c = vs_c = None
+    if k_scale is not None:
+        ks_c = jnp.take_along_axis(k_scale, top_idx[:, None, :], axis=-1)
+        vs_c = jnp.take_along_axis(v_scale, top_idx[:, None, :], axis=-1)
+    return k_c, v_c, pos_c, score_c, jnp.minimum(length, capacity), \
+        ks_c, vs_c
 
 
 # (The old dense ``fill_from_prefill`` is gone: every prefill path now

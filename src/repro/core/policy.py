@@ -25,6 +25,12 @@ PYRAMIDKV = "pyramidkv"
 
 KINDS = (FULLKV, LETHE, H2O, STREAMING, PYRAMIDKV)
 
+# KV-cache storage formats. "bf16" = dense: K/V stored at the engine's
+# ``cache_dtype`` (bf16 on TPU, f32 in the CPU tests) — the pre-quantization
+# layout, kept bit-identical. "int8" = block-scaled: int8 payloads with one
+# f32 scale per (token, kv-head), dequantised inside the attention kernels.
+KV_FORMATS = ("bf16", "int8")
+
 
 @dataclass(frozen=True)
 class PolicyConfig:
@@ -43,9 +49,18 @@ class PolicyConfig:
     # PyramidKV schedule endpoints as fractions of nominal budget
     pyramid_top_ratio: float = 0.4
     pyramid_bottom_ratio: float = 1.6
+    kv_format: str = "bf16"      # KV storage format (see KV_FORMATS)
 
     def __post_init__(self):
         assert self.kind in KINDS, self.kind
+        if self.kv_format not in KV_FORMATS:
+            raise ValueError(
+                f"unknown kv_format {self.kv_format!r}; "
+                f"supported: {KV_FORMATS}")
+
+    @property
+    def quantized(self) -> bool:
+        return self.kv_format == "int8"
 
     # -- derived -------------------------------------------------------------
     @property
@@ -67,8 +82,8 @@ class PolicyConfig:
 
 
 def fullkv(capacity: int, **kw) -> PolicyConfig:
-    kw = {k: v for k, v in kw.items()
-          if k in ("sink_len", "obs_window")}  # rest is irrelevant to FullKV
+    kw = {k: v for k, v in kw.items()       # rest is irrelevant to FullKV
+          if k in ("sink_len", "obs_window", "kv_format")}
     return PolicyConfig(kind=FULLKV, capacity=capacity, **kw)
 
 

@@ -20,6 +20,7 @@ row instead of four.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
@@ -242,10 +243,10 @@ def prune_layer(layer: cache_lib.KVCache, cur_pos: jax.Array, *,
         compacted = cache_lib.compact(l, keep)
         new_evict = jnp.where(row_trig, dec.new_evict_at,
                               l.evict_at).astype(jnp.int32)
-        return cache_lib.KVCache(
-            k=compacted.k, v=compacted.v, pos=compacted.pos,
-            score=compacted.score, length=compacted.length,
-            budget=l.budget, evict_at=new_evict, sparsity=l.sparsity)
+        # compact carried k/v/pos/score (and int8 dequant scales) with the
+        # survivors; only the eviction schedule changes here.
+        return dataclasses.replace(compacted, budget=l.budget, evict_at=new_evict,
+                           sparsity=l.sparsity)
 
     if force:
         return do_prune(layer)
@@ -290,9 +291,7 @@ def compress_prefill_layer(layer: cache_lib.KVCache, cur_pos: jax.Array, *,
         keep = jnp.where(row_over[:, None], dec.keep,
                          cache_lib.valid_mask(l.pos))
         compacted = cache_lib.compact(l, keep)
-        return cache_lib.KVCache(
-            k=compacted.k, v=compacted.v, pos=compacted.pos,
-            score=compacted.score, length=compacted.length,
-            budget=l.budget, evict_at=l.evict_at, sparsity=l.sparsity)
+        return dataclasses.replace(compacted, budget=l.budget, evict_at=l.evict_at,
+                           sparsity=l.sparsity)
 
     return jax.lax.cond(jnp.any(row_over), do_compress, lambda l: l, layer)

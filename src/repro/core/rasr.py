@@ -19,6 +19,8 @@ later predictions").
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -32,10 +34,7 @@ def update_scores(layer: cache_lib.KVCache, probsum: jax.Array,
     valid = cache_lib.valid_mask(layer.pos)
     new_score = gamma * layer.score + probsum.astype(jnp.float32)
     new_score = jnp.where(valid, new_score, 0.0)
-    return cache_lib.KVCache(
-        k=layer.k, v=layer.v, pos=layer.pos, score=new_score,
-        length=layer.length, budget=layer.budget, evict_at=layer.evict_at,
-        sparsity=layer.sparsity)
+    return dataclasses.replace(layer, score=new_score)
 
 
 def prefill_scores(colsums: jax.Array, obs_window: int) -> jax.Array:

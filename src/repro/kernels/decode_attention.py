@@ -44,10 +44,23 @@ GLOBAL_WINDOW = 1 << 30  # sentinel: effectively unwindowed
 
 
 def _kernel(lens_ref, cur_ref, win_ref,                    # scalar prefetch
-            q_ref, k_ref, v_ref, pos_ref, score_ref,       # inputs
-            out_ref, psum_ref, nscore_ref, blocks_ref,     # outputs
-            m_s, l_s, acc_s, ps_s, cnt_s, *,               # scratch
-            scale: float, softcap: float | None, gamma: float, block_c: int):
+            *refs,                                         # ins/outs/scratch
+            scale: float, softcap: float | None, gamma: float, block_c: int,
+            quantized: bool):
+    # Positional layout (PrefetchScalarGridSpec hands refs flat): the int8
+    # path interleaves a per-(token, head) scales block after each payload —
+    # dequant happens here in VMEM, before the QK/PV matmuls, so the HBM DMA
+    # per C-block is the int8 tile + one f32 scale row instead of a bf16
+    # tile (≈ 53% of the bytes at Dh = 64).
+    if quantized:
+        (q_ref, k_ref, ks_ref, v_ref, vs_ref, pos_ref, score_ref,
+         out_ref, psum_ref, nscore_ref, blocks_ref,
+         m_s, l_s, acc_s, ps_s, cnt_s) = refs
+    else:
+        (q_ref, k_ref, v_ref, pos_ref, score_ref,
+         out_ref, psum_ref, nscore_ref, blocks_ref,
+         m_s, l_s, acc_s, ps_s, cnt_s) = refs
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     h = pl.program_id(1)
     c = pl.program_id(2)
@@ -68,6 +81,9 @@ def _kernel(lens_ref, cur_ref, win_ref,                    # scalar prefetch
         q = q_ref[0, 0].astype(jnp.float32)                # [G, Dh]
         kb = k_ref[0, 0].astype(jnp.float32)               # [BC, Dh]
         vb = v_ref[0, 0].astype(jnp.float32)               # [BC, Dh]
+        if quantized:
+            kb = kb * ks_ref[0, 0][:, None]                # VMEM dequant
+            vb = vb * vs_ref[0, 0][:, None]
         # In-kernel mask from slot positions: invalid (-1) slots, future
         # positions, and out-of-window positions are dead.
         pos_blk = pos_ref[0, pl.ds(c * block_c, block_c)]  # [BC] int32
@@ -133,7 +149,9 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                             softcap: float | None = None,
                             gamma: float = 0.0,
                             block_c: int = 512,
-                            interpret: bool = False
+                            interpret: bool = False,
+                            k_scale: jax.Array | None = None,
+                            v_scale: jax.Array | None = None
                             ) -> tuple[jax.Array, jax.Array, jax.Array,
                                        jax.Array]:
     """Fused decode attention + RASR over a slotted cache.
@@ -143,6 +161,12 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     are packed in [0, lens)); cur_pos: scalar or [B] query position; window:
     scalar int32 sliding window (``GLOBAL_WINDOW`` = unwindowed).
 
+    ``k_scale``/``v_scale`` [B, Hkv, C]: when given, k/v hold int8
+    block-scaled payloads and each C-block is dequantised in VMEM right
+    after its (half-sized) DMA — the int8 hot path of DESIGN.md
+    §Quantization. The scales stream through the same clamped index map as
+    their payload, so the early-exit DMA skip covers them too.
+
     Returns (out [B, Hq, Dh], probsum [B, C], new_score [B, C],
     blocks [B, Hkv] — the number of C-blocks each program actually computed,
     the occupancy-proportionality counter used by tests/benchmarks).
@@ -151,6 +175,7 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     _, Hkv, C, _ = k.shape
     G = Hq // Hkv
     assert G * Hkv == Hq, (Hq, Hkv)
+    quantized = k_scale is not None
 
     block_c = min(block_c, max(C, 8))
     pad = (-C) % block_c
@@ -159,6 +184,9 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
         pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
         score = jnp.pad(score, ((0, 0), (0, pad)))
+        if quantized:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, 0), (0, pad)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, 0), (0, pad)))
     Cp = C + pad
     nc = Cp // block_c
 
@@ -175,21 +203,37 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         nb = jnp.maximum(pl.cdiv(lens_ref[b], block_c), 1)
         return (b, h, jnp.minimum(c, nb - 1), 0)
 
+    def scale_map(b, h, c, lens_ref, cur_ref, win_ref):
+        nb = jnp.maximum(pl.cdiv(lens_ref[b], block_c), 1)
+        return (b, h, jnp.minimum(c, nb - 1))
+
     def row_map(b, h, c, *_):
         return (b, 0)
 
     kernel = functools.partial(_kernel, scale=scale, softcap=softcap,
-                               gamma=gamma, block_c=block_c)
+                               gamma=gamma, block_c=block_c,
+                               quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, 1, G, Dh), lambda b, h, c, *_: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, block_c, Dh), kv_map),
+    ]
+    inputs = [qg, k]
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, 1, block_c), scale_map))
+        inputs.append(k_scale)
+    in_specs.append(pl.BlockSpec((1, 1, block_c, Dh), kv_map))
+    inputs.append(v)
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, 1, block_c), scale_map))
+        inputs.append(v_scale)
+    in_specs += [pl.BlockSpec((1, Cp), row_map),
+                 pl.BlockSpec((1, Cp), row_map)]
+    inputs += [pos, score]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, Hkv, nc),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, Dh), lambda b, h, c, *_: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, block_c, Dh), kv_map),
-            pl.BlockSpec((1, 1, block_c, Dh), kv_map),
-            pl.BlockSpec((1, Cp), row_map),
-            pl.BlockSpec((1, Cp), row_map),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, G, Dh), lambda b, h, c, *_: (b, h, 0, 0)),
             pl.BlockSpec((1, Cp), row_map),
@@ -214,7 +258,7 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
             jax.ShapeDtypeStruct((B, Hkv), jnp.int32),
         ],
         interpret=interpret,
-    )(lens, cur, win, qg, k, v, pos, score)
+    )(lens, cur, win, *inputs)
 
     out = out.reshape(B, Hq, Dh)
     return out, psum[:, :C], nscore[:, :C], blocks

@@ -21,9 +21,18 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, out_ref, lse_ref, m_s, l_s, acc_s, *,
-            scale: float, softcap: float | None, causal: bool,
-            window: int | None, block_q: int, block_k: int, q_offset: int):
+def _kernel(*refs, scale: float, softcap: float | None, causal: bool,
+            window: int | None, block_q: int, block_k: int, q_offset: int,
+            quantized: bool):
+    # int8 path: a per-(token, kv-head) scales block rides after each K/V
+    # payload block and is applied in VMEM before the matmuls (same
+    # in-kernel dequant as the decode kernel; DESIGN.md §Quantization).
+    if quantized:
+        (q_ref, k_ref, ks_ref, v_ref, vs_ref, out_ref, lse_ref,
+         m_s, l_s, acc_s) = refs
+    else:
+        q_ref, k_ref, v_ref, out_ref, lse_ref, m_s, l_s, acc_s = refs
+        ks_ref = vs_ref = None
     iq = pl.program_id(2)
     ik = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -54,6 +63,9 @@ def _kernel(q_ref, k_ref, v_ref, out_ref, lse_ref, m_s, l_s, acc_s, *,
         q = q_ref[0, 0].astype(jnp.float32).reshape(G * BQ, Dh)
         kb = k_ref[0, 0].astype(jnp.float32)               # [BK, Dh]
         vb = v_ref[0, 0].astype(jnp.float32)
+        if quantized:
+            kb = kb * ks_ref[0, 0][:, None]                # VMEM dequant
+            vb = vb * vs_ref[0, 0][:, None]
 
         s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
@@ -98,14 +110,20 @@ def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                          scale: float, softcap: float | None = None,
                          causal: bool = True, window: int | None = None,
                          block_q: int = 256, block_k: int = 512,
-                         q_offset: int = 0, interpret: bool = False
+                         q_offset: int = 0, interpret: bool = False,
+                         k_scale: jax.Array | None = None,
+                         v_scale: jax.Array | None = None
                          ) -> tuple[jax.Array, jax.Array]:
     """q: [B, Hq, S, Dh]; k, v: [B, Hkv, T, Dh].
+    ``k_scale``/``v_scale`` [B, Hkv, T]: int8 block-scaled K/V, dequantised
+    per key tile in VMEM (the chunked-prefill contiguous fast path over a
+    quantized working buffer).
     Returns (out [B, Hq, S, Dh], lse [B, Hq, S])."""
     B, Hq, S, Dh = q.shape
     _, Hkv, T, _ = k.shape
     G = Hq // Hkv
     assert G * Hkv == Hq
+    quantized = k_scale is not None
 
     block_q = min(block_q, S)
     block_k = min(block_k, T)
@@ -120,6 +138,9 @@ def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
         # unpadded T is required.
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        if quantized:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, 0), (0, pad_k)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, 0), (0, pad_k)))
     if pad_k and not causal:
         raise ValueError("non-causal prefill requires T % block_k == 0")
     Sp, Tp = S + pad_q, T + pad_k
@@ -127,18 +148,28 @@ def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qg = q.reshape(B, Hkv, G, Sp, Dh)
     kernel = functools.partial(
         _kernel, scale=scale, softcap=softcap, causal=causal, window=window,
-        block_q=block_q, block_k=block_k, q_offset=q_offset)
+        block_q=block_q, block_k=block_k, q_offset=q_offset,
+        quantized=quantized)
+    kv_spec = pl.BlockSpec((1, 1, block_k, Dh),
+                           lambda b, h, iq, ik: (b, h, ik, 0))
+    sc_spec = pl.BlockSpec((1, 1, block_k),
+                           lambda b, h, iq, ik: (b, h, ik))
+    in_specs = [pl.BlockSpec((1, 1, G, block_q, Dh),
+                             lambda b, h, iq, ik: (b, h, 0, iq, 0)),
+                kv_spec]
+    inputs = [qg, k]
+    if quantized:
+        in_specs.append(sc_spec)
+        inputs.append(k_scale)
+    in_specs.append(kv_spec)
+    inputs.append(v)
+    if quantized:
+        in_specs.append(sc_spec)
+        inputs.append(v_scale)
     out, lse = pl.pallas_call(
         kernel,
         grid=(B, Hkv, Sp // block_q, Tp // block_k),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, block_q, Dh),
-                         lambda b, h, iq, ik: (b, h, 0, iq, 0)),
-            pl.BlockSpec((1, 1, block_k, Dh),
-                         lambda b, h, iq, ik: (b, h, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, Dh),
-                         lambda b, h, iq, ik: (b, h, ik, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, G, block_q, Dh),
                          lambda b, h, iq, ik: (b, h, 0, iq, 0)),
@@ -155,7 +186,7 @@ def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((G * block_q, Dh), jnp.float32),
         ],
         interpret=interpret,
-    )(qg, k, v)
+    )(*inputs)
 
     out = out.reshape(B, Hq, Sp, Dh)[:, :, :S]
     lse = lse.reshape(B, Hq, Sp)[:, :, :S]

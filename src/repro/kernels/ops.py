@@ -41,6 +41,8 @@ def decode_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array,
                            softcap: float | None = None,
                            scale: float | None = None,
                            lengths: jax.Array | None = None,
+                           k_scale: jax.Array | None = None,
+                           v_scale: jax.Array | None = None,
                            impl: str | None = None
                            ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Masked single-token attention over a slotted cache, fused with the
@@ -51,25 +53,30 @@ def decode_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array,
     ``lengths`` [B]: live-length bound for the kernel's occupancy-adaptive
     early exit (derived from ``pos`` when omitted; pass ``KVCache.length``
     on the hot path to skip the reduction). ``window`` may be a traced
-    scalar (per-layer local/global scans).
+    scalar (per-layer local/global scans). ``k_scale``/``v_scale``
+    [B,Hkv,C]: int8 block-scaled cache payloads, dequantised inside the
+    kernel (pass ``KVCache.k_scale``/``v_scale`` — the int8 hot path).
     Returns (out [B,Hq,Dh], probsum [B,C], new_score [B,C])."""
     impl = _resolve(impl)
     scale = scale if scale is not None else q.shape[-1] ** -0.5
     if impl == "ref":
         return ref_impl.decode_attention_fused_ref(
             q, k, v, pos, cur_pos, score, gamma=gamma, window=window,
-            softcap=softcap, scale=scale)
+            softcap=softcap, scale=scale, k_scale=k_scale, v_scale=v_scale)
     lens = lengths if lengths is not None else live_lengths(pos)
     win = GLOBAL_WINDOW if window is None else window
     out, probsum, new_score, _ = decode_attention_pallas(
         q, k, v, pos, score, lens, cur_pos, win, scale=scale,
-        softcap=softcap, gamma=gamma, interpret=(impl == "interpret"))
+        softcap=softcap, gamma=gamma, interpret=(impl == "interpret"),
+        k_scale=k_scale, v_scale=v_scale)
     return out, probsum, new_score
 
 
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      pos: jax.Array, cur_pos, *, window=None,
                      softcap: float | None = None, scale: float | None = None,
+                     k_scale: jax.Array | None = None,
+                     v_scale: jax.Array | None = None,
                      impl: str | None = None) -> tuple[jax.Array, jax.Array]:
     """Masked single-token attention over a slotted cache + RASR column-sums
     (score-free form, e.g. whisper's static cross-attention cache).
@@ -81,10 +88,11 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     if impl == "ref":
         return ref_impl.decode_attention_ref(
             q, k, v, pos, cur_pos, window=window, softcap=softcap,
-            scale=scale)
+            scale=scale, k_scale=k_scale, v_scale=v_scale)
     out, probsum, _ = decode_attention_fused(
         q, k, v, pos, cur_pos, jnp.zeros(pos.shape, jnp.float32),
-        gamma=0.0, window=window, softcap=softcap, scale=scale, impl=impl)
+        gamma=0.0, window=window, softcap=softcap, scale=scale,
+        k_scale=k_scale, v_scale=v_scale, impl=impl)
     return out, probsum
 
 
@@ -119,6 +127,8 @@ def chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     softcap: float | None = None,
                     scale: float | None = None,
                     contiguous_offset: int | None = None,
+                    k_scale: jax.Array | None = None,
+                    v_scale: jax.Array | None = None,
                     impl: str | None = None) -> jax.Array:
     """Chunk-of-queries attention over a slotted cache (chunked prefill).
 
@@ -133,6 +143,9 @@ def chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     masked, so the slotted call and the flash call agree. Without it (or
     with ``impl="ref"``) the XLA-native slotted oracle runs, which accepts
     traced offsets and arbitrary (compressed) key layouts.
+
+    ``k_scale``/``v_scale`` [B,Hkv,C]: int8 block-scaled working buffer —
+    dequantised in VMEM on the flash path, in the oracle otherwise.
     """
     impl = _resolve(impl)
     scale = scale if scale is not None else q.shape[-1] ** -0.5
@@ -148,22 +161,25 @@ def chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     if impl == "ref" or contiguous_offset is None:
         return ref_impl.chunk_attention_ref(
             q, k, v, k_pos, q_start, window=window, softcap=softcap,
-            scale=scale)
+            scale=scale, k_scale=k_scale, v_scale=v_scale)
     out, _ = flash_prefill_pallas(
         q, k, v, scale=scale, softcap=softcap, causal=True, window=win,
-        q_offset=contiguous_offset, interpret=(impl == "interpret"))
+        q_offset=contiguous_offset, interpret=(impl == "interpret"),
+        k_scale=k_scale, v_scale=v_scale)
     return out
 
 
 def obs_colsums(q_win: jax.Array, k: jax.Array, *, win_start,
                 window: int | None = None, softcap: float | None = None,
                 scale: float | None = None,
-                k_pos: jax.Array | None = None
+                k_pos: jax.Array | None = None,
+                k_scale: jax.Array | None = None
                 ) -> tuple[jax.Array, jax.Array]:
     """Observation-window exact column sums + probs (prefill RASR init and
     layerwise Hoyer estimate). Small (W ≤ 64 rows), always XLA-native.
-    ``k_pos`` [B, S] masks a slotted (compressed-prefill) key layout."""
+    ``k_pos`` [B, S] masks a slotted (compressed-prefill) key layout;
+    ``k_scale`` [B, Hkv, S] dequantises an int8 one."""
     scale = scale if scale is not None else q_win.shape[-1] ** -0.5
     return ref_impl.obs_colsums_ref(
         q_win, k, win_start=win_start, window=window, softcap=softcap,
-        scale=scale, k_pos=k_pos)
+        scale=scale, k_pos=k_pos, k_scale=k_scale)

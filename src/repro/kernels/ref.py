@@ -19,19 +19,32 @@ def _softcap(s: jax.Array, cap: float | None) -> jax.Array:
     return cap * jnp.tanh(s / cap)
 
 
+def _deq(x: jax.Array, scale: jax.Array | None) -> jax.Array:
+    """Dequantise an int8 block-scaled K/V tensor [..., C, Dh] with
+    per-(token, kv-head) scales [..., C] — the oracle-side spelling of the
+    in-kernel VMEM dequant (f32 multiply before the QK/PV matmuls). No-op
+    (plain f32 cast) when ``scale`` is None (the dense path)."""
+    if scale is None:
+        return x.astype(jnp.float32)
+    return x.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
 def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                          pos: jax.Array, cur_pos: jax.Array, *,
                          window: int | None = None,
                          softcap: float | None = None,
-                         scale: float | None = None
+                         scale: float | None = None,
+                         k_scale: jax.Array | None = None,
+                         v_scale: jax.Array | None = None
                          ) -> tuple[jax.Array, jax.Array]:
     """Single-token decode attention over a slotted (possibly pruned) cache,
     emitting the RASR per-key probability column-sums.
 
     q:   [B, Hq, Dh]      (one new token per row)
-    k,v: [B, Hkv, C, Dh]  slotted cache
+    k,v: [B, Hkv, C, Dh]  slotted cache (int8 when scales are given)
     pos: [B, C]           original positions; -1 marks invalid slots
     cur_pos: scalar or [B] — the query token's position
+    k_scale, v_scale: [B, Hkv, C] optional int8 dequant scales
 
     Returns (out [B, Hq, Dh], probsum [B, C] = Σ_h probs — Eq. 2 head-invariant
     scoring; GQA handled by group reshape, no repeated-key materialisation).
@@ -43,7 +56,7 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     cur = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (B,))
 
     qf = q.astype(jnp.float32).reshape(B, Hkv, G, Dh)
-    kf = k.astype(jnp.float32)
+    kf = _deq(k, k_scale)
     s = jnp.einsum("bhgd,bhcd->bhgc", qf, kf) * scale      # [B,Hkv,G,C]
     s = _softcap(s, softcap)
 
@@ -57,7 +70,7 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     p = jnp.exp(s - m)
     denom = jnp.sum(p, axis=-1, keepdims=True)
     probs = p / jnp.maximum(denom, 1e-30)                   # [B,Hkv,G,C]
-    out = jnp.einsum("bhgc,bhcd->bhgd", probs, v.astype(jnp.float32))
+    out = jnp.einsum("bhgc,bhcd->bhgd", probs, _deq(v, v_scale))
     probsum = jnp.sum(probs, axis=(1, 2))                   # [B, C]
     return out.reshape(B, Hq, Dh).astype(q.dtype), probsum
 
@@ -67,7 +80,9 @@ def decode_attention_fused_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                                score: jax.Array, *, gamma: float,
                                window: int | None = None,
                                softcap: float | None = None,
-                               scale: float | None = None
+                               scale: float | None = None,
+                               k_scale: jax.Array | None = None,
+                               v_scale: jax.Array | None = None
                                ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Oracle for the fused decode-attention + RASR kernel: identical
     signature/semantics to ``decode_attention_pallas`` (sans the block
@@ -84,7 +99,8 @@ def decode_attention_fused_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     is always attendable), so equivalence tests exclude it.
     """
     out, probsum = decode_attention_ref(
-        q, k, v, pos, cur_pos, window=window, softcap=softcap, scale=scale)
+        q, k, v, pos, cur_pos, window=window, softcap=softcap, scale=scale,
+        k_scale=k_scale, v_scale=v_scale)
     valid = pos >= 0
     new_score = jnp.where(valid,
                           gamma * score.astype(jnp.float32) + probsum, 0.0)
@@ -171,7 +187,9 @@ def chunk_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         k_pos: jax.Array, q_start, *,
                         window=None,
                         softcap: float | None = None,
-                        scale: float | None = None) -> jax.Array:
+                        scale: float | None = None,
+                        k_scale: jax.Array | None = None,
+                        v_scale: jax.Array | None = None) -> jax.Array:
     """Chunk-of-queries attention over a *slotted* cache — the inner step of
     chunked prefill once prefill-phase compression has made the key layout
     non-contiguous.
@@ -197,7 +215,7 @@ def chunk_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     scale = scale if scale is not None else Dh ** -0.5
 
     qf = q.astype(jnp.float32).reshape(B, Hkv, G, n, Dh)
-    s = jnp.einsum("bhgsd,bhcd->bhgsc", qf, k.astype(jnp.float32)) * scale
+    s = jnp.einsum("bhgsd,bhcd->bhgsc", qf, _deq(k, k_scale)) * scale
     s = _softcap(s, softcap)
 
     q_pos = jnp.arange(n) + q_start                          # [n]
@@ -211,7 +229,7 @@ def chunk_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     p = jnp.exp(s - m)
     denom = jnp.sum(p, axis=-1, keepdims=True)
     out = jnp.einsum("bhgsc,bhcd->bhgsd", p / jnp.maximum(denom, 1e-30),
-                     v.astype(jnp.float32))
+                     _deq(v, v_scale))
     return out.reshape(B, Hq, n, Dh).astype(q.dtype)
 
 
@@ -220,7 +238,8 @@ def obs_colsums_ref(q_win: jax.Array, k: jax.Array, *,
                     window: int | None = None,
                     softcap: float | None = None,
                     scale: float | None = None,
-                    k_pos: jax.Array | None = None
+                    k_pos: jax.Array | None = None,
+                    k_scale: jax.Array | None = None
                     ) -> tuple[jax.Array, jax.Array]:
     """Exact attention-mass column sums over an observation window.
 
@@ -230,6 +249,7 @@ def obs_colsums_ref(q_win: jax.Array, k: jax.Array, *,
     ``k_pos`` [B, S] gives explicit key positions for slotted buffers
     (chunked prefill after compression; -1 = invalid slot, fully masked).
     When omitted, keys are contiguous at positions 0..S-1.
+    ``k_scale`` [B, Hkv, S]: int8 dequant scales for a quantized buffer.
 
     Returns (colsums [B, S] = Σ_h Σ_{q∈win} probs, probs [B, Hq, W, S]) —
     the probs feed the layerwise Hoyer sparsity estimator.
@@ -240,7 +260,7 @@ def obs_colsums_ref(q_win: jax.Array, k: jax.Array, *,
     scale = scale if scale is not None else Dh ** -0.5
 
     qf = q_win.astype(jnp.float32).reshape(B, Hkv, G, W, Dh)
-    s = jnp.einsum("bhgwd,bhsd->bhgws", qf, k.astype(jnp.float32)) * scale
+    s = jnp.einsum("bhgwd,bhsd->bhgws", qf, _deq(k, k_scale)) * scale
     s = _softcap(s, softcap)
 
     q_pos = jnp.arange(W) + win_start

@@ -181,8 +181,12 @@ def _cache_specs(cache: KVCache, mesh: Mesh, batch_size: int) -> KVCache:
         ln = P(None, None)
     # budget/evict_at/sparsity are per-row [L, B] (continuous batching keeps
     # per-request pruning state) — shard them like ``length``.
+    # int8 dequant scales are [L, B, Hkv, C] — the K/V spec minus its Dh
+    # axis, so scales co-shard with their payload blocks.
+    sc = P(*tuple(kv)[:4]) if cache.quantized else None
     return KVCache(k=kv, v=kv, pos=vec, score=vec, length=ln,
-                   budget=ln, evict_at=ln, sparsity=ln)
+                   budget=ln, evict_at=ln, sparsity=ln,
+                   k_scale=sc, v_scale=sc)
 
 
 def state_specs(state: Any, cfg: ArchConfig, mesh: Mesh,

@@ -23,6 +23,28 @@ def _extras(batch: dict) -> dict:
             if k in ("enc_frames", "img_embeds") and v is not None}
 
 
+def check_kv_format(cfg: ArchConfig, policy: PolicyConfig) -> None:
+    """Config-time admission check for the cache storage format: a clear
+    host-side error instead of a shape/dtype failure deep inside jit.
+
+    ``kv_format="int8"`` quantizes the slotted KV cache; families whose
+    decode state is (wholly or partly) a recurrence — rwkv6's wkv matrices,
+    recurrentgemma's RG-LRU hidden state — carry no per-token K/V for those
+    layers and are out of scope.
+    """
+    if getattr(policy, "kv_format", "bf16") == "bf16":
+        return
+    from repro.configs.base import RGLRU, RWKV
+    recurrent = sorted({k for k in cfg.layer_kinds if k in (RWKV, RGLRU)})
+    if recurrent or not cfg.has_kv_cache:
+        raise ValueError(
+            f"kv_format='int8' is unsupported for arch {cfg.name!r} "
+            f"(family {cfg.family!r}): layer kinds {recurrent or 'none'} "
+            "carry recurrent state, not a slotted KV cache. Quantized "
+            "retention applies to attention families only "
+            "(dense/moe/vlm/audio); use kv_format='bf16' here.")
+
+
 @dataclass(frozen=True)
 class ModelAPI:
     cfg: ArchConfig
@@ -37,6 +59,7 @@ class ModelAPI:
 
     def prefill(self, params, batch: dict, policy: PolicyConfig, *,
                 capacity: int | None = None, cache_dtype=jnp.float32):
+        check_kv_format(self.cfg, policy)
         return self.module.prefill(
             params, batch["tokens"], self.cfg, policy, capacity=capacity,
             cache_dtype=cache_dtype, **_extras(batch))
@@ -48,6 +71,7 @@ class ModelAPI:
 
     def init_decode_state(self, policy: PolicyConfig, batch_size: int,
                           dtype=jnp.float32, **kw):
+        check_kv_format(self.cfg, policy)
         return self.module.init_decode_state(
             self.cfg, policy, batch_size, dtype=dtype, **kw)
 
@@ -85,6 +109,7 @@ class ModelAPI:
         the batch *width* matters, so the token array is sliced to one
         column — init compiles once per width, not once per prompt
         length."""
+        check_kv_format(self.cfg, policy)
         toks = batch["tokens"]
         if self.cfg.family != "vlm":
             toks = toks[:, :1]

@@ -126,7 +126,8 @@ def decode_attend(x: jax.Array, p: dict, layer: cache_lib.KVCache,
     out, probsum, new_score = ops.decode_attention_fused(
         q1, layer.k, layer.v, layer.pos, cur, layer.score,
         gamma=policy.gamma, window=window, softcap=cfg.attn_logit_softcap,
-        scale=cfg.d_head ** -0.5, lengths=layer.length)
+        scale=cfg.d_head ** -0.5, lengths=layer.length,
+        k_scale=layer.k_scale, v_scale=layer.v_scale)
     layer = dataclasses.replace(layer, score=new_score)
     # per-row layerwise sparsity EMA from this step's head-aggregated
     # attention (each slot tracks its own request's profile)

@@ -83,24 +83,30 @@ def pad_to_extent(x: jax.Array, extent: int, axis: int, fill=0) -> jax.Array:
 
 def init_buffer(*, n_layers: int, batch: int, n_kv_heads: int, d_head: int,
                 buf_capacity: int, budgets0: jax.Array,
-                dtype=jnp.float32) -> cache_lib.KVCache:
+                dtype=jnp.float32, kv_format: str = "bf16"
+                ) -> cache_lib.KVCache:
     """Empty chunked-prefill working buffer ([L, B, Hkv, Cbuf, Dh]).
 
     ``budgets0`` [L, B]: the policy's static budget schedule — used by
     prefill-phase compression until (LETHE) live sparsity estimates exist.
     ``evict_at`` is parked at the buffer capacity: the Algorithm-1 decode
-    schedule does not run during prefill.
+    schedule does not run during prefill. With ``kv_format="int8"`` the
+    working buffer itself is quantized: chunks quantize on append and every
+    later chunk attends over the int8 prefix — long-prompt admission is
+    bytes-bounded by the *quantized* buffer size.
     """
     shape = (n_layers, batch, n_kv_heads, buf_capacity, d_head)
+    k, v, k_scale, v_scale = cache_lib.init_kv_payload(
+        shape, kv_format=kv_format, dtype=dtype)
     return cache_lib.KVCache(
-        k=jnp.zeros(shape, dtype),
-        v=jnp.zeros(shape, dtype),
+        k=k, v=v,
         pos=jnp.full((n_layers, batch, buf_capacity), -1, jnp.int32),
         score=jnp.zeros((n_layers, batch, buf_capacity), jnp.float32),
         length=jnp.zeros((n_layers, batch), jnp.int32),
         budget=budgets0.astype(jnp.int32),
         evict_at=jnp.full((n_layers, batch), buf_capacity, jnp.int32),
         sparsity=jnp.zeros((n_layers, batch), jnp.float32),
+        k_scale=k_scale, v_scale=v_scale,
     )
 
 
@@ -155,7 +161,8 @@ def attend_chunk_layer(lay: cache_lib.KVCache, qh: jax.Array, kh: jax.Array,
     lay = cache_lib.append_chunk(lay, kh, vh, pos_new)
     out = ops.chunk_attention(
         qh, lay.k, lay.v, lay.pos, q_start, window=window, softcap=softcap,
-        scale=scale, contiguous_offset=contiguous_offset)
+        scale=scale, contiguous_offset=contiguous_offset,
+        k_scale=lay.k_scale, v_scale=lay.v_scale)
 
     if compress:
         # Eq. 5 unrolled over the chunk: each query row i contributes its
@@ -164,7 +171,7 @@ def attend_chunk_layer(lay: cache_lib.KVCache, qh: jax.Array, kh: jax.Array,
         # decode of the chunk would produce.
         colsums, probs = ops.obs_colsums(
             qh, lay.k, win_start=q_start, window=window, softcap=softcap,
-            scale=scale, k_pos=lay.pos)
+            scale=scale, k_pos=lay.pos, k_scale=lay.k_scale)
         del colsums
         gam = jnp.float32(policy.gamma)
         w_rows = gam ** jnp.arange(n - 1, -1, -1, dtype=jnp.float32)
@@ -206,7 +213,10 @@ def finalize_pipeline(k: jax.Array, v: jax.Array, pos: jax.Array,
                       windows: jax.Array, cur_pos, budgets_default:
                       jax.Array, *, policy: PolicyConfig, capacity: int,
                       w_eff: int, k_extent: int, softcap, scale: float,
-                      allocate: bool, evict_cap: bool) -> cache_lib.KVCache:
+                      allocate: bool, evict_cap: bool,
+                      k_scale: jax.Array | None = None,
+                      v_scale: jax.Array | None = None
+                      ) -> cache_lib.KVCache:
     """Slotted prefill working set -> initialised decode cache.
 
     k/v [L, B, Hkv, Eb, Dh], pos [L, B, Eb], length [L, B] with the
@@ -223,18 +233,27 @@ def finalize_pipeline(k: jax.Array, v: jax.Array, pos: jax.Array,
     Bucketing it is what lets a refill wave over many distinct prompt
     lengths share O(log) compiled pipelines. ``evict_cap``: clamp evict_at
     to capacity (transformer-family spelling); otherwise evict_at=budgets.
+
+    Quantized mode (``policy.kv_format == "int8"``): when ``k_scale`` /
+    ``v_scale`` are given the working set is already int8 (chunked prefill
+    quantized on append) and the statistics dequantise through the kernels;
+    when they are None (whole-prompt prefill hands in the dense transient
+    K/V) the statistics run on exact values and the payload is quantized
+    HERE — the quantize-on-write point of the fill path. Quantization is
+    per-token, so it commutes with the top-C gather below.
     """
     L, B = length.shape
     cur = jnp.asarray(cur_pos, jnp.int32)
     win_start = cur - (w_eff - 1)
 
-    def layer_stats(k_l, pos_l, len_l, qt, w):
+    def layer_stats(k_l, pos_l, len_l, qt, w, ks_l):
         q_win = qt[:, :, -w_eff:]
         k_e = k_l[..., :k_extent, :]
         pos_e = pos_l[..., :k_extent]
+        ks_e = None if ks_l is None else ks_l[..., :k_extent]
         colsums, probs = ops.obs_colsums(
             q_win, k_e, win_start=win_start, window=w, softcap=softcap,
-            scale=scale, k_pos=pos_e)
+            scale=scale, k_pos=pos_e, k_scale=ks_e)
         scores = pad_to_extent(rasr.prefill_scores(colsums, w_eff),
                                pos_l.shape[-1], axis=1)
         valid = pos_e >= 0
@@ -244,22 +263,31 @@ def finalize_pipeline(k: jax.Array, v: jax.Array, pos: jax.Array,
         return scores, spars
 
     scores_all, spars_all = jax.vmap(layer_stats)(k, pos, length, q_tail,
-                                                  windows)
+                                                  windows, k_scale)
 
     if allocate and policy.kind == LETHE:
         budgets = alloc_budgets(spars_all, policy, capacity)
     else:
         budgets = budgets_default.astype(jnp.int32)
 
-    fill = jax.vmap(functools.partial(cache_lib.fill_from_prefill_slotted,
-                                      capacity=capacity))
-    k_c, v_c, pos_c, score_c, len_c = fill(k, v, pos, scores_all, length)
+    if getattr(policy, "quantized", False) and k_scale is None:
+        # whole-prompt path: quantize-on-fill from the exact dense K/V
+        k, k_scale = cache_lib.quantize_kv(k)
+        v, v_scale = cache_lib.quantize_kv(v)
+
+    fill = jax.vmap(
+        lambda k_l, v_l, p_l, s_l, n_l, ks_l, vs_l:
+        cache_lib.fill_from_prefill_slotted(
+            k_l, v_l, p_l, s_l, n_l, capacity=capacity,
+            k_scale=ks_l, v_scale=vs_l))
+    k_c, v_c, pos_c, score_c, len_c, ks_c, vs_c = fill(
+        k, v, pos, scores_all, length, k_scale, v_scale)
     cache = cache_lib.KVCache(
         k=k_c, v=v_c, pos=pos_c, score=score_c, length=len_c,
         budget=budgets,
         evict_at=(jnp.minimum(budgets, capacity).astype(jnp.int32)
                   if evict_cap else budgets),
-        sparsity=spars_all)
+        sparsity=spars_all, k_scale=ks_c, v_scale=vs_c)
 
     if policy.prunes:
         from repro.core import pruning
@@ -273,9 +301,15 @@ def finalize_pipeline(k: jax.Array, v: jax.Array, pos: jax.Array,
 def finalize_inputs(buf: cache_lib.KVCache, *, capacity: int,
                     k_extent: int):
     """Pad/slice a chunked working buffer to the pipeline's canonical
-    extent Eb = max(capacity, k_extent) (pure data movement, exact)."""
+    extent Eb = max(capacity, k_extent) (pure data movement, exact).
+    Returns (k, v, pos, length, k_scale, v_scale) — scales None unless the
+    buffer is quantized."""
     eb = max(capacity, k_extent)
+    ks = vs = None
+    if buf.quantized:
+        ks = pad_to_extent(buf.k_scale, eb, axis=3, fill=1)
+        vs = pad_to_extent(buf.v_scale, eb, axis=3, fill=1)
     return (pad_to_extent(buf.k, eb, axis=3),
             pad_to_extent(buf.v, eb, axis=3),
             pad_to_extent(buf.pos, eb, axis=2, fill=-1),
-            buf.length)
+            buf.length, ks, vs)

@@ -401,7 +401,9 @@ def prefill_finalize(params, carry, cfg: ArchConfig, policy: PolicyConfig,
     C = capacity or policy.capacity
     B = carry["x_last"].shape[0]
     logits = _head(params, carry["x_last"].astype(jnp.float32), cfg)
-    k_e, v_e, pos_e, length = chunked.finalize_inputs(
+    # rglru rejects kv_format="int8" at config time (recurrent state is out
+    # of scope for KV quantization) — scales here are always None.
+    k_e, v_e, pos_e, length, _, _ = chunked.finalize_inputs(
         carry["buf"], capacity=C, k_extent=k_extent)
     kv = _finalize_kv(
         k_e, v_e, pos_e, length, carry["q_tail"], cfg, policy,

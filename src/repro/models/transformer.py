@@ -9,6 +9,7 @@ mixtral-8x7b (MoE + SWA), arctic-480b (MoE + dense residual), qwen2-vl-2b
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, NamedTuple, Optional
 
@@ -291,7 +292,8 @@ def prefill_chunk_init(params: dict, tokens: jax.Array, cfg: ArchConfig,
         "buf": chunked.init_buffer(
             n_layers=cfg.n_layers, batch=B, n_kv_heads=cfg.n_kv_heads,
             d_head=cfg.d_head, buf_capacity=C + chunk_max,
-            budgets0=_default_budgets(cfg, policy, B), dtype=cache_dtype),
+            budgets0=_default_budgets(cfg, policy, B), dtype=cache_dtype,
+            kv_format=policy.kv_format),
         "q_tail": chunked.init_q_tail(
             n_layers=cfg.n_layers, batch=B, n_heads=cfg.n_heads,
             d_head=cfg.d_head, obs_window=policy.obs_window),
@@ -393,14 +395,15 @@ def prefill_finalize(params: dict, carry: dict, cfg: ArchConfig,
     C = capacity or policy.capacity
     B = carry["x_last"].shape[0]
     logits = _head(params, carry["x_last"].astype(jnp.float32), cfg)
-    k_e, v_e, pos_e, length = chunked.finalize_inputs(
+    k_e, v_e, pos_e, length, ks_e, vs_e = chunked.finalize_inputs(
         carry["buf"], capacity=C, k_extent=k_extent)
     cache = chunked.finalize_pipeline(
         k_e, v_e, pos_e, length, carry["q_tail"], layer_windows(cfg),
         jnp.asarray(carry["done"], jnp.int32) - 1,
         _default_budgets(cfg, policy, B), policy=policy, capacity=C,
         w_eff=w_eff, k_extent=k_extent, softcap=cfg.attn_logit_softcap,
-        scale=cfg.d_head ** -0.5, allocate=True, evict_cap=True)
+        scale=cfg.d_head ** -0.5, allocate=True, evict_cap=True,
+        k_scale=ks_e, v_scale=vs_e)
     return logits, cache
 
 
@@ -457,12 +460,9 @@ def decode_step(params: dict, cache: cache_lib.KVCache, token: jax.Array,
                            int(policy.min_budget_ratio
                                * min(policy.nominal_budget, C))),
             sink_len=policy.sink_len, recent_len=policy.recent_len)
-        new_cache = cache_lib.KVCache(
-            k=new_cache.k, v=new_cache.v, pos=new_cache.pos,
-            score=new_cache.score, length=new_cache.length,
-            budget=budgets,
-            evict_at=jnp.maximum(new_cache.evict_at, budgets),
-            sparsity=new_cache.sparsity)
+        new_cache = dataclasses.replace(
+            new_cache, budget=budgets,
+            evict_at=jnp.maximum(new_cache.evict_at, budgets))
 
     logits = common.unembed(x, params, cfg)
     return logits, new_cache
@@ -476,8 +476,6 @@ def init_decode_state(cfg: ArchConfig, policy: PolicyConfig, batch: int,
         dtype=dtype)
     budgets = jnp.broadcast_to(_init_budgets(cfg, policy)[:, None],
                                (cfg.n_layers, batch))
-    return cache_lib.KVCache(
-        k=cache.k, v=cache.v, pos=cache.pos, score=cache.score,
-        length=cache.length, budget=budgets,
-        evict_at=jnp.minimum(budgets, policy.capacity).astype(jnp.int32),
-        sparsity=cache.sparsity)
+    return dataclasses.replace(
+        cache, budget=budgets,
+        evict_at=jnp.minimum(budgets, policy.capacity).astype(jnp.int32))

@@ -8,7 +8,10 @@ with learned positions, cross-attention — is implemented.
 
 Lethe applies to the decoder *self*-attention cache. The cross-attention
 cache is computed once from the encoder output and is static (encoder-length)
-— it is exempt from pruning by design (DESIGN.md §Arch-applicability).
+— it is exempt from pruning by design (DESIGN.md §Arch-applicability), and
+likewise exempt from int8 KV quantization (``kv_format="int8"`` quantizes
+the pruned self-attention cache only; the cross K/V are written once, read
+every step, and stay at ``cache_dtype``).
 """
 from __future__ import annotations
 
@@ -189,7 +192,8 @@ def _head(params: dict, x_last: jax.Array, cfg: ArchConfig) -> jax.Array:
 
 def _finalize_kv(params, k, v, pos, length, q_tails, cfg: ArchConfig,
                  policy: PolicyConfig, *, capacity: int, w_eff: int,
-                 k_extent: int, cur_pos, batch: int):
+                 k_extent: int, cur_pos, batch: int,
+                 k_scale=None, v_scale=None):
     from repro.models import chunked
     nominal = min(policy.nominal_budget, capacity)
     return chunked.finalize_pipeline(
@@ -199,7 +203,7 @@ def _finalize_kv(params, k, v, pos, length, q_tails, cfg: ArchConfig,
         jnp.full((cfg.n_layers, batch), nominal, jnp.int32),
         policy=policy, capacity=capacity, w_eff=w_eff, k_extent=k_extent,
         softcap=None, scale=cfg.d_head ** -0.5, allocate=False,
-        evict_cap=False)
+        evict_cap=False, k_scale=k_scale, v_scale=v_scale)
 
 
 def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
@@ -250,7 +254,7 @@ def prefill_chunk_init(params: dict, tokens: jax.Array, cfg: ArchConfig,
             n_layers=cfg.n_layers, batch=B, n_kv_heads=cfg.n_kv_heads,
             d_head=cfg.d_head, buf_capacity=C + chunk_max,
             budgets0=jnp.full((cfg.n_layers, B), nominal, jnp.int32),
-            dtype=cache_dtype),
+            dtype=cache_dtype, kv_format=policy.kv_format),
         "q_tail": chunked.init_q_tail(
             n_layers=cfg.n_layers, batch=B, n_heads=cfg.n_heads,
             d_head=cfg.d_head, obs_window=policy.obs_window),
@@ -316,12 +320,13 @@ def prefill_finalize(params: dict, carry: dict, cfg: ArchConfig,
     C = capacity or policy.capacity
     B = carry["x_last"].shape[0]
     logits = _head(params, carry["x_last"].astype(jnp.float32), cfg)
-    k_e, v_e, pos_e, length = chunked.finalize_inputs(
+    k_e, v_e, pos_e, length, ks_e, vs_e = chunked.finalize_inputs(
         carry["buf"], capacity=C, k_extent=k_extent)
     kv = _finalize_kv(
         params, k_e, v_e, pos_e, length, carry["q_tail"], cfg, policy,
         capacity=C, w_eff=w_eff, k_extent=k_extent,
-        cur_pos=jnp.asarray(carry["done"], jnp.int32) - 1, batch=B)
+        cur_pos=jnp.asarray(carry["done"], jnp.int32) - 1, batch=B,
+        k_scale=ks_e, v_scale=vs_e)
     return logits, {"kv": kv, "cross_k": carry["extra"]["cross_k"],
                     "cross_v": carry["extra"]["cross_v"]}
 

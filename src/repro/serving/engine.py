@@ -54,7 +54,12 @@ def _sample(logits: jax.Array, key, temperature: float) -> jax.Array:
 
 
 def _cache_stats(state) -> dict:
-    """Occupancy/memory stats for any model state containing a KVCache."""
+    """Occupancy/memory stats for any model state containing a KVCache.
+
+    ``cache_bytes`` is physical (K/V payloads + int8 dequant scales + RASR
+    scores + metadata); ``cache_bytes_breakdown`` itemises it per leaf
+    group so benchmark JSONs record real bytes, not just slot capacity.
+    """
     caches = [x for x in jax.tree.leaves(
         state, is_leaf=lambda t: isinstance(t, cache_lib.KVCache))
         if isinstance(x, cache_lib.KVCache)]
@@ -62,12 +67,19 @@ def _cache_stats(state) -> dict:
         leaves = jax.tree.leaves(state)
         return {"cache_bytes": sum(x.size * x.dtype.itemsize
                                    for x in leaves),
+                "cache_bytes_breakdown": {}, "kv_format": "none",
                 "live_tokens": 0, "capacity_tokens": 0}
-    total_bytes = sum(c.memory_bytes() for c in caches)
+    breakdown: dict[str, int] = {}
+    for c in caches:
+        for name, b in c.memory_breakdown().items():
+            breakdown[name] = breakdown.get(name, 0) + b
+    total_bytes = sum(breakdown.values())
     live = sum(int(np.asarray(jnp.sum(c.length))) for c in caches)
     cap = sum(c.k.shape[0] * c.k.shape[1] * c.capacity for c in caches)
-    return {"cache_bytes": total_bytes, "live_tokens": live,
-            "capacity_tokens": cap}
+    return {"cache_bytes": total_bytes,
+            "cache_bytes_breakdown": breakdown,
+            "kv_format": "int8" if caches[0].quantized else "bf16",
+            "live_tokens": live, "capacity_tokens": cap}
 
 
 @dataclass
@@ -77,11 +89,13 @@ class GenerationResult:
     decode_seconds: float
     tokens_per_second: float
     steps: int                         # decode steps actually executed (≤ N)
-    cache_bytes: int
+    cache_bytes: int                   # physical (payload+scales+score+meta)
     live_token_trace: list = field(default_factory=list)
     logits_trace: Any = None
     gen_lens: np.ndarray | None = None  # [B] tokens up to & incl. EOS
     finished: np.ndarray | None = None  # [B] bool — row emitted EOS
+    cache_bytes_breakdown: dict = field(default_factory=dict)
+    kv_format: str = "bf16"
 
 
 def _gen_lens(tokens: np.ndarray, eos_id: int | None) -> tuple[np.ndarray,
@@ -147,6 +161,8 @@ class Engine:
 
     def __init__(self, model: ModelAPI, params, policy: PolicyConfig,
                  cache_dtype=jnp.float32):
+        from repro.models.api import check_kv_format
+        check_kv_format(model.cfg, policy)   # fail at build, not inside jit
         self.model = model
         self.params = params
         self.policy = policy
@@ -214,6 +230,8 @@ class Engine:
             logits_trace=(np.stack(logit_rows, axis=1)
                           if collect_logits else None),
             gen_lens=lens, finished=finished,
+            cache_bytes_breakdown=stats["cache_bytes_breakdown"],
+            kv_format=stats["kv_format"],
         )
 
     def generate_scan(self, batch: dict, max_new_tokens: int, *,
@@ -248,7 +266,9 @@ class Engine:
             tokens=tokens, prefill_seconds=t1 - t0, decode_seconds=t2 - t1,
             tokens_per_second=B * steps / max(t2 - t1, 1e-9),
             steps=steps, cache_bytes=stats["cache_bytes"],
-            gen_lens=lens, finished=finished)
+            gen_lens=lens, finished=finished,
+            cache_bytes_breakdown=stats["cache_bytes_breakdown"],
+            kv_format=stats["kv_format"])
 
     def _scan_run(self, B: int, S: int, s_img: int, max_new_tokens: int,
                   temperature: float, eos_id: int | None):

@@ -63,6 +63,9 @@ class Completion:
     tokens_per_second: float = 0.0      # generated tokens / residency time
     ttft_steps: int = 0         # scheduler decode steps executed before the
     #                             first token (the wall-clock-free TTFT)
+    kv_format: str = "bf16"     # cache storage format this run served under
+    cache_bytes: int = 0        # physical bytes of the live decode state
+    #                             (K/V payloads + dequant scales + metadata)
 
 
 @dataclasses.dataclass
@@ -126,6 +129,10 @@ class Scheduler:
         # at the boundary itself are waiting on TTFT, not ITL, and don't
         # tag the gap).
         self.segment_gap_trace: list[tuple[int, float]] = []
+        # physical-bytes stamp for Completion metrics (static per engine
+        # config; refreshed from the live state at the start of each run)
+        self._kv_format = getattr(engine.policy, "kv_format", "bf16")
+        self._cache_bytes = 0
 
     def submit(self, reqs: Iterable[Request]) -> None:
         now = time.perf_counter()
@@ -149,7 +156,8 @@ class Scheduler:
             ttft_s=slot.ttft - self._submit_ts[r.uid],
             decode_steps=len(toks) - 1,
             tokens_per_second=len(toks) / resid,
-            ttft_steps=slot.ttft_steps))
+            ttft_steps=slot.ttft_steps,
+            kv_format=self._kv_format, cache_bytes=self._cache_bytes))
 
     def _activate(self, slots, tok, pos, done, i: int, r: Request, first: int,
                   admit_ts: float) -> None:
@@ -223,6 +231,10 @@ class Scheduler:
         B = self.batch_slots
         eos = self.eos_id
         state = eng.new_decode_state(B)
+        from repro.serving.engine import _cache_stats
+        stats = _cache_stats(state)
+        self._cache_bytes = stats["cache_bytes"]
+        self._kv_format = stats["kv_format"]
         slots: list[_Slot | None] = [None] * B
         tok = np.zeros((B,), np.int32)
         pos = np.zeros((B,), np.int32)
@@ -384,6 +396,8 @@ class Scheduler:
                     ttft_s=(t_batch - self._submit_ts[r.uid]
                             + res.prefill_seconds),
                     decode_steps=len(row) - 1,
-                    tokens_per_second=len(row) / resid))
+                    tokens_per_second=len(row) / resid,
+                    kv_format=res.kv_format,
+                    cache_bytes=res.cache_bytes))
         self.completed.sort(key=lambda c: c.uid)
         return self.completed

@@ -1,0 +1,435 @@
+"""Bytes-neutral quantized KV cache (DESIGN.md §Quantization).
+
+Battery:
+  * quantization round-trip error bounds — per-(token, head) worst case is
+    scale/2 = amax/254; all-zero vectors round-trip exactly;
+  * bf16 path bit-identity after the refactor — the dense cache flattens to
+    the exact pre-refactor 8 leaves, and dense kernels/oracles take the
+    scale-free code path (None scales change nothing);
+  * int8 kernel equivalence — the in-kernel VMEM dequant (Pallas interpret)
+    matches the int8 oracle, and the int8 oracle is *bitwise* the dense
+    oracle run on host-dequantised values;
+  * differential ``generate``/``generate_scan`` int8-vs-bf16 across
+    lethe/h2o/streaming within a stated tolerance, with the two int8
+    drivers token-identical;
+  * ``compact``/slot-refill scale coherence — every survivor's
+    (payload, scale, pos, score) tuple moves as one unit (hypothesis fuzz
+    with a seeded fallback sweep);
+  * chunked prefill on the quantized layout — 2x-capacity prompts admit
+    compressed and stay decodable;
+  * config-time validation — recurrent families and unknown formats fail
+    fast with clear errors;
+  * physical-bytes accounting — int8 payload+scales ≤ 55% of the bf16
+    payload at Dh = 64, and the engine/Completion metrics surface it.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import cache as cache_lib
+from repro.core.policy import lethe, make_policy
+from repro.kernels import ref
+from repro.kernels.decode_attention import (GLOBAL_WINDOW,
+                                            decode_attention_pallas,
+                                            live_lengths)
+from repro.models.api import build_model
+from repro.serving.engine import Engine
+
+# --------------------------------------------------------------------------
+# Quantization primitive: round-trip error bounds
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(3, 2, 64), (2, 4, 16, 32), (5, 8)])
+def test_quantize_roundtrip_error_bound_per_head(shape):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape) * 3.0
+    q, s = cache_lib.quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    assert s.shape == shape[:-1]
+    xr = cache_lib.dequantize_kv(q, s)
+    # worst-case rounding error per element is half a quantization step,
+    # i.e. scale/2 per (token, head) vector — assert it per vector
+    err = np.abs(np.asarray(xr) - np.asarray(x)).max(axis=-1)
+    bound = np.asarray(s) / 2 + 1e-7
+    assert (err <= bound).all(), (err.max(), bound.min())
+    # and the max element survives exactly up to one step
+    amax = np.abs(np.asarray(x)).max(axis=-1)
+    assert (err <= amax / 254 + 1e-7).all()
+
+
+def test_quantize_zero_vectors_roundtrip_exact():
+    x = jnp.zeros((2, 3, 16))
+    q, s = cache_lib.quantize_kv(x)
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    np.testing.assert_array_equal(np.asarray(cache_lib.dequantize_kv(q, s)),
+                                  0.0)
+
+
+# --------------------------------------------------------------------------
+# bf16 path bit-identity after the refactor
+# --------------------------------------------------------------------------
+
+
+def test_dense_cache_pytree_unchanged():
+    """kv_format='bf16' must flatten to the exact pre-refactor leaf set:
+    no scale leaves, same field order — donation aliases, sharding specs
+    and checkpoints of the dense path are untouched."""
+    pol = lethe(capacity=16)
+    c = cache_lib.init_cache(n_layers=1, batch=2, n_kv_heads=2, capacity=16,
+                             d_head=8, policy=pol, dtype=jnp.float32)
+    leaves = jax.tree.leaves(c)
+    assert len(leaves) == 8
+    assert not c.quantized and c.k_scale is None and c.v_scale is None
+    assert c.k.dtype == jnp.float32
+
+
+def test_dense_oracle_ignores_scale_kwargs():
+    """None scales must be the identity code path (the bf16 hot path
+    traces the same program as before the refactor)."""
+    B, Hq, Hkv, C, Dh = 2, 4, 2, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (B, Hq, Dh))
+    k = jax.random.normal(ks[1], (B, Hkv, C, Dh))
+    v = jax.random.normal(ks[2], (B, Hkv, C, Dh))
+    pos = jnp.broadcast_to(jnp.arange(C), (B, C)).astype(jnp.int32)
+    score = jax.random.uniform(ks[3], (B, C))
+    a = ref.decode_attention_fused_ref(q, k, v, pos, C - 1, score,
+                                       gamma=0.9, scale=Dh ** -0.5)
+    b = ref.decode_attention_fused_ref(q, k, v, pos, C - 1, score,
+                                       gamma=0.9, scale=Dh ** -0.5,
+                                       k_scale=None, v_scale=None)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------------------------------------
+# int8 kernel equivalence
+# --------------------------------------------------------------------------
+
+
+def _quantized_layer_inputs(key, B, Hq, Hkv, C, Dh, lives):
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, Hq, Dh))
+    kd = jax.random.normal(ks[1], (B, Hkv, C, Dh))
+    vd = jax.random.normal(ks[2], (B, Hkv, C, Dh))
+    pos = jnp.stack([jnp.where(jnp.arange(C) < n, jnp.arange(C), -1)
+                     for n in lives]).astype(jnp.int32)
+    score = jnp.where(pos >= 0, jax.random.uniform(ks[3], (B, C)), 0.0)
+    kq, ksc = cache_lib.quantize_kv(kd)
+    vq, vsc = cache_lib.quantize_kv(vd)
+    return q, kq, ksc, vq, vsc, pos, score
+
+
+@pytest.mark.parametrize("lives,window", [
+    ([1, 1], None), ([37, 99], None), ([128, 128], None), ([64, 128], 48)])
+def test_int8_kernel_matches_int8_oracle(lives, window):
+    B, Hq, Hkv, C, Dh = 2, 8, 2, 128, 32
+    q, kq, ksc, vq, vsc, pos, score = _quantized_layer_inputs(
+        jax.random.PRNGKey(2), B, Hq, Hkv, C, Dh, lives)
+    lens = live_lengths(pos)
+    cur = lens - 1
+    o_r, ps_r, ns_r = ref.decode_attention_fused_ref(
+        q, kq, vq, pos, cur, score, gamma=0.95, window=window,
+        scale=Dh ** -0.5, k_scale=ksc, v_scale=vsc)
+    win = GLOBAL_WINDOW if window is None else window
+    o_p, ps_p, ns_p, blocks = decode_attention_pallas(
+        q, kq, vq, pos, score, lens, cur, jnp.int32(win), scale=Dh ** -0.5,
+        gamma=0.95, block_c=32, interpret=True, k_scale=ksc, v_scale=vsc)
+    assert np.abs(np.asarray(o_p) - np.asarray(o_r)).max() <= 1e-5
+    assert np.abs(np.asarray(ps_p) - np.asarray(ps_r)).max() <= 1e-5
+    assert np.abs(np.asarray(ns_p) - np.asarray(ns_r)).max() <= 1e-5
+    # early exit still tracks live tokens on the int8 path
+    expected = np.maximum(-(-np.asarray(lives) // 32), 1)
+    np.testing.assert_array_equal(
+        np.asarray(blocks), np.broadcast_to(expected[:, None], (B, Hkv)))
+
+
+def test_int8_oracle_is_dequant_dense_oracle_bitwise():
+    """The int8 oracle must be *exactly* the dense oracle run on
+    host-dequantised values — in-kernel dequant changes where the multiply
+    happens, not what is computed."""
+    B, Hq, Hkv, C, Dh = 2, 4, 2, 64, 16
+    q, kq, ksc, vq, vsc, pos, score = _quantized_layer_inputs(
+        jax.random.PRNGKey(3), B, Hq, Hkv, C, Dh, [40, 64])
+    cur = live_lengths(pos) - 1
+    a = ref.decode_attention_fused_ref(q, kq, vq, pos, cur, score,
+                                       gamma=0.9, scale=Dh ** -0.5,
+                                       k_scale=ksc, v_scale=vsc)
+    b = ref.decode_attention_fused_ref(
+        q, cache_lib.dequantize_kv(kq, ksc),
+        cache_lib.dequantize_kv(vq, vsc), pos, cur, score,
+        gamma=0.9, scale=Dh ** -0.5)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_int8_flash_prefill_matches_oracle():
+    from repro.kernels.flash_prefill import flash_prefill_pallas
+    B, Hq, Hkv, S, Dh = 1, 4, 2, 48, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, Dh))
+    kd = jax.random.normal(ks[1], (B, Hkv, S, Dh))
+    vd = jax.random.normal(ks[2], (B, Hkv, S, Dh))
+    kq, ksc = cache_lib.quantize_kv(kd)
+    vq, vsc = cache_lib.quantize_kv(vd)
+    out, _ = flash_prefill_pallas(q, kq, vq, scale=Dh ** -0.5, causal=True,
+                                  block_q=16, block_k=16, interpret=True,
+                                  k_scale=ksc, v_scale=vsc)
+    exp, _ = ref.prefill_attention_ref(
+        q, cache_lib.dequantize_kv(kq, ksc),
+        cache_lib.dequantize_kv(vq, vsc), causal=True, scale=Dh ** -0.5)
+    assert np.abs(np.asarray(out) - np.asarray(exp)).max() <= 1e-5
+
+
+# --------------------------------------------------------------------------
+# Differential generate / generate_scan across policies
+# --------------------------------------------------------------------------
+
+
+def _tiny_setup(vocab=128):
+    cfg = dataclasses.replace(
+        get_arch("granite-20b").reduced(), n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_head=16, d_ff=128, vocab_size=vocab)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, vocab)
+    return cfg, model, params, toks
+
+
+@pytest.mark.parametrize("kind", ["lethe", "h2o", "streaming"])
+def test_generate_int8_vs_dense_differential(kind):
+    """Stated tolerance: int8 prefill logits within 0.08 abs of dense
+    (random init, |logits| ~ O(1)), ≥ 70% greedy-token agreement over a
+    20-step decode, and the two int8 drivers (Python-stepped vs scanned)
+    token-identical."""
+    cfg, model, params, toks = _tiny_setup()
+    pol_d = make_policy(kind, capacity=24)
+    pol_q = dataclasses.replace(pol_d, kv_format="int8")
+    eng_d = Engine(model, params, pol_d)
+    eng_q = Engine(model, params, pol_q)
+
+    lg_d, _ = eng_d.prefill({"tokens": toks})
+    lg_q, _ = eng_q.prefill({"tokens": toks})
+    assert np.abs(np.asarray(lg_d) - np.asarray(lg_q)).max() <= 0.08
+
+    rd = eng_d.generate({"tokens": toks}, 20)
+    rq = eng_q.generate({"tokens": toks}, 20)
+    rqs = eng_q.generate_scan({"tokens": toks}, 20)
+    np.testing.assert_array_equal(rq.tokens, rqs.tokens)   # driver identity
+    agreement = float(np.mean(rd.tokens == rq.tokens))
+    assert agreement >= 0.7, agreement
+    assert rq.kv_format == "int8" and rd.kv_format == "bf16"
+    assert rq.cache_bytes < rd.cache_bytes
+
+
+def test_int8_multi_round_pruning_stays_coherent():
+    """Long decode through several prune rounds: occupancy bounded by
+    capacity, scores finite, scales strictly positive on live slots."""
+    cfg, model, params, toks = _tiny_setup()
+    pol = lethe(capacity=20, kv_format="int8", sparse_ratio=3.0)
+    eng = Engine(model, params, pol)
+    r = eng.generate({"tokens": toks}, 40, trace_live=True)
+    assert r.steps == 40
+    _, state = eng.prefill({"tokens": toks})
+    assert int(np.asarray(state.length).max()) <= 20
+    live = np.asarray(state.pos) >= 0                    # [L, B, C]
+    ksc = np.asarray(state.k_scale)                      # [L, B, Hkv, C]
+    assert (ksc[np.broadcast_to(live[:, :, None, :], ksc.shape)] > 0).all()
+
+
+# --------------------------------------------------------------------------
+# compact / slot-refill scale coherence (fuzzed)
+# --------------------------------------------------------------------------
+
+
+def _coherence_case(seed: int) -> None:
+    """Random appends then a random keep-mask compaction: every survivor's
+    dequantised K/V must equal its pre-compact dequantised value, matched
+    by position — payloads and scales move as one unit."""
+    rng = np.random.default_rng(seed)
+    B, Hkv, C, Dh = int(rng.integers(1, 4)), 2, 24, 8
+    n_tok = int(rng.integers(1, C))
+    pol = lethe(capacity=C, kv_format="int8")
+    lay = cache_lib.init_cache(n_layers=1, batch=B, n_kv_heads=Hkv,
+                               capacity=C, d_head=Dh, policy=pol).layer(0)
+    key = jax.random.PRNGKey(seed)
+    for t in range(n_tok):
+        kn = jax.random.normal(jax.random.fold_in(key, t), (B, Hkv, Dh))
+        lay = cache_lib.append_token(lay, kn, kn * 0.5 + 1.0, t, 1.0)
+    keep = jnp.asarray(rng.random((B, C)) > rng.uniform(0.1, 0.7))
+    comp = cache_lib.compact(lay, keep)
+    pre_k = np.asarray(cache_lib.dequantize_kv(lay.k, lay.k_scale))
+    pre_v = np.asarray(cache_lib.dequantize_kv(lay.v, lay.v_scale))
+    post_k = np.asarray(cache_lib.dequantize_kv(comp.k, comp.k_scale))
+    post_v = np.asarray(cache_lib.dequantize_kv(comp.v, comp.v_scale))
+    pos_pre, pos_post = np.asarray(lay.pos), np.asarray(comp.pos)
+    for b in range(B):
+        for c in range(int(comp.length[b])):
+            p = pos_post[b, c]
+            src = int(np.where(pos_pre[b] == p)[0][0])
+            np.testing.assert_array_equal(post_k[b, :, c], pre_k[b, :, src])
+            np.testing.assert_array_equal(post_v[b, :, c], pre_v[b, :, src])
+            assert comp.score[b, c] == lay.score[b, src]
+
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_compact_scale_coherence_fuzz(seed):
+        _coherence_case(seed)
+except ImportError:
+    pass                                     # seeded sweep below still runs
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 7, 13, 42, 1234])
+def test_compact_scale_coherence_seeded(seed):
+    _coherence_case(seed)
+
+
+def test_slot_refill_scale_coherence():
+    """insert_slot / reset_slot on a quantized live state: the addressed
+    row carries its scales in; every other row — payloads AND scales —
+    passes through bit-identically."""
+    pol = lethe(capacity=16, kv_format="int8")
+    state = cache_lib.init_cache(n_layers=2, batch=3, n_kv_heads=2,
+                                 capacity=16, d_head=8, policy=pol)
+    key = jax.random.PRNGKey(9)
+    # populate all rows via per-layer appends
+    for t in range(6):
+        for l in range(2):
+            kn = jax.random.normal(jax.random.fold_in(key, 10 * l + t),
+                                   (3, 2, 8))
+            lay = cache_lib.append_token(state.layer(l), kn, kn, t, 1.0)
+            state = jax.tree.map(
+                lambda full, one, l=l: full.at[l].set(one), state, lay)
+    row = cache_lib.init_cache(n_layers=2, batch=1, n_kv_heads=2,
+                               capacity=16, d_head=8, policy=pol)
+    rn = jax.random.normal(jax.random.fold_in(key, 99), (1, 2, 8))
+    for l in range(2):
+        lay = cache_lib.append_token(row.layer(l), rn, rn, 0, 1.0)
+        row = jax.tree.map(lambda full, one, l=l: full.at[l].set(one),
+                           row, lay)
+    new = cache_lib.insert_slot(state, 1, row)
+    for b in (0, 2):     # neighbors bit-identical, scales included
+        np.testing.assert_array_equal(np.asarray(new.k[:, b]),
+                                      np.asarray(state.k[:, b]))
+        np.testing.assert_array_equal(np.asarray(new.k_scale[:, b]),
+                                      np.asarray(state.k_scale[:, b]))
+    np.testing.assert_array_equal(np.asarray(new.k[:, 1]),
+                                  np.asarray(row.k[:, 0]))
+    np.testing.assert_array_equal(np.asarray(new.k_scale[:, 1]),
+                                  np.asarray(row.k_scale[:, 0]))
+    # retire it again: scales reset to the empty-slot value, others intact
+    reset = cache_lib.reset_slot(new, 1)
+    np.testing.assert_array_equal(np.asarray(reset.k_scale[:, 1]), 1.0)
+    np.testing.assert_array_equal(np.asarray(reset.k_scale[:, 0]),
+                                  np.asarray(new.k_scale[:, 0]))
+
+
+# --------------------------------------------------------------------------
+# Chunked prefill on the quantized layout
+# --------------------------------------------------------------------------
+
+
+def test_chunked_prefill_int8_compresses_and_decodes():
+    cfg, model, params, _ = _tiny_setup()
+    pol = lethe(capacity=24, kv_format="int8")
+    long_toks = jax.random.randint(jax.random.PRNGKey(5), (1, 50), 0, 128)
+    logits, state = model.prefill_chunked(
+        params, {"tokens": long_toks}, pol, chunk_plan=(16, 16, 16, 2))
+    assert state.quantized and state.k.dtype == jnp.int8
+    assert int(np.asarray(state.length).max()) <= 24
+    # the compressed quantized cache must decode
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    lg, state = model.decode_step(params, state, tok, jnp.int32(50), pol)
+    assert bool(jnp.all(jnp.isfinite(lg)))
+
+
+def test_chunked_vs_whole_int8_within_tolerance():
+    """Chunked admission reads the quantized prefix mid-prefill while the
+    whole-prompt path computes on exact values and quantizes at fill — the
+    two agree to quantization tolerance (bit-identity is a bf16-path
+    guarantee, already enforced by test_chunked_prefill)."""
+    cfg, model, params, toks = _tiny_setup()
+    pol = lethe(capacity=24, kv_format="int8")
+    lg_c, st_c = model.prefill_chunked(params, {"tokens": toks}, pol,
+                                       chunk_plan=(8, 4))
+    lg_w, st_w = model.prefill(params, {"tokens": toks}, pol)
+    assert np.abs(np.asarray(lg_c) - np.asarray(lg_w)).max() <= 0.08
+    np.testing.assert_array_equal(np.asarray(st_c.pos), np.asarray(st_w.pos))
+
+
+# --------------------------------------------------------------------------
+# Config-time validation
+# --------------------------------------------------------------------------
+
+
+def test_kv_format_rejected_for_recurrent_families():
+    pol = lethe(capacity=16, kv_format="int8")
+    for arch in ("rwkv6-7b", "recurrentgemma-2b"):
+        model = build_model(get_arch(arch).reduced())
+        with pytest.raises(ValueError, match="int8"):
+            Engine(model, None, pol)
+        with pytest.raises(ValueError, match="int8"):
+            model.init_decode_state(pol, 2)
+
+
+def test_unknown_kv_format_rejected():
+    with pytest.raises(ValueError, match="kv_format"):
+        make_policy("lethe", capacity=16, kv_format="fp4")
+
+
+@pytest.mark.parametrize("kind", ["fullkv", "pyramidkv"])
+def test_all_cache_policies_accept_int8(kind):
+    cfg, model, params, toks = _tiny_setup()
+    pol = make_policy(kind, capacity=24, kv_format="int8")
+    assert pol.kv_format == "int8"
+    eng = Engine(model, params, pol)
+    r = eng.generate({"tokens": toks}, 6)
+    assert r.kv_format == "int8" and r.steps == 6
+
+
+# --------------------------------------------------------------------------
+# Physical-bytes accounting
+# --------------------------------------------------------------------------
+
+
+def test_int8_halves_kv_bytes_at_dh64():
+    """Acceptance arithmetic at the benchmark shape (Dh=64): int8 payload
+    plus f32 per-(token, head) scales ≤ 55% of the bf16 payload bytes."""
+    kw = dict(n_layers=2, batch=2, n_kv_heads=2, capacity=64, d_head=64)
+    dense = cache_lib.init_cache(policy=lethe(capacity=64),
+                                 dtype=jnp.bfloat16, **kw)
+    quant = cache_lib.init_cache(policy=lethe(capacity=64,
+                                              kv_format="int8"), **kw)
+    d = dense.memory_breakdown()
+    q = quant.memory_breakdown()
+    ratio = (q["kv_payload_bytes"] + q["scale_bytes"]) / d["kv_payload_bytes"]
+    assert ratio <= 0.55, ratio
+    assert quant.memory_bytes() == sum(q.values())
+
+
+def test_engine_and_completion_surface_physical_bytes():
+    from repro.serving.engine import _cache_stats
+    from repro.serving.scheduler import Request, Scheduler
+    cfg, model, params, toks = _tiny_setup()
+    eng = Engine(model, params, lethe(capacity=24, kv_format="int8"))
+    state = eng.new_decode_state(2)
+    stats = _cache_stats(state)
+    assert stats["kv_format"] == "int8"
+    assert stats["cache_bytes"] == sum(
+        stats["cache_bytes_breakdown"].values())
+    assert stats["cache_bytes_breakdown"]["scale_bytes"] > 0
+    sched = Scheduler(eng, batch_slots=2, segment_len=4)
+    sched.submit([Request(uid=0, prompt=np.asarray(toks)[0],
+                          max_new_tokens=4)])
+    done = sched.run()
+    assert done[0].kv_format == "int8"
+    assert done[0].cache_bytes == stats["cache_bytes"]
