@@ -60,7 +60,7 @@ def _run_once(mode: str, eng: Engine, reqs: list[Request], slots: int,
     done = sched.run() if mode == "continuous" else sched.run_lockstep()
     wall = time.perf_counter() - t0
     assert sorted(c.uid for c in done) == list(range(len(reqs)))
-    return wall, done
+    return wall, done, sched
 
 
 def _measure(eng: Engine, reqs: list[Request], slots: int, segment_len: int,
@@ -70,11 +70,14 @@ def _measure(eng: Engine, reqs: list[Request], slots: int, segment_len: int,
     interleaving keeps a load burst from penalising one mode only."""
     walls = {"lockstep": [], "continuous": []}
     dones = {}
+    summaries = {}
     for _ in range(repeats):
         for mode in ("lockstep", "continuous"):
-            wall, done = _run_once(mode, eng, reqs, slots, segment_len)
+            wall, done, sched = _run_once(mode, eng, reqs, slots,
+                                          segment_len)
             walls[mode].append(wall)
             dones[mode] = done
+            summaries[mode] = sched.run_summary()
     out = {}
     for mode, done in dones.items():
         wall = min(walls[mode])
@@ -86,6 +89,11 @@ def _measure(eng: Engine, reqs: list[Request], slots: int, segment_len: int,
             "mean_ttft_s": float(np.mean([c.ttft_s for c in done])),
             "mean_queue_wait_s": float(np.mean(
                 [c.queue_wait_s for c in done])),
+            # robustness counters (ISSUE 6): for the plain scheduler the
+            # shed/preempt/timeout/failed counts are structurally zero —
+            # recording them is what makes an overload run (front door
+            # under pressure) distinguishable from this healthy baseline
+            "run_summary": summaries[mode],
         }
     return out
 
@@ -142,6 +150,7 @@ def benchmark(*, tiny: bool = False, out_path: str | None = None,
         speedup = cont["tokens_per_s"] / max(lock["tokens_per_s"], 1e-9)
         results["runs"][f"slots{slots}"] = {
             "lockstep": lock, "continuous": cont, "speedup": speedup}
+        results["config"]["run_summary"] = cont["run_summary"]
         line = (f"slots={slots} lockstep={lock['tokens_per_s']:.1f} tok/s "
                 f"continuous={cont['tokens_per_s']:.1f} tok/s "
                 f"speedup={speedup:.2f}x")
@@ -212,6 +221,7 @@ def _run_chunked_once(eng, reqs, *, slots, segment_len, chunk):
         "itl_p95_s": float(np.percentile(gaps, 95)) if gaps else 0.0,
         "itl_mean_s": float(np.mean(gaps)) if gaps else 0.0,
         "segments": len(gaps),
+        "run_summary": sched.run_summary(),
     }
 
 
@@ -285,6 +295,7 @@ def benchmark_chunked(*, tiny: bool = False, out_path: str | None = None,
         "max_slot_tokens": int(sched.max_slot_tokens),
         "capacity": capacity,
     }
+    results["config"]["run_summary"] = sched.run_summary()
     assert sched.max_slot_tokens <= capacity
 
     line = (f"p95 ITL whole={best['whole_prompt']['itl_p95_s'] * 1e3:.2f}ms "

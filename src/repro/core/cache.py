@@ -47,6 +47,7 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.tree_util import register_dataclass
 
 from repro.core.policy import PolicyConfig
@@ -269,6 +270,80 @@ def insert_slot(cache: KVCache, slot, row: KVCache) -> KVCache:
 # input→output and slot turnover mutates the standing allocation in place.
 update_slots_donated = jax.jit(tree_update_slots, donate_argnums=(0,))
 reset_slots_donated = jax.jit(tree_reset_slot, donate_argnums=(0,))
+
+
+# --------------------------------------------------------------------------
+# Preemption-to-host: snapshot a slot's rows off-device and re-admit them
+# later, bit-exactly. A snapshot is the complete per-request state — K/V
+# payloads (bf16 or int8 + dequant scales), positions, RASR scores, and the
+# per-row budget/evict_at/sparsity machinery — because every decode-state
+# leaf is laid out [L, B, ...]; nothing about a request lives outside its
+# batch row.
+# --------------------------------------------------------------------------
+
+def tree_extract_slots(state, slots):
+    """Copy the batch rows named in ``slots`` ([k] int) of a decode-state
+    pytree to HOST memory: a numpy pytree with batch axis k at axis 1,
+    exactly the ``rows_state`` shape that ``tree_update_slots`` re-admits.
+
+    The copy preserves bit patterns (ml_dtypes bfloat16 / int8 payloads and
+    f32 scales round-trip exactly), so extract -> insert is the identity on
+    the named rows — the preemption guarantee the serving front door's
+    differential tests assert.
+    """
+    ids = np.asarray(slots, np.int32).reshape(-1)
+    return jax.tree.map(lambda leaf: np.asarray(leaf)[:, ids], state)
+
+
+def tree_extract_slot(state, slot: int):
+    """Single-slot form of ``tree_extract_slots`` (batch axis of 1)."""
+    return tree_extract_slots(state, [slot])
+
+
+def tree_insert_slots(state, slots, rows_state):
+    """Re-admit host-side rows (from ``tree_extract_slots``) into the batch
+    rows named in ``slots`` — the donated masked insert, so every other
+    slot passes through bit-identically and ``state`` is consumed."""
+    rows = jax.tree.map(jnp.asarray, rows_state)
+    return update_slots_donated(state, jnp.asarray(slots, jnp.int32), rows)
+
+
+# Aliases under the serving-facing names (ISSUE 6): ``extract_slot`` /
+# ``insert_slot`` round-trip one request through host RAM.
+extract_slots = tree_extract_slots
+extract_slot = tree_extract_slot
+insert_slots = tree_insert_slots
+
+
+def quantize_cache(cache: KVCache) -> KVCache:
+    """Dense -> int8 block-scaled conversion of a (possibly live) cache:
+    the degradation-ladder rung that trades dequant error for halved KV
+    bytes under sustained overload. Per-(token, kv-head) symmetric
+    quantization, same layout ``init_kv_payload`` builds; empty slots
+    (zero vectors) get unit scales and round-trip to exact zeros. No-op on
+    an already-quantized cache. Score/position/budget state is untouched —
+    only the payload representation degrades."""
+    if cache.quantized:
+        return cache
+    qk, sk = quantize_kv(cache.k)
+    qv, sv = quantize_kv(cache.v)
+    return KVCache(k=qk, v=qv, pos=cache.pos, score=cache.score,
+                   length=cache.length, budget=cache.budget,
+                   evict_at=cache.evict_at, sparsity=cache.sparsity,
+                   k_scale=sk, v_scale=sv)
+
+
+def tree_quantize(state):
+    """Apply ``quantize_cache`` to every KVCache subtree of a decode state
+    (non-cache leaves — recurrence matrices, conv state — pass through)."""
+    return jax.tree.map(
+        lambda s: quantize_cache(s) if isinstance(s, KVCache) else s,
+        state, is_leaf=lambda x: isinstance(x, KVCache))
+
+
+# jitted, NOT donated: the int8 leaves cannot alias the bf16 input buffers
+# (different dtypes), so migration transiently holds both representations.
+quantize_tree_jit = jax.jit(tree_quantize)
 
 
 # --------------------------------------------------------------------------

@@ -1,15 +1,23 @@
-"""Serving launcher: batched generation under any cache policy.
+"""Serving launcher: live traffic through the SLO-aware front door.
+
+Drives the asyncio ``FrontDoor`` (admission control, priorities, deadlines,
+load shedding, preemption-to-host) with open-loop Poisson arrivals and
+streams tokens per request as they decode — the production-shaped
+counterpart of the old static-batch replay.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-32b --reduced \
-      --policy lethe --capacity 64 --batch 4 --prompt-len 48 --gen 64
+      --policy lethe --capacity 64 --slots 4 --prompt-len 48 --gen 64 \
+      --requests 16 --arrival-rate 8 --priority-mix 0:0.7,1:0.3 \
+      --deadline-ms 60000
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
+import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt
@@ -17,6 +25,48 @@ from repro.configs import get_arch
 from repro.core.policy import make_policy
 from repro.models.api import build_model
 from repro.serving.engine import Engine
+from repro.serving.frontdoor import (AdmissionConfig, FrontDoor,
+                                     ServeRequest)
+
+
+def parse_priority_mix(spec: str) -> tuple[list[int], list[float]]:
+    """``"0:0.7,1:0.3"`` -> priorities + normalised sampling weights."""
+    prios, weights = [], []
+    for part in spec.split(","):
+        p, w = part.split(":")
+        prios.append(int(p))
+        weights.append(float(w))
+    total = sum(weights)
+    return prios, [w / total for w in weights]
+
+
+async def drive(fd: FrontDoor, reqs: list[ServeRequest],
+                inter_arrival: list[float], stream: bool) -> None:
+    """Open-loop arrival process: each request is submitted at its own
+    scheduled time regardless of how the server is keeping up."""
+
+    async def one(req: ServeRequest, delay: float):
+        await asyncio.sleep(delay)
+        t0 = time.perf_counter()
+        if stream:
+            n = 0
+            async for tok in fd.stream(req):
+                n += 1
+                if n <= 4:          # keep the console readable
+                    print(f"  uid={req.uid} tok[{n - 1}]={tok}")
+            comp = fd.completion(req.uid)
+        else:
+            comp = await fd.submit(req)
+        dt = time.perf_counter() - t0
+        print(f"uid={comp.uid:3d} pri={comp.priority} "
+              f"reason={comp.finish_reason:8s} tokens={len(comp.tokens):3d} "
+              f"preempt={comp.preemptions} wall={dt:6.2f}s")
+
+    t, tasks = 0.0, []
+    for req, gap in zip(reqs, inter_arrival):
+        t += gap
+        tasks.append(asyncio.ensure_future(one(req, t)))
+    await asyncio.gather(*tasks)
 
 
 def main() -> None:
@@ -29,10 +79,25 @@ def main() -> None:
     ap.add_argument("--capacity", type=int, default=64)
     ap.add_argument("--sparse-ratio", type=float, default=4.0)
     ap.add_argument("--recent-ratio", type=float, default=0.3)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="live decode slots (continuous batching width)")
+    ap.add_argument("--segment-len", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen", type=int, default=64)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="mean arrivals/s (Poisson); 0 = all at once")
+    ap.add_argument("--priority-mix", default="0:1.0",
+                    help="priority:weight pairs, e.g. 0:0.7,1:0.3")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request submit->finish deadline")
+    ap.add_argument("--decode-timeout-ms", type=float, default=None,
+                    help="per-request first-token->finish budget")
+    ap.add_argument("--no-stream", action="store_true",
+                    help="await whole completions instead of streaming")
+    ap.add_argument("--no-shed", action="store_true")
+    ap.add_argument("--no-preempt", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--restore", default=None)
     args = ap.parse_args()
 
@@ -50,26 +115,47 @@ def main() -> None:
                       sparse_ratio=args.sparse_ratio,
                       recent_ratio=args.recent_ratio)
     eng = Engine(model, params, pol)
-    rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(rng.integers(
-        0, cfg.vocab_size, size=(args.batch, args.prompt_len)), jnp.int32)}
-    if cfg.family == "audio":
-        batch["enc_frames"] = 0.02 * jax.random.normal(
-            jax.random.PRNGKey(5), (args.batch, 16, cfg.d_model))
-    if cfg.family == "vlm":
-        batch["img_embeds"] = 0.02 * jax.random.normal(
-            jax.random.PRNGKey(5), (args.batch, 8, cfg.d_model))
 
-    res = eng.generate(batch, args.gen, temperature=args.temperature,
-                       trace_live=True)
-    print(f"policy={args.policy} capacity={args.capacity}")
-    print(f"prefill={res.prefill_seconds:.2f}s decode={res.decode_seconds:.2f}s "
-          f"tokens/s={res.tokens_per_second:.1f}")
-    print(f"cache_bytes={res.cache_bytes/2**20:.2f} MiB")
-    if res.live_token_trace:
-        tr = res.live_token_trace
-        print(f"live-token trace: start={tr[0]} peak={max(tr)} end={tr[-1]}")
-    print("first row tokens:", res.tokens[0, :16].tolist(), "...")
+    rng = np.random.default_rng(args.seed)
+    prios, weights = parse_priority_mix(args.priority_mix)
+    dl = args.deadline_ms / 1e3 if args.deadline_ms else None
+    dt = args.decode_timeout_ms / 1e3 if args.decode_timeout_ms else None
+    reqs = [ServeRequest(
+        uid=i,
+        prompt=rng.integers(0, cfg.vocab_size,
+                            size=args.prompt_len).astype(np.int32),
+        max_new_tokens=args.gen,
+        priority=int(rng.choice(prios, p=weights)),
+        deadline_s=dl, decode_timeout_s=dt)
+        for i in range(args.requests)]
+    gaps = (list(rng.exponential(1.0 / args.arrival_rate,
+                                 size=args.requests))
+            if args.arrival_rate > 0 else [0.0] * args.requests)
+
+    adm = AdmissionConfig(enable_shed=not args.no_shed,
+                          enable_preempt=not args.no_preempt)
+
+    async def serve():
+        async with FrontDoor(eng, batch_slots=args.slots,
+                             segment_len=args.segment_len,
+                             admission=adm) as fd:
+            t0 = time.perf_counter()
+            await drive(fd, reqs, gaps, stream=not args.no_stream)
+            await fd.drain()
+            wall = time.perf_counter() - t0
+            s = fd.core.run_summary()
+        print(f"\npolicy={args.policy} capacity={args.capacity} "
+              f"slots={args.slots} kv_format={s['kv_format']}")
+        print(f"completed={s['completed']} reasons={s['finish_reasons']}")
+        print(f"preempted={s['preempted']} max_queue={s['max_queue_depth']} "
+              f"peak_pressure={s['peak_pressure']:.2f}")
+        ok = [c for c in fd.core.completed
+              if c.finish_reason in ("eos", "length")]
+        toks = sum(len(c.tokens) for c in ok)
+        print(f"goodput={toks / max(wall, 1e-9):.1f} tok/s over {wall:.2f}s "
+              f"({len(ok)}/{len(reqs)} requests healthy)")
+
+    asyncio.run(serve())
 
 
 if __name__ == "__main__":

@@ -35,7 +35,7 @@ from __future__ import annotations
 import functools
 import os
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable
 
 import jax
@@ -501,6 +501,129 @@ class Engine:
             self._segment_cache[key] = fn
         return fn(state, jnp.asarray(tok, jnp.int32),
                   jnp.asarray(pos, jnp.int32), jnp.asarray(done, bool))
+
+    def decode_segment_guarded(self, state, tok, pos, done, n_steps: int, *,
+                               eos_id: int | None = None,
+                               nan_pos=None, fault_pos=None):
+        """Fault-isolated form of ``decode_segment``: same per-row greedy
+        segment, plus per-row fault *detection* (a row whose logits go
+        non-finite is flagged, not allowed to poison the harvest) and two
+        chaos-injection hooks used by the robustness battery:
+
+        * ``nan_pos`` [B] int32 — inject NaN into row i's logits at the
+          step whose (absolute) position equals ``nan_pos[i]``; -1 = off.
+        * ``fault_pos`` [B] int32 — flag row i as faulted at that position
+          without touching its logits (a simulated per-row kernel fault).
+
+        Both are *traced* arguments selected per-row, so the fault-free run
+        and a chaos run execute the SAME compiled program — which is what
+        makes "surviving rows are bit-identical to a fault-free run" a
+        structural guarantee rather than a numerical accident.
+
+        Returns (state', tokens [B, n_steps], pos', done', first_bad [B])
+        where ``first_bad[i]`` is the segment-step index of row i's first
+        faulty token (``n_steps`` = row stayed healthy): tokens at steps
+        ``< first_bad[i]`` are trustworthy, later ones are not.
+        """
+        key = ("guarded", n_steps, eos_id)
+        fn = self._segment_cache.get(key)
+        if fn is None:
+            model, params, policy = self.model, self.params, self.policy
+
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def fn(state, tok, pos, done, nan_pos, fault_pos):
+                B = tok.shape[0]
+
+                def step(carry, t):
+                    state, tok, pos, done, first_bad = carry
+                    logits, state = model.module.decode_step(
+                        params, state, tok, pos, model.cfg, policy)
+                    logits = jnp.where((pos == nan_pos)[:, None],
+                                       jnp.float32(jnp.nan), logits)
+                    bad_now = (~jnp.isfinite(logits).all(axis=-1)
+                               | (pos == fault_pos))
+                    first_bad = jnp.where(bad_now & (first_bad == n_steps),
+                                          t, first_bad)
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    if eos_id is not None:
+                        nxt = jnp.where(done, eos_id, nxt)
+                        done = done | (nxt == eos_id)
+                    return (state, nxt, pos + 1, done, first_bad), nxt
+
+                first0 = jnp.full((B,), n_steps, jnp.int32)
+                (state, tok, pos, done, first_bad), toks = jax.lax.scan(
+                    step, (state, tok, pos, done, first0),
+                    jnp.arange(n_steps, dtype=jnp.int32))
+                return (state, jnp.swapaxes(toks, 0, 1), pos, done,
+                        first_bad)
+
+            self._segment_cache[key] = fn
+        B = len(tok)
+        off = jnp.full((B,), -1, jnp.int32)
+        return fn(state, jnp.asarray(tok, jnp.int32),
+                  jnp.asarray(pos, jnp.int32), jnp.asarray(done, bool),
+                  off if nan_pos is None else jnp.asarray(nan_pos,
+                                                          jnp.int32),
+                  off if fault_pos is None else jnp.asarray(fault_pos,
+                                                            jnp.int32))
+
+    def prefill_rows(self, batch: dict, *, chunk_size: int = 32,
+                     max_keep: int | None = None):
+        """Prefill one admission group WITHOUT inserting it: returns
+        (last-token logits [k, V], rows decode-state with batch axis k) so
+        the caller can inspect/degrade the rows before committing them to
+        live slots — the front door's admission primitive.
+
+        Prompts that fit capacity run the whole-prompt prefill; longer ones
+        stream through the chunked path's mid-prefill compression (and a
+        policy that cannot evict raises ``ValueError`` there, which the
+        front door maps to a typed ``rejected``). ``max_keep`` applies the
+        degraded-admission compression round: the freshly prefilled rows
+        are forced down to at most ``max_keep`` live tokens per layer
+        before insertion (attention-family caches only).
+        """
+        s_total = self.model.total_prompt_len(batch)
+        if s_total <= self.policy.capacity:
+            logits, rows = self.prefill(batch)
+        else:
+            self.model.chunked_compress(self.policy, s_total)  # may raise
+            logits, rows = self.model.prefill_chunked(
+                self.params, batch, self.policy,
+                chunk_plan=chunk_plan(s_total, chunk_size),
+                cache_dtype=self.cache_dtype)
+        if max_keep is not None and max_keep < self.policy.capacity:
+            rows = self._degrade_rows(rows, s_total - 1, max_keep)
+        return logits, rows
+
+    def _degrade_rows(self, rows, cur_pos: int, max_keep: int):
+        """Tighten freshly prefilled rows to a ``max_keep`` occupancy
+        ceiling (the compress rung of the degradation ladder). Only
+        attention-family states whose decode state is the bare slotted
+        cache participate; anything else passes through unchanged."""
+        if not isinstance(rows, cache_lib.KVCache) or not self.policy.prunes:
+            return rows
+        key = ("degrade", max_keep)
+        fn = self._segment_cache.get(key)
+        if fn is None:
+            from repro.core import pruning
+            from repro.models.transformer import layer_windows
+            policy, windows = self.policy, layer_windows(self.model.cfg)
+
+            @jax.jit
+            def fn(rows, cur):
+                out = jax.vmap(
+                    lambda lay, w: pruning.compress_prefill_layer(
+                        lay, cur, policy=policy, max_keep=max_keep,
+                        window=w))(rows, windows)
+                # Pull the eviction threshold down too, so the degraded row
+                # re-prunes at the tighter ceiling as it grows back (LETHE's
+                # per-step allocator may later raise it again — the degrade
+                # is an admission-pressure relief, not a permanent demotion).
+                return replace(out, evict_at=jnp.minimum(
+                    out.evict_at, jnp.int32(max_keep)))
+
+            self._segment_cache[key] = fn
+        return fn(rows, jnp.asarray(cur_pos, jnp.int32))
 
     def slot_lengths(self, state) -> np.ndarray:
         """Per-slot live-token occupancy, maxed over layers/caches ([B]).

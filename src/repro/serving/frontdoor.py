@@ -1,0 +1,658 @@
+"""SLO-aware serving front door: admission control, load shedding,
+preemption-to-host, and fault-isolated decoding under live traffic.
+
+The continuous-batching ``Scheduler`` replays a static request list in a
+closed loop: no priorities, no deadlines, no overload behavior, and a
+poisoned request is indistinguishable from a healthy batch. This module is
+the production-shaped layer above the same ``Engine`` primitives:
+
+* ``FrontDoorCore`` — a *deterministic, synchronous* state machine (every
+  robustness guarantee is tested by stepping it directly):
+
+  - **priorities / deadlines / decode timeouts** per request, with typed
+    terminal reasons (``scheduler.FINISH_REASONS``);
+  - **admission control + load shedding** driven by a memory-pressure
+    signal derived from ``memory_breakdown`` (live cache bytes/tokens) plus
+    queued demand. The degradation ladder, in order:
+        compress  — admissions are force-compressed to a tighter
+                    ``max_keep`` occupancy ceiling (less HBM per request);
+        int8      — live migration of the whole decode state to the
+                    block-scaled int8 layout (halved payload bytes; the
+                    engine is swapped for an ``kv_format="int8"`` twin);
+        shed      — lowest-priority queued work is dropped (``shed``);
+        reject    — new arrivals are refused (``rejected``).
+  - **preemption to host memory** — a low-priority resident's slot (KV
+    payload + dequant scales + RASR scores + per-row budget state + the
+    host-side decode cursor) is snapshotted to host RAM via
+    ``cache.extract_slot``, the slot freed for a higher-priority arrival,
+    and the request later re-admitted **bit-exactly** via
+    ``cache.insert_slot`` — per-row state is the whole request state, so
+    resumed tokens equal an uninterrupted run's.
+  - **fault isolation** — non-finite logits (real or chaos-injected),
+    inadmissible prompts, and injected mid-segment row faults terminate
+    only the affected request (``failed``/``rejected``) while the rest of
+    the batch keeps decoding; the guarded decode segment runs the SAME
+    compiled program with and without chaos, so survivors are bit-identical
+    to a fault-free run by construction.
+
+* ``FrontDoor`` — the asyncio shell: open-loop arrivals (``submit`` /
+  ``stream``), per-token streaming at segment granularity, device work off
+  the event loop in an executor. ``benchmarks/slo_serving.py`` drives it
+  with Poisson arrivals and reports goodput @ p99 TTFT/ITL SLOs.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Iterable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as cache_lib
+from repro.serving.engine import Engine, _cache_stats
+from repro.serving.scheduler import (DECODING, FINISHED, FINISH_REASONS,
+                                     PREEMPTED, PREFILLING, QUEUED,
+                                     Completion)
+
+
+@dataclass
+class ServeRequest:
+    """One front-door request: the scheduler's ``Request`` plus SLO state.
+
+    ``priority``: higher = more urgent; outranking arrivals may preempt
+    residents. ``deadline_s``: wall-clock budget from submission to
+    completion (queued or decoding; exceeded -> ``timeout``).
+    ``decode_timeout_s``: budget from first token to completion.
+    """
+    uid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    priority: int = 0
+    deadline_s: float | None = None
+    decode_timeout_s: float | None = None
+
+
+@dataclass
+class AdmissionConfig:
+    """The overload state machine's thresholds (DESIGN.md §Robustness).
+
+    ``pressure`` = live-token occupancy of the cache pool + queued demand
+    in units of the pool (1.0 = queued work alone would fill every slot to
+    capacity). The ladder degrades cheapest-first: compress admissions,
+    then migrate the pool to int8, then shed queued low-priority work,
+    then reject arrivals.
+    """
+    max_queue: int | None = None       # hard queue cap; beyond -> rejected
+    max_admit_factor: float = 2.0      # prompt > factor*capacity -> rejected
+    prefill_chunk_size: int = 32       # long prompts stream through this
+    compress_at: float = 1.25          # rung 1: tighter admission max_keep
+    compress_keep_frac: float = 0.5    #   max_keep = frac * capacity
+    int8_at: float | None = None       # rung 2: live int8 migration (None=off)
+    int8_patience: int = 2             #   consecutive boundaries over int8_at
+    shed_at: float = 3.0               # rung 3: shed low-priority queued
+    reject_at: float = 6.0             # rung 4: reject new arrivals
+    enable_shed: bool = True
+    enable_preempt: bool = True
+
+
+@dataclass
+class ChaosConfig:
+    """Fault-injection hooks (robustness battery). Keys are request uids;
+    values are generated-token indices (>= 1 — token 0 comes from the
+    prefill logits) at which the fault fires during decode."""
+    nan_logits_at: dict[int, int] = field(default_factory=dict)
+    fault_at: dict[int, int] = field(default_factory=dict)
+
+
+@dataclass
+class _Entry:
+    req: ServeRequest
+    submit_ts: float
+    seq: int                          # FIFO tiebreak within a priority
+    queue_depth: int
+    tokens: list = field(default_factory=list)
+    preemptions: int = 0
+    admit_ts: float = 0.0
+    first_token_ts: float | None = None
+    ttft_steps: int = 0
+    # preemption snapshot: (host rows pytree, last token, next position)
+    snapshot: tuple | None = None
+
+
+class FrontDoorCore:
+    """Deterministic synchronous core of the serving front door.
+
+    Drives the live batch one boundary at a time: ``step()`` = ingest
+    staged arrivals -> expire deadlines -> degradation ladder -> preempt /
+    admit -> one guarded decode segment -> harvest. Tests step it directly
+    (with an injectable ``clock``) so every overload path is reproducible;
+    the asyncio ``FrontDoor`` is a thin shell around it.
+    """
+
+    def __init__(self, engine: Engine, batch_slots: int, *,
+                 segment_len: int = 8, eos_id: int | None = None,
+                 admission: AdmissionConfig | None = None,
+                 chaos: ChaosConfig | None = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.eng = engine
+        self.batch_slots = batch_slots
+        self.segment_len = segment_len
+        self.eos_id = eos_id
+        self.adm = admission or AdmissionConfig()
+        self.chaos = chaos or ChaosConfig()
+        self.clock = clock
+
+        B = batch_slots
+        self.state = engine.new_decode_state(B)
+        stats = _cache_stats(self.state)
+        self._cache_bytes = stats["cache_bytes"]
+        self._kv_format = stats["kv_format"]
+        self._cap_tokens = max(stats["capacity_tokens"], 1)
+
+        self.slots: list[_Entry | None] = [None] * B
+        self.tok = np.zeros((B,), np.int32)
+        self.pos = np.zeros((B,), np.int32)
+        self.done = np.ones((B,), bool)
+        self.queue: list[_Entry] = []       # kept priority-sorted at use
+        self.completed: list[Completion] = []
+        self.lifecycle: dict[int, list[str]] = {}
+        self._staged: list[ServeRequest] = []
+        self._events_tok: list = []
+        self._events_done: list = []
+        self._seq = 0
+        self._decode_steps = 0
+        self.max_queue_depth = 0
+        self.n_preemptions = 0
+        self.pressure_trace: list[float] = []
+        self._int8_strikes = 0
+        self._migrated = False
+        self._int8_disabled = False
+
+    # ---- submission -------------------------------------------------------
+
+    def submit(self, reqs: Iterable[ServeRequest]) -> None:
+        """Stage arrivals; admission-control verdicts (reject vs queue)
+        land at the next ``step()`` so the core stays single-threaded even
+        under the asyncio shell."""
+        self._staged.extend(reqs)
+
+    @property
+    def idle(self) -> bool:
+        return (not self._staged and not self.queue
+                and all(s is None for s in self.slots))
+
+    # ---- pressure + ladder ------------------------------------------------
+
+    def _queued_demand(self) -> float:
+        """Queued work in units of the slot pool (1.0 = would fill every
+        slot to capacity)."""
+        C = self.eng.policy.capacity
+        need = sum(min(len(e.req.prompt) + e.req.max_new_tokens, C)
+                   for e in self.queue)
+        return need / (self.batch_slots * C)
+
+    def pressure(self) -> float:
+        stats = _cache_stats(self.state)
+        occ = stats["live_tokens"] / max(stats["capacity_tokens"], 1)
+        return occ + self._queued_demand()
+
+    def _admission_max_keep(self, p: float) -> int | None:
+        if p < self.adm.compress_at:
+            return None
+        return max(1, int(self.adm.compress_keep_frac
+                          * self.eng.policy.capacity))
+
+    def _migrate_int8(self) -> None:
+        """Rung 2: migrate the live pool (and engine) to the int8 layout.
+        Disabled permanently on the first failure (recurrent family, or a
+        state that is not a slotted cache)."""
+        try:
+            pol8 = dataclasses.replace(self.eng.policy, kv_format="int8")
+            eng8 = Engine(self.eng.model, self.eng.params, pol8,
+                          cache_dtype=self.eng.cache_dtype)
+        except ValueError:
+            self._int8_disabled = True
+            return
+        self.state = cache_lib.quantize_tree_jit(self.state)
+        self.eng = eng8
+        self._migrated = True
+        stats = _cache_stats(self.state)
+        self._cache_bytes = stats["cache_bytes"]
+        self._kv_format = stats["kv_format"]
+
+    def _ladder(self) -> float:
+        p = self.pressure()
+        self.pressure_trace.append(p)
+        a = self.adm
+        if (a.int8_at is not None and not self._migrated
+                and not self._int8_disabled):
+            self._int8_strikes = (self._int8_strikes + 1
+                                  if p >= a.int8_at else 0)
+            if self._int8_strikes >= a.int8_patience:
+                self._migrate_int8()
+        if a.enable_shed and p >= a.shed_at and self.queue:
+            # shed lowest-priority queued work, youngest first, until the
+            # backlog's demand share brings pressure back under the rung.
+            # Entries with a slot path this boundary are exempt: the
+            # top-priority entries that fit the free slots, and (when
+            # preemption is on) anything that outranks a live resident —
+            # shedding those would starve exactly the work the ladder is
+            # trying to protect.
+            free = sum(s is None for s in self.slots)
+            order = sorted(self.queue,
+                           key=lambda e: (-e.req.priority, e.seq))
+            protected = {id(e) for e in order[:free]}
+            if a.enable_preempt:
+                live = [s.req.priority for s in self.slots if s is not None]
+                if live:
+                    floor = min(live)
+                    protected |= {id(e) for e in self.queue
+                                  if e.req.priority > floor}
+            cands = sorted((e for e in self.queue
+                            if id(e) not in protected),
+                           key=lambda e: (e.req.priority, -e.seq))
+            occ = p - self._queued_demand()
+            for e in cands:
+                if occ + self._queued_demand() < a.shed_at:
+                    break
+                self.queue.remove(e)
+                self._finish(e, "shed")
+        return p
+
+    # ---- terminal bookkeeping --------------------------------------------
+
+    def _finish(self, e: _Entry, reason: str) -> None:
+        assert reason in FINISH_REASONS, reason
+        now = self.clock()
+        toks = np.asarray(e.tokens, np.int32)
+        resid = max(now - (e.admit_ts or now), 1e-9)
+        self.lifecycle[e.req.uid].append(FINISHED)
+        ttft = ((e.first_token_ts - e.submit_ts)
+                if e.first_token_ts is not None else now - e.submit_ts)
+        self.completed.append(Completion(
+            uid=e.req.uid, tokens=toks, latency_steps=len(toks),
+            finish_reason=reason,
+            queue_wait_s=max((e.admit_ts or now) - e.submit_ts, 0.0),
+            ttft_s=max(ttft, 0.0),
+            decode_steps=max(len(toks) - 1, 0),
+            tokens_per_second=len(toks) / resid,
+            ttft_steps=e.ttft_steps,
+            kv_format=self._kv_format, cache_bytes=self._cache_bytes,
+            priority=e.req.priority, preemptions=e.preemptions,
+            queue_depth=e.queue_depth))
+        self._events_done.append(self.completed[-1])
+
+    def _release(self, i: int) -> None:
+        self.state = self.eng.release_slots(self.state, [i],
+                                            pad_to=self.batch_slots)
+        self.slots[i] = None
+        self.done[i] = True
+
+    # ---- ingest + expiry --------------------------------------------------
+
+    def _ingest(self) -> None:
+        staged, self._staged = self._staged, []
+        for r in staged:
+            self._seq += 1
+            e = _Entry(req=r, submit_ts=self.clock(), seq=self._seq,
+                       queue_depth=len(self.queue))
+            self.lifecycle[r.uid] = [QUEUED]
+            self.max_queue_depth = max(self.max_queue_depth,
+                                       len(self.queue) + 1)
+            a = self.adm
+            C = self.eng.policy.capacity
+            if len(r.prompt) > a.max_admit_factor * C:
+                self._finish(e, "rejected")
+                continue
+            if a.max_queue is not None and len(self.queue) >= a.max_queue:
+                self._finish(e, "rejected")
+                continue
+            if (self.pressure() >= a.reject_at
+                    and self._slot_of(None) is None):
+                self._finish(e, "rejected")
+                continue
+            self.queue.append(e)
+
+    def _slot_of(self, entry) -> int | None:
+        for i, s in enumerate(self.slots):
+            if s is entry:
+                return i
+        return None
+
+    def _expired(self, e: _Entry, now: float) -> bool:
+        d = e.req.deadline_s
+        if d is not None and now - e.submit_ts > d:
+            return True
+        t = e.req.decode_timeout_s
+        return (t is not None and e.first_token_ts is not None
+                and now - e.first_token_ts > t)
+
+    def _expire(self) -> None:
+        now = self.clock()
+        for e in [q for q in self.queue if self._expired(q, now)]:
+            self.queue.remove(e)
+            self._finish(e, "timeout")
+        for i, e in enumerate(self.slots):
+            if e is not None and self._expired(e, now):
+                self._finish(e, "timeout")
+                self._release(i)
+
+    # ---- preemption -------------------------------------------------------
+
+    def preempt_slot(self, i: int) -> None:
+        """Snapshot resident ``i`` to host RAM and free its slot. The
+        snapshot is the complete per-request state (KV payload + scales +
+        RASR scores + budget state + decode cursor); re-admission resumes
+        bit-exactly. Public so tests can force preemption points."""
+        e = self.slots[i]
+        assert e is not None, i
+        rows = cache_lib.extract_slots(self.state, [i])
+        e.snapshot = (rows, int(self.tok[i]), int(self.pos[i]))
+        e.preemptions += 1
+        self.n_preemptions += 1
+        self.lifecycle[e.req.uid].append(PREEMPTED)
+        self.queue.append(e)
+        self._release(i)
+
+    def _resume(self, e: _Entry, i: int) -> None:
+        rows, tok, pos = e.snapshot
+        if self._migrated:
+            # bf16 snapshot taken before the int8 rung fired: requantize on
+            # the way in (int8 snapshots round-trip bit-exactly unchanged)
+            rows = cache_lib.tree_quantize(rows)
+        self.state = cache_lib.insert_slots(self.state, [i], rows)
+        e.snapshot = None
+        self.slots[i] = e
+        self.tok[i], self.pos[i], self.done[i] = tok, pos, False
+        self.lifecycle[e.req.uid].append(DECODING)
+
+    # ---- admission --------------------------------------------------------
+
+    def _admit(self, pressure: float) -> None:
+        B = self.batch_slots
+        self.queue.sort(key=lambda e: (-e.req.priority, e.seq))
+        free = [i for i in range(B) if self.slots[i] is None]
+
+        # preempt: queue head strictly outranks the lowest-priority
+        # resident and no slot is free
+        while (self.adm.enable_preempt and self.queue and not free):
+            head = self.queue[0]
+            live = [(self.slots[i].req.priority, -self.slots[i].seq, i)
+                    for i in range(B) if self.slots[i] is not None]
+            if not live:
+                break
+            vprio, _, victim = min(live)
+            if head.req.priority <= vprio:
+                break
+            self.preempt_slot(victim)
+            self.queue.sort(key=lambda e: (-e.req.priority, e.seq))
+            free = [i for i in range(B) if self.slots[i] is None]
+
+        # resume preempted entries individually; group fresh admissions by
+        # prompt length so a refill wave shares prefill programs
+        while self.queue and free:
+            fresh: dict[int, list] = {}
+            n_take = len(free)
+            taken, rest = self.queue[:n_take], self.queue[n_take:]
+            self.queue = rest
+            for e in taken:
+                if e.snapshot is not None:
+                    self._resume(e, free.pop(0))
+                else:
+                    fresh.setdefault(len(e.req.prompt), []).append(e)
+            for _, group in sorted(fresh.items()):
+                ids = [free.pop(0) for _ in group]
+                self._admit_group(ids, group, pressure)
+            # instant completions (EOS-at-first-token, rejected groups) may
+            # have freed slots again — loop and refill them
+            free = [i for i in range(B) if self.slots[i] is None]
+
+    def _admit_group(self, ids: list[int], group: list[_Entry],
+                     pressure: float) -> None:
+        admit_ts = self.clock()
+        for e in group:
+            self.lifecycle[e.req.uid].append(PREFILLING)
+        prompts = np.stack([e.req.prompt for e in group]).astype(np.int32)
+        try:
+            logits, rows = self.eng.prefill_rows(
+                {"tokens": jnp.asarray(prompts)},
+                chunk_size=self.adm.prefill_chunk_size,
+                max_keep=self._admission_max_keep(pressure))
+        except ValueError:
+            # inadmissible under this policy (e.g. FullKV + over-capacity):
+            # reject the group, everyone else keeps decoding
+            for e in group:
+                self._finish(e, "rejected")
+            return
+        lg = np.asarray(logits)
+        finite = np.isfinite(lg).all(axis=-1)
+        first = lg.argmax(axis=-1).astype(np.int32)
+        ins = [i if ok else -1 for i, ok in zip(ids, finite)]
+        self.state = cache_lib.insert_slots(self.state, ins, rows)
+        for e, i, ok, f in zip(group, ids, finite, first):
+            e.admit_ts = admit_ts
+            if not ok:         # poisoned prompt: row never went live
+                self._finish(e, "failed")
+                continue
+            e.tokens.append(int(f))
+            e.first_token_ts = self.clock()
+            e.ttft_steps = self._decode_steps
+            self._events_tok.append((e.req.uid, [int(f)]))
+            if self.eos_id is not None and int(f) == self.eos_id:
+                self._finish(e, "eos")
+                self._release(i)
+            elif e.req.max_new_tokens <= 1:
+                self._finish(e, "length")
+                self._release(i)
+            else:
+                self.lifecycle[e.req.uid].append(DECODING)
+                self.slots[i] = e
+                self.tok[i] = int(f)
+                self.pos[i] = len(e.req.prompt)
+                self.done[i] = False
+
+    # ---- the boundary + segment ------------------------------------------
+
+    def _chaos_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        B = self.batch_slots
+        nan_pos = np.full((B,), -1, np.int32)
+        fault_pos = np.full((B,), -1, np.int32)
+        for i, e in enumerate(self.slots):
+            if e is None:
+                continue
+            for table, out in ((self.chaos.nan_logits_at, nan_pos),
+                               (self.chaos.fault_at, fault_pos)):
+                k = table.get(e.req.uid)
+                if k is not None and k >= len(e.tokens):
+                    # generated-token index k is produced by the decode
+                    # step consuming token k-1, i.e. at absolute position
+                    # prompt_len + k - 1
+                    out[i] = len(e.req.prompt) + k - 1
+        return nan_pos, fault_pos
+
+    def step(self) -> tuple[list, list]:
+        """One scheduler boundary + one decode segment. Returns
+        (token_events, completions) produced this step, where
+        ``token_events`` is a list of (uid, [new tokens]) for streaming."""
+        self._events_tok: list = []
+        self._events_done: list = []
+        self._ingest()
+        self._expire()
+        p = self._ladder()
+        self._admit(p)
+
+        to_reset = [i for i in range(self.batch_slots)
+                    if self.slots[i] is None]
+        if to_reset:
+            self.state = self.eng.release_slots(self.state, to_reset,
+                                                pad_to=self.batch_slots)
+        active = [i for i in range(self.batch_slots)
+                  if self.slots[i] is not None]
+        if not active:
+            return self._events_tok, self._events_done
+
+        nan_pos, fault_pos = self._chaos_arrays()
+        self.state, seg, pos_j, done_j, first_bad = \
+            self.eng.decode_segment_guarded(
+                self.state, self.tok, self.pos, self.done,
+                self.segment_len, eos_id=self.eos_id,
+                nan_pos=nan_pos, fault_pos=fault_pos)
+        seg = np.asarray(seg)
+        first_bad = np.asarray(first_bad)
+        self.pos, self.done = np.array(pos_j), np.array(done_j)
+        self.tok = seg[:, -1].astype(np.int32)
+        self._decode_steps += self.segment_len
+
+        now = self.clock()
+        for i in active:
+            e = self.slots[i]
+            want = e.req.max_new_tokens
+            reason = None
+            fresh: list[int] = []
+            for s, t in enumerate(seg[i]):
+                if s >= first_bad[i]:
+                    reason = "failed"
+                    break
+                e.tokens.append(int(t))
+                fresh.append(int(t))
+                if self.eos_id is not None and t == self.eos_id:
+                    reason = "eos"
+                    break
+                if len(e.tokens) >= want:
+                    reason = "length"
+                    break
+            if fresh:
+                self._events_tok.append((e.req.uid, fresh))
+            if reason is None and self._expired(e, now):
+                reason = "timeout"
+            if reason is not None:
+                self._finish(e, reason)
+                self._release(i)
+        return self._events_tok, self._events_done
+
+    def run(self) -> list[Completion]:
+        """Drain synchronously (closed-loop form, mirrors
+        ``Scheduler.run``): step until idle; completions uid-ordered."""
+        while not self.idle:
+            self.step()
+        self.completed.sort(key=lambda c: c.uid)
+        return self.completed
+
+    def run_summary(self) -> dict:
+        by_reason = {r: 0 for r in FINISH_REASONS}
+        for c in self.completed:
+            by_reason[c.finish_reason] += 1
+        return {
+            "completed": len(self.completed),
+            "finish_reasons": by_reason,
+            "shed": by_reason["shed"],
+            "preempted": self.n_preemptions,
+            "timeout": by_reason["timeout"],
+            "failed": by_reason["failed"],
+            "rejected": by_reason["rejected"],
+            "max_queue_depth": self.max_queue_depth,
+            "decode_steps": self._decode_steps,
+            "kv_format": self._kv_format,
+            "peak_pressure": max(self.pressure_trace, default=0.0),
+        }
+
+
+class FrontDoor:
+    """Asyncio shell over ``FrontDoorCore``: open-loop submission with
+    per-token streaming. Device work runs in an executor so the event loop
+    keeps accepting arrivals mid-segment.
+
+    Usage::
+
+        async with FrontDoor(engine, batch_slots=8, eos_id=2) as fd:
+            comp = await fd.submit(req)            # or:
+            async for tok in fd.stream(req): ...
+    """
+
+    _DONE = object()
+
+    def __init__(self, engine: Engine, batch_slots: int, **core_kw):
+        self.core = FrontDoorCore(engine, batch_slots, **core_kw)
+        self._futures: dict[int, asyncio.Future] = {}
+        self._streams: dict[int, asyncio.Queue] = {}
+        self._completions: dict[int, Completion] = {}
+        self._wake: asyncio.Event | None = None
+        self._task: asyncio.Task | None = None
+        self._stopping = False
+
+    async def __aenter__(self) -> "FrontDoor":
+        self._wake = asyncio.Event()
+        self._task = asyncio.get_running_loop().create_task(self._loop())
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    def _enqueue(self, req: ServeRequest) -> asyncio.Future:
+        fut = asyncio.get_running_loop().create_future()
+        self._futures[req.uid] = fut
+        self.core.submit([req])
+        self._wake.set()
+        return fut
+
+    async def submit(self, req: ServeRequest) -> Completion:
+        """Submit one request; resolves to its (typed) Completion."""
+        return await self._enqueue(req)
+
+    async def stream(self, req: ServeRequest):
+        """Submit one request and yield its tokens as they decode
+        (segment-granularity). The final Completion is available from
+        ``completion(uid)`` afterwards."""
+        q: asyncio.Queue = asyncio.Queue()
+        self._streams[req.uid] = q
+        fut = self._enqueue(req)
+        while True:
+            item = await q.get()
+            if item is self._DONE:
+                break
+            yield item
+        self._completions[req.uid] = await fut
+
+    def completion(self, uid: int) -> Completion | None:
+        return self._completions.get(uid)
+
+    async def drain(self) -> None:
+        """Wait until every submitted request has completed."""
+        futs = list(self._futures.values())
+        if futs:
+            await asyncio.gather(*futs, return_exceptions=True)
+
+    async def stop(self) -> None:
+        self._stopping = True
+        self._wake.set()
+        if self._task is not None:
+            await self._task
+            self._task = None
+
+    async def _loop(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            if self.core.idle:
+                if self._stopping:
+                    break
+                self._wake.clear()
+                await self._wake.wait()
+                continue
+            events, dones = await loop.run_in_executor(None, self.core.step)
+            for uid, toks in events:
+                q = self._streams.get(uid)
+                if q is not None:
+                    for t in toks:
+                        q.put_nowait(t)
+            for comp in dones:
+                q = self._streams.get(uid := comp.uid)
+                if q is not None:
+                    q.put_nowait(self._DONE)
+                fut = self._futures.get(uid)
+                if fut is not None and not fut.done():
+                    fut.set_result(comp)
+                self._completions[uid] = comp
+            await asyncio.sleep(0)

@@ -41,7 +41,20 @@ from repro.serving.engine import Engine
 QUEUED = "queued"
 PREFILLING = "prefilling"
 DECODING = "decoding"
+PREEMPTED = "preempted"
 FINISHED = "finished"
+
+# Typed terminal reasons (``Completion.finish_reason``). Every request ends
+# in exactly one of these; the serving front door's overload and fault paths
+# are distinguishable from healthy completion by reason alone:
+#   eos/length — healthy completion
+#   timeout    — deadline or decode-timeout exceeded (queued or mid-decode)
+#   shed       — dropped from the queue under load shedding
+#   rejected   — refused at admission (queue full, over pressure, or an
+#                inadmissible prompt under this policy)
+#   failed     — per-request fault (non-finite logits / injected row fault);
+#                the rest of the batch keeps decoding
+FINISH_REASONS = ("eos", "length", "timeout", "shed", "rejected", "failed")
 
 
 @dataclasses.dataclass
@@ -66,6 +79,9 @@ class Completion:
     kv_format: str = "bf16"     # cache storage format this run served under
     cache_bytes: int = 0        # physical bytes of the live decode state
     #                             (K/V payloads + dequant scales + metadata)
+    priority: int = 0           # request priority (higher = more urgent)
+    preemptions: int = 0        # times this request was preempted to host
+    queue_depth: int = 0        # queue depth observed at submission
 
 
 @dataclasses.dataclass
@@ -133,13 +149,43 @@ class Scheduler:
         # config; refreshed from the live state at the start of each run)
         self._kv_format = getattr(engine.policy, "kv_format", "bf16")
         self._cache_bytes = 0
+        # robustness counters (ISSUE 6): always present so overload runs
+        # are distinguishable from healthy ones in every run summary —
+        # the plain scheduler never sheds/preempts/times out, so its
+        # counters stay structurally zero.
+        self.max_queue_depth = 0
+        self._submit_depth: dict[int, int] = {}
 
     def submit(self, reqs: Iterable[Request]) -> None:
         now = time.perf_counter()
         for r in reqs:
             self.queue.append(r)
             self._submit_ts[r.uid] = now
+            self._submit_depth[r.uid] = len(self.queue)
+            self.max_queue_depth = max(self.max_queue_depth,
+                                       len(self.queue))
             self.lifecycle[r.uid] = [QUEUED]
+
+    def run_summary(self) -> dict:
+        """Aggregate robustness counters over ``completed`` — one shape
+        shared with the front door so benchmark config blocks can record
+        overload behavior uniformly."""
+        by_reason = {r: 0 for r in FINISH_REASONS}
+        for c in self.completed:
+            by_reason[c.finish_reason] = by_reason.get(c.finish_reason,
+                                                       0) + 1
+        return {
+            "completed": len(self.completed),
+            "finish_reasons": by_reason,
+            "shed": by_reason["shed"],
+            "preempted": sum(c.preemptions for c in self.completed),
+            "timeout": by_reason["timeout"],
+            "failed": by_reason["failed"],
+            "rejected": by_reason["rejected"],
+            "max_queue_depth": self.max_queue_depth,
+            "decode_steps": self._decode_steps,
+            "kv_format": self._kv_format,
+        }
 
     # ---- continuous batching ---------------------------------------------
 
@@ -157,7 +203,8 @@ class Scheduler:
             decode_steps=len(toks) - 1,
             tokens_per_second=len(toks) / resid,
             ttft_steps=slot.ttft_steps,
-            kv_format=self._kv_format, cache_bytes=self._cache_bytes))
+            kv_format=self._kv_format, cache_bytes=self._cache_bytes,
+            queue_depth=self._submit_depth.get(r.uid, 0)))
 
     def _activate(self, slots, tok, pos, done, i: int, r: Request, first: int,
                   admit_ts: float) -> None:
@@ -212,7 +259,8 @@ class Scheduler:
                         uid=r.uid, tokens=np.zeros((0,), np.int32),
                         latency_steps=0, finish_reason="rejected",
                         queue_wait_s=admit_ts - self._submit_ts[r.uid],
-                        ttft_s=now - self._submit_ts[r.uid]))
+                        ttft_s=now - self._submit_ts[r.uid],
+                        queue_depth=self._submit_depth.get(r.uid, 0)))
                 continue
             groups.append(_PrefillGroup(job=job, assignments=group,
                                         admit_ts=admit_ts))

@@ -1,0 +1,143 @@
+"""Chaos / fault-isolation battery.
+
+Injected NaN logits, mid-segment row faults, over-capacity prompts, and
+policy-inadmissible prompts must each terminate exactly ONE request with
+the right typed reason while every surviving request's tokens stay
+bit-identical to a fault-free run of the same traffic. The guarded decode
+segment runs the SAME compiled program with and without chaos, so survivor
+identity is structural, not statistical — these tests pin it anyway.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.policy import make_policy
+from repro.models.api import build_model
+from repro.serving.engine import Engine
+from repro.serving.frontdoor import (AdmissionConfig, ChaosConfig,
+                                     FrontDoorCore, ServeRequest)
+
+INF = float("inf")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("qwen2.5-32b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pol = make_policy("lethe", capacity=24, sink_len=2, sparse_ratio=4.0)
+    eng = Engine(model, params, pol)
+    return cfg, model, params, eng
+
+
+def _reqs(cfg, spec, seed=0):
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(uid=i,
+                         prompt=rng.integers(0, cfg.vocab_size,
+                                             size=s).astype(np.int32),
+                         max_new_tokens=n)
+            for i, (s, n) in enumerate(spec)]
+
+
+def _transparent():
+    return AdmissionConfig(compress_at=INF, shed_at=INF, reject_at=INF)
+
+
+def _run(eng, reqs, *, slots, chaos=None):
+    core = FrontDoorCore(eng, batch_slots=slots, segment_len=4,
+                         admission=_transparent(), chaos=chaos)
+    core.submit(reqs)
+    return {c.uid: c for c in core.run()}, core.run_summary()
+
+
+@pytest.mark.parametrize("field,kind", [("nan_logits_at", "nan-logits"),
+                                        ("fault_at", "row-fault")])
+def test_injected_fault_kills_exactly_one_request(setup, field, kind):
+    """A fault at generated-token index k terminates only the poisoned
+    request (typed ``failed``) after exactly k clean tokens; every
+    survivor is bit-identical to the fault-free run."""
+    cfg, model, params, eng = setup
+    reqs = _reqs(cfg, [(8, 10), (10, 10), (12, 10)], seed=0)
+    clean, clean_sum = _run(eng, reqs, slots=3)
+    assert clean_sum["failed"] == 0
+
+    k = 5
+    chaos = ChaosConfig(**{field: {1: k}})
+    faulted, s = _run(eng, reqs, slots=3, chaos=chaos)
+
+    assert faulted[1].finish_reason == "failed", kind
+    assert len(faulted[1].tokens) == k            # clean prefix preserved
+    np.testing.assert_array_equal(faulted[1].tokens,
+                                  clean[1].tokens[:k])
+    assert s["failed"] == 1 and s["completed"] == 3
+    for uid in (0, 2):                            # survivors untouched
+        assert faulted[uid].finish_reason == clean[uid].finish_reason
+        np.testing.assert_array_equal(faulted[uid].tokens,
+                                      clean[uid].tokens,
+                                      err_msg=f"survivor uid {uid}")
+
+
+def test_fault_mid_refill_wave(setup):
+    """The fault fires on a request admitted AFTER others already finished
+    and recycled slots — isolation must hold across refill churn too."""
+    cfg, model, params, eng = setup
+    reqs = _reqs(cfg, [(8, 3), (10, 12), (8, 4), (10, 9)], seed=1)
+    clean, _ = _run(eng, reqs, slots=2)
+    faulted, s = _run(eng, reqs, slots=2,
+                      chaos=ChaosConfig(nan_logits_at={3: 4}))
+    assert faulted[3].finish_reason == "failed"
+    assert len(faulted[3].tokens) == 4
+    assert s["failed"] == 1 and s["completed"] == 4
+    for uid in (0, 1, 2):
+        np.testing.assert_array_equal(faulted[uid].tokens,
+                                      clean[uid].tokens,
+                                      err_msg=f"survivor uid {uid}")
+
+
+def test_over_capacity_prompt_rejected_neighbors_clean(setup):
+    cfg, model, params, eng = setup
+    ok = _reqs(cfg, [(8, 6), (10, 6)], seed=2)
+    huge = ServeRequest(uid=9, prompt=np.zeros(64, np.int32),
+                        max_new_tokens=4)
+    clean, _ = _run(eng, ok, slots=2)
+    mixed, s = _run(eng, [ok[0], huge, ok[1]], slots=2)
+    assert mixed[9].finish_reason == "rejected"
+    assert len(mixed[9].tokens) == 0
+    assert s["rejected"] == 1 and s["completed"] == 3
+    for r in ok:
+        np.testing.assert_array_equal(mixed[r.uid].tokens,
+                                      clean[r.uid].tokens)
+
+
+def test_policy_inadmissible_prompt_rejected(setup):
+    """FullKV cannot admit a prompt longer than capacity: the group is
+    rejected with the typed reason instead of poisoning the pool, and
+    short requests still serve."""
+    cfg, model, params, _ = setup
+    pol = make_policy("fullkv", capacity=16)
+    eng = Engine(model, params, pol)
+    rng = np.random.default_rng(3)
+    long = ServeRequest(uid=0, prompt=rng.integers(
+        0, cfg.vocab_size, size=20).astype(np.int32), max_new_tokens=4)
+    short = ServeRequest(uid=1, prompt=rng.integers(
+        0, cfg.vocab_size, size=8).astype(np.int32), max_new_tokens=4)
+    done, s = _run(eng, [long, short], slots=1)
+    assert done[0].finish_reason == "rejected"
+    assert done[1].finish_reason in ("length", "eos")
+    assert s["rejected"] == 1 and s["completed"] == 2
+
+
+def test_chaos_run_drains_and_slots_recycle(setup):
+    """After a fault the slot must come back into rotation: later queued
+    work decodes in the recycled slot and the door fully drains."""
+    cfg, model, params, eng = setup
+    reqs = _reqs(cfg, [(8, 12), (10, 12), (8, 6), (10, 6)], seed=4)
+    done, s = _run(eng, reqs, slots=2,
+                   chaos=ChaosConfig(fault_at={0: 3}))
+    assert done[0].finish_reason == "failed"
+    assert s["completed"] == 4
+    for uid in (2, 3):                 # admitted after the fault
+        assert done[uid].finish_reason in ("length", "eos")
+        assert len(done[uid].tokens) == 6

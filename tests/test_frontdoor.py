@@ -1,0 +1,403 @@
+"""SLO front-door battery.
+
+Covers the serving-robustness guarantees DESIGN.md §Robustness promises:
+  * differential — the front door reproduces solo per-request greedy tokens
+    exactly when the ladder is transparent, and STILL does after forced
+    preemption-to-host + resume, for every policy, bf16 and int8;
+  * preemption snapshots round-trip bit-exactly and never touch neighbors;
+  * priorities (outranking arrivals preempt residents), deadlines and
+    decode timeouts (injectable clock), typed terminal reasons;
+  * the degradation ladder: compressed admission, live int8 migration,
+    load shedding, rejection — each rung observable and typed;
+  * the asyncio shell streams exactly the tokens the core produced.
+"""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.policy import make_policy
+from repro.models.api import build_model
+from repro.serving.engine import Engine
+from repro.serving.frontdoor import (AdmissionConfig, FrontDoor,
+                                     FrontDoorCore, ServeRequest)
+
+INF = float("inf")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("qwen2.5-32b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _reqs(cfg, spec, seed=0, priorities=None, **kw):
+    """spec: list of (prompt_len, max_new) -> uid-ordered ServeRequests."""
+    rng = np.random.default_rng(seed)
+    prios = priorities or [0] * len(spec)
+    return [ServeRequest(uid=i,
+                         prompt=rng.integers(0, cfg.vocab_size,
+                                             size=s).astype(np.int32),
+                         max_new_tokens=n, priority=p, **kw)
+            for i, ((s, n), p) in enumerate(zip(spec, prios))]
+
+
+def _solo(engine, req, eos_id=None):
+    res = engine.generate({"tokens": jnp.asarray(req.prompt)[None, :]},
+                          req.max_new_tokens, eos_id=eos_id)
+    return np.asarray(res.tokens[0, :res.gen_lens[0]])
+
+
+def _transparent(**kw):
+    """Admission config with every ladder rung out of reach — the front
+    door must then be token-equivalent to the plain scheduler."""
+    base = dict(compress_at=INF, shed_at=INF, reject_at=INF)
+    base.update(kw)
+    return AdmissionConfig(**base)
+
+
+class FakeClock:
+    """Injectable wall clock: tests advance time explicitly."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+# --------------------------------------------------------------------------
+# Differential: transparent front door == per-request greedy
+# --------------------------------------------------------------------------
+
+def test_frontdoor_matches_solo(setup):
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2, sparse_ratio=4.0)
+    eng = Engine(model, params, pol)
+    reqs = _reqs(cfg, [(8, 3), (12, 9), (8, 14), (12, 6), (8, 7)], seed=0)
+    solo = {r.uid: _solo(eng, r) for r in reqs}
+
+    core = FrontDoorCore(eng, batch_slots=2, segment_len=4,
+                         admission=_transparent())
+    core.submit(reqs)
+    done = core.run()
+    assert [c.uid for c in done] == [r.uid for r in reqs]
+    for c in done:
+        np.testing.assert_array_equal(np.asarray(c.tokens), solo[c.uid],
+                                      err_msg=f"uid {c.uid}")
+    s = core.run_summary()
+    # a healthy under-capacity run exercises zero robustness machinery
+    assert s["shed"] == s["preempted"] == s["timeout"] == 0
+    assert s["failed"] == s["rejected"] == 0
+    assert s["completed"] == len(reqs)
+
+
+# --------------------------------------------------------------------------
+# Preemption-to-host: bit-exact resume, all policies, bf16 and int8
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["lethe", "h2o", "streaming"])
+@pytest.mark.parametrize("kv_format", ["bf16", "int8"])
+def test_preempt_resume_differential(setup, kind, kv_format):
+    """Forcing preemption at segment boundaries must not change a single
+    token of any request: the host snapshot (KV + scales + scores + budget
+    + cursor) IS the complete per-request state."""
+    cfg, model, params = setup
+    pol = make_policy(kind, capacity=24, sink_len=2, sparse_ratio=4.0,
+                      target_fill=0.5, kv_format=kv_format)
+    eng = Engine(model, params, pol)
+    reqs = _reqs(cfg, [(8, 12), (12, 10), (8, 14), (12, 11)], seed=3)
+    solo = {r.uid: _solo(eng, r) for r in reqs}
+
+    core = FrontDoorCore(eng, batch_slots=2, segment_len=3,
+                         admission=_transparent())
+    core.submit(reqs)
+    core.step()                       # residents have decoded one segment
+    forced = 0
+    for victim in (0, 1):
+        if core.slots[victim] is not None:
+            core.preempt_slot(victim)
+            forced += 1
+    assert forced >= 1
+    core.step()                       # someone resumed, decode continues
+    if core.slots[0] is not None:     # preempt a resumed request again
+        core.preempt_slot(0)
+        forced += 1
+    done = core.run()
+
+    assert [c.uid for c in done] == [r.uid for r in reqs]
+    for c in done:
+        np.testing.assert_array_equal(
+            np.asarray(c.tokens), solo[c.uid],
+            err_msg=f"uid {c.uid} ({kind}/{kv_format})")
+    assert sum(c.preemptions for c in done) == forced
+    assert core.run_summary()["preempted"] == forced
+
+
+def _rows_without(state, skip_slot):
+    rows = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        rows[jax.tree_util.keystr(path)] = np.delete(
+            np.asarray(leaf), skip_slot, axis=1)
+    return rows
+
+
+def test_preempt_snapshot_roundtrip_and_isolation(setup):
+    """Preempt + resume restores the ENTIRE live state bit-exactly, and
+    the preempt itself never touches neighbor rows (RASR scores
+    included)."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2, sparse_ratio=4.0)
+    eng = Engine(model, params, pol)
+    reqs = _reqs(cfg, [(10, 12), (8, 12), (12, 12)], seed=5)
+    core = FrontDoorCore(eng, batch_slots=3, segment_len=4,
+                         admission=_transparent())
+    core.submit(reqs)
+    core.step()
+    assert all(s is not None for s in core.slots)
+
+    flat = lambda st: {jax.tree_util.keystr(p): np.asarray(l) for p, l in
+                       jax.tree_util.tree_flatten_with_path(st)[0]}
+    before_all = flat(core.state)
+    before_others = _rows_without(core.state, 1)
+    tok1, pos1 = int(core.tok[1]), int(core.pos[1])
+    uid1 = core.slots[1].req.uid
+
+    core.preempt_slot(1)
+    after_preempt = _rows_without(core.state, 1)
+    for name, arr in before_others.items():
+        np.testing.assert_array_equal(arr, after_preempt[name],
+                                      err_msg=name)
+    # the preempted row really was vacated
+    assert int(np.asarray(core.state.length)[:, 1].max()) == 0
+
+    # resume puts the snapshot back into the (only) free slot: the whole
+    # pool must be bit-identical to the pre-preemption state
+    core._admit(0.0)
+    assert core.slots[1] is not None and core.slots[1].req.uid == uid1
+    assert (int(core.tok[1]), int(core.pos[1])) == (tok1, pos1)
+    for name, arr in flat(core.state).items():
+        np.testing.assert_array_equal(arr, before_all[name], err_msg=name)
+
+
+def test_priority_preemption(setup):
+    """An outranking arrival preempts the lowest-priority resident; the
+    victim resumes later and still finishes healthily."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2, sparse_ratio=4.0)
+    eng = Engine(model, params, pol)
+    lows = _reqs(cfg, [(8, 16), (8, 16)], seed=7)
+    (hi,) = _reqs(cfg, [(8, 4)], seed=8, priorities=[5])
+    hi = ServeRequest(uid=9, prompt=hi.prompt, max_new_tokens=4, priority=5)
+    solo = {r.uid: _solo(eng, r) for r in [*lows, hi]}
+
+    core = FrontDoorCore(eng, batch_slots=2, segment_len=4,
+                         admission=_transparent(enable_preempt=True))
+    core.submit(lows)
+    core.step()
+    core.submit([hi])
+    core.step()
+    assert core.n_preemptions == 1
+    done = {c.uid: c for c in core.run()}
+
+    assert done[9].finish_reason in ("length", "eos")
+    victims = [c for c in done.values() if c.preemptions]
+    assert len(victims) == 1 and victims[0].priority == 0
+    for uid, c in done.items():
+        np.testing.assert_array_equal(np.asarray(c.tokens), solo[uid],
+                                      err_msg=f"uid {uid}")
+
+
+def test_preemption_disabled_never_preempts(setup):
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2)
+    eng = Engine(model, params, pol)
+    lows = _reqs(cfg, [(8, 16)], seed=7)
+    hi = ServeRequest(uid=5, prompt=lows[0].prompt, max_new_tokens=4,
+                      priority=9)
+    core = FrontDoorCore(eng, batch_slots=1, segment_len=4,
+                         admission=_transparent(enable_preempt=False))
+    core.submit(lows)
+    core.step()
+    core.submit([hi])
+    core.step()
+    assert core.n_preemptions == 0
+    done = core.run()
+    assert all(c.finish_reason in ("length", "eos") for c in done)
+
+
+# --------------------------------------------------------------------------
+# Deadlines + decode timeouts (injectable clock)
+# --------------------------------------------------------------------------
+
+def test_queued_deadline_times_out(setup):
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2)
+    eng = Engine(model, params, pol)
+    clock = FakeClock()
+    a, b = _reqs(cfg, [(8, 16), (8, 8)], seed=9)
+    b = ServeRequest(uid=1, prompt=b.prompt, max_new_tokens=8,
+                     deadline_s=0.5)
+    core = FrontDoorCore(eng, batch_slots=1, segment_len=4,
+                         admission=_transparent(), clock=clock)
+    core.submit([a, b])
+    core.step()                        # a admitted, b queued
+    clock.t = 1.0                      # b's deadline expires while queued
+    core.step()
+    done = {c.uid: c for c in core.completed}
+    assert done[1].finish_reason == "timeout"
+    assert len(done[1].tokens) == 0
+    final = {c.uid: c for c in core.run()}
+    assert final[0].finish_reason == "length"
+
+
+def test_decode_timeout_keeps_partial_tokens(setup):
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2)
+    eng = Engine(model, params, pol)
+    clock = FakeClock()
+    (r,) = _reqs(cfg, [(8, 64)], seed=10)
+    r = ServeRequest(uid=0, prompt=r.prompt, max_new_tokens=64,
+                     decode_timeout_s=0.5)
+    core = FrontDoorCore(eng, batch_slots=1, segment_len=4,
+                         admission=_transparent(), clock=clock)
+    core.submit([r])
+    core.step()                        # first token + one segment
+    clock.t = 1.0                      # decode budget blown mid-request
+    core.step()
+    (c,) = core.completed
+    assert c.finish_reason == "timeout"
+    assert 0 < len(c.tokens) < 64      # partial output is preserved
+    assert core.idle
+
+
+# --------------------------------------------------------------------------
+# The degradation ladder, rung by rung
+# --------------------------------------------------------------------------
+
+def test_shed_drops_lowest_priority_only(setup):
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=16, sink_len=2)
+    eng = Engine(model, params, pol)
+    lows = _reqs(cfg, [(8, 8)] * 6, seed=11)
+    high = ServeRequest(uid=50, prompt=lows[0].prompt, max_new_tokens=8,
+                        priority=3)
+    core = FrontDoorCore(
+        eng, batch_slots=1, segment_len=4,
+        admission=AdmissionConfig(shed_at=1.0, reject_at=INF,
+                                  compress_at=INF, enable_shed=True))
+    core.submit([*lows, high])
+    done = core.run()
+    s = core.run_summary()
+    assert s["shed"] >= 1
+    assert s["completed"] == len(lows) + 1        # every uid terminates
+    by_uid = {c.uid: c for c in done}
+    assert by_uid[50].finish_reason in ("length", "eos")   # high-pri kept
+    for c in done:
+        if c.finish_reason == "shed":
+            assert c.priority == 0 and len(c.tokens) == 0
+
+
+def test_reject_rungs(setup):
+    """Over-long prompts, a full queue, and reject_at pressure each refuse
+    work with the typed ``rejected`` reason — and never crash the pool."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=16, sink_len=2)
+    eng = Engine(model, params, pol)
+
+    # prompt > max_admit_factor * capacity
+    huge = ServeRequest(uid=0, prompt=np.zeros(64, np.int32),
+                        max_new_tokens=4)
+    ok = _reqs(cfg, [(8, 4)], seed=12)[0]
+    ok = ServeRequest(uid=1, prompt=ok.prompt, max_new_tokens=4)
+    core = FrontDoorCore(eng, batch_slots=1, segment_len=4,
+                         admission=_transparent())
+    core.submit([huge, ok])
+    done = {c.uid: c for c in core.run()}
+    assert done[0].finish_reason == "rejected"
+    assert done[1].finish_reason in ("length", "eos")
+
+    # hard queue cap
+    reqs = _reqs(cfg, [(8, 4)] * 4, seed=13)
+    core = FrontDoorCore(eng, batch_slots=1, segment_len=4,
+                         admission=_transparent(max_queue=1))
+    core.submit(reqs)
+    core.run()
+    s = core.run_summary()
+    # the whole burst is ingested before any admission: 1 queued, 3 refused
+    assert s["rejected"] == 3
+    assert s["completed"] == 4
+
+
+def test_compress_rung_tightens_admission(setup):
+    """Rung 1: under pressure, admissions are force-compressed to the
+    ``max_keep`` ceiling — the row goes live under the cap."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2, sparse_ratio=4.0)
+    eng = Engine(model, params, pol)
+    (r,) = _reqs(cfg, [(20, 6)], seed=14)
+    core = FrontDoorCore(
+        eng, batch_slots=1, segment_len=4,
+        admission=AdmissionConfig(compress_at=0.0, compress_keep_frac=0.5,
+                                  shed_at=INF, reject_at=INF))
+    core.submit([r])
+    core._ingest()
+    core._admit(core._ladder())        # admission alone, no decode yet
+    keep = int(0.5 * pol.capacity)
+    assert int(np.asarray(core.state.length).max()) <= keep
+    (c,) = core.run()
+    assert c.finish_reason in ("length", "eos")
+    assert len(c.tokens) >= 1
+
+
+def test_int8_rung_migrates_live_pool(setup):
+    """Rung 2: sustained pressure live-migrates the pool to int8; decode
+    continues and completions record the new format."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2, sparse_ratio=4.0)
+    eng = Engine(model, params, pol)
+    reqs = _reqs(cfg, [(8, 10), (10, 10), (8, 10)], seed=15)
+    core = FrontDoorCore(
+        eng, batch_slots=2, segment_len=4,
+        admission=AdmissionConfig(int8_at=0.1, int8_patience=1,
+                                  compress_at=INF, shed_at=INF,
+                                  reject_at=INF))
+    core.submit(reqs)
+    done = core.run()
+    s = core.run_summary()
+    assert s["kv_format"] == "int8"
+    assert s["completed"] == len(reqs)
+    assert all(c.finish_reason in ("length", "eos") for c in done)
+    assert done[-1].kv_format == "int8"
+
+
+# --------------------------------------------------------------------------
+# Asyncio shell
+# --------------------------------------------------------------------------
+
+def test_async_submit_and_stream(setup):
+    """The shell's streamed tokens are exactly the completion's tokens,
+    and plain submits resolve with typed completions."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2)
+    eng = Engine(model, params, pol)
+    r0, r1 = _reqs(cfg, [(8, 8), (10, 5)], seed=16)
+    solo = {r.uid: _solo(eng, r) for r in (r0, r1)}
+
+    async def go():
+        async with FrontDoor(eng, batch_slots=2, segment_len=4,
+                             admission=_transparent()) as fd:
+            sub = asyncio.ensure_future(fd.submit(r1))
+            streamed = [t async for t in fd.stream(r0)]
+            return streamed, fd.completion(r0.uid), await sub
+
+    streamed, c0, c1 = asyncio.run(go())
+    np.testing.assert_array_equal(np.asarray(streamed), solo[0])
+    np.testing.assert_array_equal(np.asarray(c0.tokens), solo[0])
+    np.testing.assert_array_equal(np.asarray(c1.tokens), solo[1])
+    assert c0.finish_reason == "length" and c1.finish_reason == "length"
