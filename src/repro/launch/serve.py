@@ -97,6 +97,16 @@ def main() -> None:
                     help="await whole completions instead of streaming")
     ap.add_argument("--no-shed", action="store_true")
     ap.add_argument("--no-preempt", action="store_true")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable the content-hashed prefix store: repeated "
+                         "prompt prefixes admit from host RAM instead of "
+                         "re-running prefill")
+    ap.add_argument("--prefix-cache-mb", type=int, default=256,
+                    help="host-RAM bytes cap for the prefix store")
+    ap.add_argument("--prefix-templates", type=int, default=4,
+                    help="with --prefix-cache: prompts share prefixes "
+                         "drawn from this many templates (Zipf-ish reuse); "
+                         "0 keeps every prompt unique")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--restore", default=None)
     args = ap.parse_args()
@@ -120,10 +130,32 @@ def main() -> None:
     prios, weights = parse_priority_mix(args.priority_mix)
     dl = args.deadline_ms / 1e3 if args.deadline_ms else None
     dt = args.decode_timeout_ms / 1e3 if args.decode_timeout_ms else None
+
+    def make_prompt() -> np.ndarray:
+        return rng.integers(0, cfg.vocab_size,
+                            size=args.prompt_len).astype(np.int32)
+    if args.prefix_cache and args.prefix_templates > 0:
+        # shared-prefix traffic: each prompt = one of N templates plus a
+        # short unique tail, so the store sees full AND partial hits.
+        # Template lengths are aligned to the 16-token hash block: partial
+        # hits only land when the stored prefix length is a chunk-plan
+        # boundary of the new prompt (DESIGN.md §Prefix-reuse).
+        tmpl_len = max((args.prompt_len * 3 // 4) & ~15, 16)
+        tail = max(args.prompt_len - tmpl_len, 1)
+        templates = [rng.integers(0, cfg.vocab_size,
+                                  size=tmpl_len).astype(np.int32)
+                     for _ in range(args.prefix_templates)]
+
+        def make_prompt() -> np.ndarray:    # noqa: F811
+            t = templates[int(rng.integers(len(templates)))]
+            if rng.random() < 0.5:
+                return t.copy()
+            return np.concatenate(
+                [t, rng.integers(0, cfg.vocab_size, size=tail)]
+            ).astype(np.int32)
+
     reqs = [ServeRequest(
-        uid=i,
-        prompt=rng.integers(0, cfg.vocab_size,
-                            size=args.prompt_len).astype(np.int32),
+        uid=i, prompt=make_prompt(),
         max_new_tokens=args.gen,
         priority=int(rng.choice(prios, p=weights)),
         deadline_s=dl, decode_timeout_s=dt)
@@ -134,11 +166,18 @@ def main() -> None:
 
     adm = AdmissionConfig(enable_shed=not args.no_shed,
                           enable_preempt=not args.no_preempt)
+    prefix_cache = None
+    if args.prefix_cache:
+        from repro.serving.prefix_cache import (PrefixCache,
+                                                PrefixCacheConfig)
+        prefix_cache = PrefixCache(PrefixCacheConfig(
+            max_bytes=args.prefix_cache_mb << 20, block_size=16))
 
     async def serve():
         async with FrontDoor(eng, batch_slots=args.slots,
                              segment_len=args.segment_len,
-                             admission=adm) as fd:
+                             admission=adm,
+                             prefix_cache=prefix_cache) as fd:
             t0 = time.perf_counter()
             await drive(fd, reqs, gaps, stream=not args.no_stream)
             await fd.drain()
@@ -149,6 +188,12 @@ def main() -> None:
         print(f"completed={s['completed']} reasons={s['finish_reasons']}")
         print(f"preempted={s['preempted']} max_queue={s['max_queue_depth']} "
               f"peak_pressure={s['peak_pressure']:.2f}")
+        if s.get("prefix_cache"):
+            pcs = s["prefix_cache"]
+            print(f"prefix store: hit_rate={pcs['hit_rate']:.2f} "
+                  f"(full={pcs['full_hits']} partial={pcs['partial_hits']} "
+                  f"miss={pcs['misses']}) entries={pcs['entries']} "
+                  f"bytes={pcs['bytes_used']}")
         ok = [c for c in fd.core.completed
               if c.finish_reason in ("eos", "length")]
         toks = sum(len(c.tokens) for c in ok)

@@ -117,6 +117,26 @@ class ModelAPI:
             params, toks, self.cfg, policy, chunk_max=chunk_max,
             capacity=capacity, cache_dtype=cache_dtype, **_extras(batch))
 
+    def prefill_chunk_resume(self, params, rows, policy: PolicyConfig, *,
+                             chunk_max: int, s_prefix: int,
+                             capacity: int | None = None,
+                             cache_dtype=jnp.float32):
+        """Chunked-prefill carry seeded from restored prefix rows (the
+        prefix-reuse partial-hit path) instead of an empty buffer. Only
+        attention families whose decode state is the bare slotted cache
+        support resume; others raise the typed admission ``ValueError``
+        (callers fall back to a cold prefill)."""
+        check_kv_format(self.cfg, policy)
+        fn = getattr(self.module, "prefill_chunk_resume", None)
+        if fn is None or not isinstance(rows, cache_lib.KVCache):
+            raise ValueError(
+                f"prefix resume is unsupported for arch {self.cfg.name!r} "
+                f"(family {self.cfg.family!r}): the decode state is not a "
+                "bare slotted KV cache")
+        return fn(params, rows, self.cfg, policy, chunk_max=chunk_max,
+                  s_prefix=s_prefix, capacity=capacity,
+                  cache_dtype=cache_dtype)
+
     def prefill_chunk(self, params, carry, tokens_chunk, policy:
                       PolicyConfig, *, n: int, capacity: int | None = None,
                       compress: bool = False,

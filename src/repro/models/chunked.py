@@ -110,6 +110,42 @@ def init_buffer(*, n_layers: int, batch: int, n_kv_heads: int, d_head: int,
     )
 
 
+def resume_buffer(rows: cache_lib.KVCache, *,
+                  buf_capacity: int) -> cache_lib.KVCache:
+    """Restored prefix rows (a finalized decode state, capacity C) -> a
+    chunked-prefill working buffer (capacity ``buf_capacity`` = C +
+    chunk_max) — the prefix-reuse partial-hit entry point: suffix chunks
+    append after the restored tokens and attend over them exactly as they
+    would over a cold buffer holding the same K/V.
+
+    Everything the snapshot carries survives verbatim: K/V payload (and
+    dequant scales, padded with unit scales so empty tail slots round-trip
+    to zeros), positions (tail padded -1 = invalid), RASR scores, length,
+    budgets and sparsity. ``evict_at`` is parked at the buffer capacity —
+    the Algorithm-1 decode schedule does not run during prefill; the
+    compression round and the finalize prune re-derive it.
+    """
+    L, B = rows.length.shape
+    ks = vs = None
+    if rows.quantized:
+        ks = pad_to_extent(jnp.asarray(rows.k_scale), buf_capacity,
+                           axis=3, fill=1)
+        vs = pad_to_extent(jnp.asarray(rows.v_scale), buf_capacity,
+                           axis=3, fill=1)
+    return cache_lib.KVCache(
+        k=pad_to_extent(jnp.asarray(rows.k), buf_capacity, axis=3),
+        v=pad_to_extent(jnp.asarray(rows.v), buf_capacity, axis=3),
+        pos=pad_to_extent(jnp.asarray(rows.pos), buf_capacity, axis=2,
+                          fill=-1),
+        score=pad_to_extent(jnp.asarray(rows.score), buf_capacity, axis=2),
+        length=jnp.asarray(rows.length),
+        budget=jnp.asarray(rows.budget),
+        evict_at=jnp.full((L, B), buf_capacity, jnp.int32),
+        sparsity=jnp.asarray(rows.sparsity),
+        k_scale=ks, v_scale=vs,
+    )
+
+
 def init_q_tail(*, n_layers: int, batch: int, n_heads: int, d_head: int,
                 obs_window: int) -> jax.Array:
     """Zero rolling query-tail [L, B, Hq, W, Dh]; real queries fill from the

@@ -303,6 +303,39 @@ def prefill_chunk_init(params: dict, tokens: jax.Array, cfg: ArchConfig,
     }
 
 
+def prefill_chunk_resume(params: dict, rows: cache_lib.KVCache,
+                         cfg: ArchConfig, policy: PolicyConfig, *,
+                         chunk_max: int, s_prefix: int,
+                         capacity: int | None = None,
+                         cache_dtype=jnp.float32, **_) -> dict:
+    """Chunked-prefill carry that CONTINUES from a restored prefix snapshot
+    (the prefix-reuse partial-hit path): the working buffer starts as the
+    stored rows (K/V + scales + RASR scores + budget state) instead of
+    empty, and ``done`` starts at the prefix length so suffix chunks see
+    their true absolute positions.
+
+    The rolling query tail starts at zeros — the snapshot does not carry
+    post-RoPE queries. Once the suffix is at least ``obs_window`` tokens
+    the tail refills completely and finalize statistics are bit-identical
+    to a cold run (the FullKV differential test); shorter suffixes observe
+    through a partially-zero tail, an approximation on top of the already
+    lossy pruned-prefix resume (DESIGN.md §Prefix-reuse).
+    """
+    from repro.models import chunked
+    del params
+    C = capacity or policy.capacity
+    B = rows.length.shape[1]
+    return {
+        "buf": chunked.resume_buffer(rows, buf_capacity=C + chunk_max),
+        "q_tail": chunked.init_q_tail(
+            n_layers=cfg.n_layers, batch=B, n_heads=cfg.n_heads,
+            d_head=cfg.d_head, obs_window=policy.obs_window),
+        "extra": {},
+        "x_last": jnp.zeros((B, cfg.d_model), jnp.float32),
+        "done": jnp.asarray(s_prefix, jnp.int32),
+    }
+
+
 def _prefill_chunk_impl(params: dict, carry: dict, tokens: jax.Array | None,
                         cfg: ArchConfig, policy: PolicyConfig, *,
                         capacity: int | None, compress: bool,

@@ -146,6 +146,10 @@ class PrefillJob:
     compress: bool
     n_real: int                  # real request rows (before row padding)
     next_chunk: int = 0
+    # prefix-reuse resume: the carry was seeded from restored rows and
+    # ``batch`` holds only the suffix — the plan covers suffix tokens and
+    # the working buffer is NOT contiguous-from-zero (no flash offset).
+    resumed: bool = False
 
     @property
     def finished(self) -> bool:
@@ -417,6 +421,7 @@ class Engine:
                  else jnp.asarray(job.batch["tokens"][:, done:done + n]))
         offset = None
         if (os.environ.get("REPRO_CHUNK_FLASH", "0") == "1"
+                and not job.resumed
                 and done + n <= self.policy.capacity):
             offset = done        # contiguous: no compression has run yet
         job.carry = self.model.prefill_chunk(
@@ -425,11 +430,15 @@ class Engine:
         job.next_chunk += 1
         return job
 
-    def finish_prefill_chunked(self, state, job: PrefillJob, slot_ids):
+    def finish_prefill_chunked(self, state, job: PrefillJob, slot_ids, *,
+                               return_rows: bool = False):
         """Finalize a completed job and insert its rows into the live
         state (same donated masked insert as ``admit_slots``). ``slot_ids``
         addresses the real rows; dummy padding rows map to -1 (no-op).
-        Returns (state', greedy first tokens [n_real])."""
+        Returns (state', greedy first tokens [n_real]); with
+        ``return_rows`` also the finalized rows (batch axis = group width,
+        real rows first) so callers can snapshot them into the prefix
+        store — the insert does not donate them."""
         assert job.finished
         logits, rows = self.model.prefill_finalize(
             self.params, job.carry, self.policy, s_total=job.s_total)
@@ -437,7 +446,63 @@ class Engine:
         state = cache_lib.update_slots_donated(
             state, jnp.asarray(ids, jnp.int32), rows)
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if return_rows:
+            return state, first[:job.n_real], rows
         return state, first[:job.n_real]
+
+    # ---- prefix-reuse resume (serving/prefix_cache.py) --------------------
+
+    def start_prefill_resumed(self, rows, batch: dict, *, s_prefix: int,
+                              chunk_size: int) -> PrefillJob:
+        """Open a chunked prefill that CONTINUES from restored prefix rows
+        (a partial prefix-cache hit): ``batch["tokens"]`` holds ONLY the
+        suffix, the plan covers suffix tokens, and the working buffer
+        starts as the snapshot (K/V + scales + RASR scores + budget state)
+        instead of empty. Compression engages when the *restored live
+        occupancy* plus the suffix would overflow capacity — a policy that
+        cannot evict raises the same typed ``ValueError`` as cold
+        admission (callers fall back to a cold prefill)."""
+        tokens = np.asarray(batch["tokens"])
+        k, s_suffix = tokens.shape
+        assert s_suffix > 0, "full hits insert rows directly, not resume"
+        if not isinstance(rows, cache_lib.KVCache):
+            raise ValueError(
+                "prefix resume requires a bare slotted KV cache state")
+        s_total = s_prefix + s_suffix
+        plan = chunk_plan(s_suffix, chunk_size)
+        C = self.policy.capacity
+        live = int(np.asarray(rows.length).max()) if rows.length.size else 0
+        compress = live + s_suffix > C
+        if compress and not self.policy.prunes:
+            raise ValueError(
+                f"restored prefix ({live} live) + suffix ({s_suffix}) "
+                f"exceeds capacity {C} and policy {self.policy.kind!r} "
+                "cannot evict")
+        carry = self.model.prefill_chunk_resume(
+            self.params, rows, self.policy, chunk_max=max(plan),
+            s_prefix=s_prefix, cache_dtype=self.cache_dtype)
+        return PrefillJob(carry=carry,
+                          batch={"tokens": jnp.asarray(tokens)},
+                          plan=plan, s_total=s_total, compress=compress,
+                          n_real=k, resumed=True)
+
+    def resume_prefill_rows(self, rows, batch: dict, *, s_prefix: int,
+                            chunk_size: int = 32,
+                            max_keep: int | None = None):
+        """One-shot resumed prefill WITHOUT inserting (the front door's
+        partial-hit admission primitive, mirroring ``prefill_rows``):
+        returns (last-token logits [k, V], finalized rows). ``max_keep``
+        applies the same degraded-admission compression round as a cold
+        admission under pressure."""
+        job = self.start_prefill_resumed(rows, batch, s_prefix=s_prefix,
+                                         chunk_size=chunk_size)
+        while not job.finished:
+            job = self.prefill_chunk_step(job)
+        logits, out = self.model.prefill_finalize(
+            self.params, job.carry, self.policy, s_total=job.s_total)
+        if max_keep is not None and max_keep < self.policy.capacity:
+            out = self._degrade_rows(out, job.s_total - 1, max_keep)
+        return logits, out
 
     def admit_slots_chunked(self, state, slot_ids, batch: dict, *,
                             chunk_size: int, pad_rows_to: int | None = None):

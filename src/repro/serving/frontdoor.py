@@ -43,6 +43,7 @@ the production-shaped layer above the same ``Engine`` primitives:
 from __future__ import annotations
 
 import asyncio
+import collections
 import dataclasses
 import time
 from dataclasses import dataclass, field
@@ -53,6 +54,7 @@ import numpy as np
 
 from repro.core import cache as cache_lib
 from repro.serving.engine import Engine, _cache_stats
+from repro.serving.prefix_cache import PrefixCache, prefix_fingerprint
 from repro.serving.scheduler import (DECODING, FINISHED, FINISH_REASONS,
                                      PREEMPTED, PREFILLING, QUEUED,
                                      Completion)
@@ -120,6 +122,7 @@ class _Entry:
     ttft_steps: int = 0
     # preemption snapshot: (host rows pytree, last token, next position)
     snapshot: tuple | None = None
+    prefix_hit: str = "miss"          # "full" | "partial" | "miss"
 
 
 class FrontDoorCore:
@@ -136,6 +139,7 @@ class FrontDoorCore:
                  segment_len: int = 8, eos_id: int | None = None,
                  admission: AdmissionConfig | None = None,
                  chaos: ChaosConfig | None = None,
+                 prefix_cache: PrefixCache | None = None,
                  clock: Callable[[], float] = time.perf_counter):
         self.eng = engine
         self.batch_slots = batch_slots
@@ -143,6 +147,8 @@ class FrontDoorCore:
         self.eos_id = eos_id
         self.adm = admission or AdmissionConfig()
         self.chaos = chaos or ChaosConfig()
+        self.prefix_cache = prefix_cache
+        self._fp = self._fingerprint()
         self.clock = clock
 
         B = batch_slots
@@ -194,10 +200,23 @@ class FrontDoorCore:
                    for e in self.queue)
         return need / (self.batch_slots * C)
 
-    def pressure(self) -> float:
+    def _occupancy(self) -> float:
+        """Live-token occupancy of the cache pool (the device-sync half of
+        the pressure signal — compute once per boundary, not per arrival)."""
         stats = _cache_stats(self.state)
-        occ = stats["live_tokens"] / max(stats["capacity_tokens"], 1)
-        return occ + self._queued_demand()
+        return stats["live_tokens"] / max(stats["capacity_tokens"], 1)
+
+    def pressure(self) -> float:
+        return self._occupancy() + self._queued_demand()
+
+    def _fingerprint(self) -> bytes:
+        """Prefix-store compatibility key for the CURRENT engine: policy
+        config (capacity, kind, kv_format, every score/budget knob), cache
+        dtype and arch identity. Recomputed after the int8 migration rung —
+        bf16-era entries then stop hitting instead of inserting the wrong
+        payload layout."""
+        return prefix_fingerprint(self.eng.policy, self.eng.cache_dtype,
+                                  arch=self.eng.model.cfg.name)
 
     def _admission_max_keep(self, p: float) -> int | None:
         if p < self.adm.compress_at:
@@ -219,6 +238,7 @@ class FrontDoorCore:
         self.state = cache_lib.quantize_tree_jit(self.state)
         self.eng = eng8
         self._migrated = True
+        self._fp = self._fingerprint()
         stats = _cache_stats(self.state)
         self._cache_bytes = stats["cache_bytes"]
         self._kv_format = stats["kv_format"]
@@ -282,7 +302,7 @@ class FrontDoorCore:
             ttft_steps=e.ttft_steps,
             kv_format=self._kv_format, cache_bytes=self._cache_bytes,
             priority=e.req.priority, preemptions=e.preemptions,
-            queue_depth=e.queue_depth))
+            queue_depth=e.queue_depth, prefix_hit=e.prefix_hit))
         self._events_done.append(self.completed[-1])
 
     def _release(self, i: int) -> None:
@@ -295,6 +315,14 @@ class FrontDoorCore:
 
     def _ingest(self) -> None:
         staged, self._staged = self._staged, []
+        if not staged:
+            return
+        # One occupancy read (= one _cache_stats device sync) per ingest:
+        # the live state cannot change between staged arrivals, only the
+        # queued-demand half of the pressure signal does — recomputing the
+        # full pressure per arrival was O(arrivals) syncs per boundary
+        # under admission waves.
+        occ = self._occupancy()
         for r in staged:
             self._seq += 1
             e = _Entry(req=r, submit_ts=self.clock(), seq=self._seq,
@@ -310,7 +338,7 @@ class FrontDoorCore:
             if a.max_queue is not None and len(self.queue) >= a.max_queue:
                 self._finish(e, "rejected")
                 continue
-            if (self.pressure() >= a.reject_at
+            if (occ + self._queued_demand() >= a.reject_at
                     and self._slot_of(None) is None):
                 self._finish(e, "rejected")
                 continue
@@ -410,17 +438,108 @@ class FrontDoorCore:
             # have freed slots again — loop and refill them
             free = [i for i in range(B) if self.slots[i] is None]
 
+    def _go_live(self, e: _Entry, i: int, first: int) -> None:
+        """Post-prefill bookkeeping shared by cold, full-hit and partial-hit
+        admission: record the first token, then either finish immediately
+        (EOS-at-first-token / 1-token budget) or bring the slot live."""
+        e.tokens.append(int(first))
+        e.first_token_ts = self.clock()
+        e.ttft_steps = self._decode_steps
+        self._events_tok.append((e.req.uid, [int(first)]))
+        if self.eos_id is not None and int(first) == self.eos_id:
+            self._finish(e, "eos")
+            self._release(i)
+        elif e.req.max_new_tokens <= 1:
+            self._finish(e, "length")
+            self._release(i)
+        else:
+            self.lifecycle[e.req.uid].append(DECODING)
+            self.slots[i] = e
+            self.tok[i] = int(first)
+            self.pos[i] = len(e.req.prompt)
+            self.done[i] = False
+
+    def _capture_prefix(self, e: _Entry, rows, j: int, first: int,
+                        degraded: bool) -> None:
+        """Snapshot row ``j`` of freshly finalized ``rows`` into the prefix
+        store (the PR 5 extract path: a bit-exact host copy). Degraded
+        admissions (the compress rung's ``max_keep``) are not captured —
+        their rows embed pressure-relief state the fingerprint doesn't
+        encode, and a later unpressured hit must not inherit it."""
+        if self.prefix_cache is None or degraded:
+            return
+        self.prefix_cache.insert(
+            self._fp, e.req.prompt,
+            cache_lib.extract_slots(rows, [j]), int(first))
+
+    def _admit_full_hit(self, e: _Entry, i: int, hit) -> None:
+        """Full-prefix hit: the stored snapshot IS the finalize output, so
+        insert it instead of running prefill — bit-identical to
+        recomputation (the differential battery's claim)."""
+        self.state = cache_lib.insert_slots(self.state, [i], hit.entry.rows)
+        e.prefix_hit = "full"
+        self._go_live(e, i, hit.entry.first_token)
+
+    def _admit_partial_hit(self, e: _Entry, i: int, hit,
+                           pressure: float) -> bool:
+        """Partial hit: resume chunked prefill from the restored rows for
+        the suffix only; capture the full-prompt entry so the store learns
+        the longer prefix. Returns False when resume is inadmissible (the
+        caller falls back to a cold prefill)."""
+        suffix = np.asarray(e.req.prompt[hit.prefix_len:],
+                            np.int32)[None, :]
+        max_keep = self._admission_max_keep(pressure)
+        try:
+            logits, rows = self.eng.resume_prefill_rows(
+                hit.entry.rows, {"tokens": suffix},
+                s_prefix=hit.prefix_len,
+                chunk_size=self.adm.prefill_chunk_size, max_keep=max_keep)
+        except ValueError:
+            return False
+        e.prefix_hit = "partial"
+        lg = np.asarray(logits[0])
+        if not np.isfinite(lg).all():
+            self._finish(e, "failed")
+            return True
+        first = int(lg.argmax())
+        self.state = cache_lib.insert_slots(self.state, [i], rows)
+        self._capture_prefix(e, rows, 0, first,
+                             degraded=max_keep is not None)
+        self._go_live(e, i, first)
+        return True
+
     def _admit_group(self, ids: list[int], group: list[_Entry],
                      pressure: float) -> None:
         admit_ts = self.clock()
         for e in group:
             self.lifecycle[e.req.uid].append(PREFILLING)
+            e.admit_ts = admit_ts
+
+        # -- prefix-store probe: full hits insert stored rows, partial hits
+        # resume suffix prefill; only the misses pay a cold prefill --------
+        if self.prefix_cache is not None:
+            cold_ids, cold = [], []
+            for i, e in zip(ids, group):
+                hit = self.prefix_cache.lookup(self._fp, e.req.prompt)
+                if hit is not None and hit.full:
+                    self._admit_full_hit(e, i, hit)
+                elif hit is not None and self._admit_partial_hit(
+                        e, i, hit, pressure):
+                    pass
+                else:
+                    cold_ids.append(i)
+                    cold.append(e)
+            ids, group = cold_ids, cold
+            if not group:
+                return
+
         prompts = np.stack([e.req.prompt for e in group]).astype(np.int32)
+        max_keep = self._admission_max_keep(pressure)
         try:
             logits, rows = self.eng.prefill_rows(
                 {"tokens": jnp.asarray(prompts)},
                 chunk_size=self.adm.prefill_chunk_size,
-                max_keep=self._admission_max_keep(pressure))
+                max_keep=max_keep)
         except ValueError:
             # inadmissible under this policy (e.g. FullKV + over-capacity):
             # reject the group, everyone else keeps decoding
@@ -432,27 +551,13 @@ class FrontDoorCore:
         first = lg.argmax(axis=-1).astype(np.int32)
         ins = [i if ok else -1 for i, ok in zip(ids, finite)]
         self.state = cache_lib.insert_slots(self.state, ins, rows)
-        for e, i, ok, f in zip(group, ids, finite, first):
-            e.admit_ts = admit_ts
+        for j, (e, i, ok, f) in enumerate(zip(group, ids, finite, first)):
             if not ok:         # poisoned prompt: row never went live
                 self._finish(e, "failed")
                 continue
-            e.tokens.append(int(f))
-            e.first_token_ts = self.clock()
-            e.ttft_steps = self._decode_steps
-            self._events_tok.append((e.req.uid, [int(f)]))
-            if self.eos_id is not None and int(f) == self.eos_id:
-                self._finish(e, "eos")
-                self._release(i)
-            elif e.req.max_new_tokens <= 1:
-                self._finish(e, "length")
-                self._release(i)
-            else:
-                self.lifecycle[e.req.uid].append(DECODING)
-                self.slots[i] = e
-                self.tok[i] = int(f)
-                self.pos[i] = len(e.req.prompt)
-                self.done[i] = False
+            self._capture_prefix(e, rows, j, int(f),
+                                 degraded=max_keep is not None)
+            self._go_live(e, i, int(f))
 
     # ---- the boundary + segment ------------------------------------------
 
@@ -557,6 +662,12 @@ class FrontDoorCore:
             "decode_steps": self._decode_steps,
             "kv_format": self._kv_format,
             "peak_pressure": max(self.pressure_trace, default=0.0),
+            "prefix_full_hits": sum(c.prefix_hit == "full"
+                                    for c in self.completed),
+            "prefix_partial_hits": sum(c.prefix_hit == "partial"
+                                       for c in self.completed),
+            "prefix_cache": (self.prefix_cache.stats()
+                             if self.prefix_cache is not None else None),
         }
 
 
@@ -574,11 +685,18 @@ class FrontDoor:
 
     _DONE = object()
 
-    def __init__(self, engine: Engine, batch_slots: int, **core_kw):
+    def __init__(self, engine: Engine, batch_slots: int, *,
+                 completions_keep: int = 1024, **core_kw):
         self.core = FrontDoorCore(engine, batch_slots, **core_kw)
+        # All three maps are bounded for a long-lived server: futures and
+        # stream queues are dropped as their request completes, finished
+        # Completions are kept in a FIFO ring of ``completions_keep`` (the
+        # full uid-ordered history stays on ``core.completed``).
+        self.completions_keep = completions_keep
         self._futures: dict[int, asyncio.Future] = {}
         self._streams: dict[int, asyncio.Queue] = {}
-        self._completions: dict[int, Completion] = {}
+        self._completions: "collections.OrderedDict[int, Completion]" = \
+            collections.OrderedDict()
         self._wake: asyncio.Event | None = None
         self._task: asyncio.Task | None = None
         self._stopping = False
@@ -614,23 +732,37 @@ class FrontDoor:
             if item is self._DONE:
                 break
             yield item
-        self._completions[req.uid] = await fut
+        self._remember(req.uid, await fut)
 
     def completion(self, uid: int) -> Completion | None:
         return self._completions.get(uid)
 
+    def _remember(self, uid: int, comp: Completion) -> None:
+        """Record a completion in the bounded FIFO ring."""
+        self._completions[uid] = comp
+        self._completions.move_to_end(uid)
+        while len(self._completions) > self.completions_keep:
+            self._completions.popitem(last=False)
+
     async def drain(self) -> None:
-        """Wait until every submitted request has completed."""
-        futs = list(self._futures.values())
-        if futs:
+        """Wait until every submitted request has completed — including
+        requests submitted *after* the drain started (the gather re-snaps
+        until no pending future remains)."""
+        while True:
+            futs = [f for f in self._futures.values() if not f.done()]
+            if not futs:
+                return
             await asyncio.gather(*futs, return_exceptions=True)
 
     async def stop(self) -> None:
+        """Stop the pump. Safe before ``__aenter__`` (nothing started:
+        no-op) and re-entrant (a second call finds no task)."""
         self._stopping = True
-        self._wake.set()
-        if self._task is not None:
-            await self._task
-            self._task = None
+        if self._wake is not None:
+            self._wake.set()
+        task, self._task = self._task, None
+        if task is not None:
+            await task
 
     async def _loop(self) -> None:
         loop = asyncio.get_running_loop()
@@ -648,11 +780,13 @@ class FrontDoor:
                     for t in toks:
                         q.put_nowait(t)
             for comp in dones:
-                q = self._streams.get(uid := comp.uid)
+                # prune the per-request maps as the request completes —
+                # a long-lived server must not grow per-uid state forever
+                q = self._streams.pop(uid := comp.uid, None)
                 if q is not None:
                     q.put_nowait(self._DONE)
-                fut = self._futures.get(uid)
+                fut = self._futures.pop(uid, None)
                 if fut is not None and not fut.done():
                     fut.set_result(comp)
-                self._completions[uid] = comp
+                self._remember(uid, comp)
             await asyncio.sleep(0)

@@ -1,0 +1,267 @@
+"""Content-hashed prefix reuse: a host-RAM KV store in front of admission.
+
+Production reasoning traffic is dominated by shared prefixes (system
+prompts, few-shot templates, multi-turn history), yet the scheduler and the
+front door recompute every admission's prefill from token zero. This module
+is the store that stops that:
+
+* **Key** — a rolling blake2b chain over the token stream, sampled at
+  *chunk-plan boundaries* (``engine.chunk_plan`` cumulative sums). Digest at
+  boundary ``b`` is ``H(digest_{b-1} ‖ tokens[prev:b])``, seeded with the
+  caller's **fingerprint** (policy config + ``kv_format`` + cache dtype +
+  arch identity), so entries produced under one policy/format can never hit
+  a lookup under another — incompatible caches differ at the *seed*, not
+  just at a checked field. Because any boundary that is a multiple of the
+  pow2 chunk budget decomposes as ``[p]*k`` for every prompt, a digest at
+  such a boundary is shared by all prompts with the same first ``b`` tokens:
+  partial hits probe multiples of ``p``; the full-length digest also covers
+  the remainder boundaries.
+
+* **Value** — the full per-request slot snapshot captured through the PR 5
+  ``cache.extract_slots`` path right after prefill finalize: KV payload
+  (bf16 or int8 + dequant scales), RASR scores, per-layer budget /
+  ``evict_at`` / sparsity state, plus the greedy first token. A Lethe entry
+  therefore stores *compressed* KV — a hit admits at reduced bytes, and the
+  evolving score state rides along instead of being rebuilt on hit
+  (LazyEviction's lagged-observation argument).
+
+* **Tier** — host RAM with a bytes cap. Eviction is TTL-then-LRU: expiry
+  first (TTL grows with the entry's hit count — the LMCache
+  ``compute_ttl`` heuristic: ``base_ttl * (1 + α·ln(1 + hits))`` clamped
+  to ``[min_ttl, max_ttl]`` — so hot prefixes outlive cold ones), then
+  least-recently-used until the new entry fits.
+
+On a **full** hit the stored rows are ``insert_slots``-ed instead of
+running prefill — bit-identical to recomputation (the snapshot round-trip
+is bit-exact and the stored rows *are* the finalize output). On a
+**partial** hit, chunked prefill resumes from the restored state for the
+suffix only (``Engine.start_prefill_resumed``). DESIGN.md §Prefix-reuse
+covers the compressed-hit trade; ``benchmarks/prefix_reuse.py`` measures
+it under Zipfian prefix popularity.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+
+def prefix_fingerprint(policy, cache_dtype=None, arch: str = "") -> bytes:
+    """Compatibility fingerprint for stored entries: every knob that changes
+    the *bytes* a prefill produces. Two engines whose fingerprints differ
+    must never exchange entries — the fingerprint seeds the hash chain, so a
+    mismatch produces disjoint key spaces rather than a checked failure."""
+    blob = "|".join([repr(sorted(vars(policy).items())),
+                     str(cache_dtype), str(arch)])
+    return hashlib.blake2b(blob.encode(), digest_size=16).digest()
+
+
+def chain_digests(fingerprint: bytes, tokens: np.ndarray,
+                  boundaries: tuple[int, ...]) -> list[tuple[int, bytes]]:
+    """Rolling hash chain over ``tokens`` sampled at ``boundaries``
+    (ascending cumulative chunk-plan sums). Returns [(boundary, digest)].
+    The chain make digests prefix-consistent: two prompts sharing their
+    first ``b`` tokens (and the decomposition up to ``b``) share the digest
+    at ``b``."""
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int32).reshape(-1))
+    out = []
+    digest = fingerprint
+    prev = 0
+    for b in boundaries:
+        h = hashlib.blake2b(digest, digest_size=16)
+        h.update(toks[prev:b].tobytes())
+        digest = h.digest()
+        out.append((b, digest))
+        prev = b
+    return out
+
+
+def _rows_nbytes(rows) -> int:
+    """Physical host bytes of a snapshot pytree (numpy leaves)."""
+    import jax
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(rows))
+
+
+@dataclass
+class PrefixCacheConfig:
+    max_bytes: int = 1 << 30        # host-tier cap over all entries
+    block_size: int = 32            # hash-boundary granularity: the prefill
+    #                                 chunk budget (boundaries = cumulative
+    #                                 chunk_plan sums -> partial hits land
+    #                                 on multiples of the pow2 chunk)
+    base_ttl_s: float = 600.0       # TTL of a never-hit entry
+    min_ttl_s: float = 30.0
+    max_ttl_s: float = 6 * 3600.0
+    ttl_alpha: float = 0.5          # hit-count TTL boost (LMCache heuristic)
+    min_tokens: int = 2             # don't store trivial prompts
+    capture: bool = True            # record new entries on miss
+
+
+@dataclass
+class PrefixEntry:
+    """One stored prefix: the full slot snapshot plus reuse bookkeeping."""
+    digest: bytes
+    prefix_len: int
+    rows: object                    # host numpy pytree, batch axis 1
+    first_token: int                # greedy token the prefill emitted
+    nbytes: int
+    created: float
+    last_access: float
+    access_count: int = 0
+    ttl_s: float = 0.0
+
+    def expired(self, now: float) -> bool:
+        return now - self.last_access > self.ttl_s
+
+
+@dataclass
+class PrefixHit:
+    entry: PrefixEntry
+    prefix_len: int                 # matched tokens (== entry.prefix_len)
+    full: bool                      # matched the whole prompt
+
+
+class PrefixCache:
+    """Bytes-capped host-RAM prefix store with TTL/LRU eviction.
+
+    Pure host-side bookkeeping — no jax in the hot path, injectable clock
+    (tests drive expiry deterministically). One store may be shared by many
+    engines; the per-call ``fingerprint`` keeps their entries disjoint.
+    """
+
+    def __init__(self, cfg: PrefixCacheConfig | None = None, *,
+                 clock: Callable[[], float] = time.monotonic):
+        self.cfg = cfg or PrefixCacheConfig()
+        self.clock = clock
+        self._entries: dict[bytes, PrefixEntry] = {}
+        self.bytes_used = 0
+        # counters (cumulative over the store's lifetime)
+        self.n_lookups = 0
+        self.n_full_hits = 0
+        self.n_partial_hits = 0
+        self.n_misses = 0
+        self.n_inserts = 0
+        self.n_evictions_ttl = 0
+        self.n_evictions_lru = 0
+        self.n_too_large = 0
+
+    # ---- hashing ----------------------------------------------------------
+
+    def _boundaries(self, n: int) -> tuple[int, ...]:
+        from repro.serving.engine import chunk_plan
+        return tuple(int(b) for b in
+                     np.cumsum(chunk_plan(n, self.cfg.block_size)))
+
+    def compute_ttl(self, entry: PrefixEntry) -> float:
+        """LMCache-style hit-rate-driven TTL: hot prefixes live longer."""
+        c = self.cfg
+        ttl = c.base_ttl_s * (1.0 + c.ttl_alpha
+                              * np.log1p(entry.access_count))
+        return float(np.clip(ttl, c.min_ttl_s, c.max_ttl_s))
+
+    # ---- store ops --------------------------------------------------------
+
+    def lookup(self, fingerprint: bytes, tokens: np.ndarray
+               ) -> PrefixHit | None:
+        """Longest-prefix probe of the chunk-plan boundaries (full length
+        first). A hit refreshes recency and extends the entry's TTL."""
+        self.n_lookups += 1
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        n = len(toks)
+        if n == 0:
+            self.n_misses += 1
+            return None
+        now = self.clock()
+        chain = chain_digests(fingerprint, toks, self._boundaries(n))
+        for b, digest in reversed(chain):
+            e = self._entries.get(digest)
+            if e is None:
+                continue
+            if e.expired(now):
+                self._evict(digest, ttl=True)
+                continue
+            e.access_count += 1
+            e.last_access = now
+            e.ttl_s = self.compute_ttl(e)
+            full = b == n
+            if full:
+                self.n_full_hits += 1
+            else:
+                self.n_partial_hits += 1
+            return PrefixHit(entry=e, prefix_len=b, full=full)
+        self.n_misses += 1
+        return None
+
+    def insert(self, fingerprint: bytes, tokens: np.ndarray, rows,
+               first_token: int) -> bool:
+        """Store the snapshot of a fully prefilled prompt, evicting
+        (expired first, then LRU) until it fits. Returns False when the
+        prompt is trivial, already stored, or larger than the whole tier."""
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        n = len(toks)
+        if not self.cfg.capture or n < self.cfg.min_tokens:
+            return False
+        digest = chain_digests(fingerprint, toks, self._boundaries(n))[-1][1]
+        if digest in self._entries:
+            return False
+        nbytes = _rows_nbytes(rows)
+        if nbytes > self.cfg.max_bytes:
+            self.n_too_large += 1
+            return False
+        self.sweep()
+        while self.bytes_used + nbytes > self.cfg.max_bytes:
+            lru = min(self._entries.values(), key=lambda e: e.last_access)
+            self._evict(lru.digest, ttl=False)
+        now = self.clock()
+        e = PrefixEntry(digest=digest, prefix_len=n, rows=rows,
+                        first_token=int(first_token), nbytes=nbytes,
+                        created=now, last_access=now)
+        e.ttl_s = self.compute_ttl(e)
+        self._entries[digest] = e
+        self.bytes_used += nbytes
+        self.n_inserts += 1
+        return True
+
+    def _evict(self, digest: bytes, *, ttl: bool) -> None:
+        e = self._entries.pop(digest)
+        self.bytes_used -= e.nbytes
+        if ttl:
+            self.n_evictions_ttl += 1
+        else:
+            self.n_evictions_lru += 1
+
+    def sweep(self) -> int:
+        """Drop every TTL-expired entry; returns how many were dropped."""
+        now = self.clock()
+        dead = [d for d, e in self._entries.items() if e.expired(now)]
+        for d in dead:
+            self._evict(d, ttl=True)
+        return len(dead)
+
+    # ---- telemetry --------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def hit_rate(self) -> float:
+        hits = self.n_full_hits + self.n_partial_hits
+        return hits / max(self.n_lookups, 1)
+
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._entries),
+            "bytes_used": self.bytes_used,
+            "max_bytes": self.cfg.max_bytes,
+            "lookups": self.n_lookups,
+            "full_hits": self.n_full_hits,
+            "partial_hits": self.n_partial_hits,
+            "misses": self.n_misses,
+            "hit_rate": self.hit_rate(),
+            "inserts": self.n_inserts,
+            "evictions_ttl": self.n_evictions_ttl,
+            "evictions_lru": self.n_evictions_lru,
+            "too_large": self.n_too_large,
+        }

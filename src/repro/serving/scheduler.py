@@ -69,7 +69,10 @@ class Completion:
     uid: int
     tokens: np.ndarray          # generated tokens (incl. EOS if emitted)
     latency_steps: int          # == len(tokens)
-    finish_reason: str = "length"       # "eos" | "length" | "rejected"
+    finish_reason: str = "length"       # one of FINISH_REASONS: "eos" |
+    #                             "length" | "timeout" | "shed" |
+    #                             "rejected" | "failed" (see the block
+    #                             comment above for what each one means)
     queue_wait_s: float = 0.0   # submit -> prefill start
     ttft_s: float = 0.0         # submit -> first token (incl. queue wait)
     decode_steps: int = 0       # decode steps after the prefill token
@@ -82,6 +85,10 @@ class Completion:
     priority: int = 0           # request priority (higher = more urgent)
     preemptions: int = 0        # times this request was preempted to host
     queue_depth: int = 0        # queue depth observed at submission
+    prefix_hit: str = "miss"    # prefix-store outcome at admission:
+    #                             "full" (stored rows inserted, no prefill),
+    #                             "partial" (suffix-only resumed prefill),
+    #                             or "miss" (cold prefill / store disabled)
 
 
 @dataclasses.dataclass
@@ -91,6 +98,7 @@ class _Slot:
     admit_ts: float
     ttft: float = 0.0
     ttft_steps: int = 0
+    prefix_hit: str = "miss"
 
 
 @dataclasses.dataclass
@@ -100,14 +108,25 @@ class _PrefillGroup:
     job: object                     # engine.PrefillJob
     assignments: list               # [(slot_id, Request)]
     admit_ts: float
+    prefix_hit: str = "miss"        # "partial" for a resumed suffix job
 
 
 class Scheduler:
     def __init__(self, engine: Engine, batch_slots: int, pad_token: int = 0,
                  segment_len: int = 32, eos_id: int | None = None,
                  track_occupancy: bool = False,
-                 prefill_chunk_size: int | None = None):
+                 prefill_chunk_size: int | None = None,
+                 prefix_cache=None):
         self.engine = engine
+        # Content-hashed prefix store (serving/prefix_cache.PrefixCache):
+        # admission probes it before prefilling — full hits insert stored
+        # rows, partial hits resume suffix-only prefill, misses prefill
+        # cold and are captured. None = recompute every admission.
+        self.prefix_cache = prefix_cache
+        if prefix_cache is not None:
+            from repro.serving.prefix_cache import prefix_fingerprint
+            self._fp = prefix_fingerprint(engine.policy, engine.cache_dtype,
+                                          arch=engine.model.cfg.name)
         self.batch_slots = batch_slots
         self.pad_token = pad_token
         self.segment_len = segment_len
@@ -185,6 +204,12 @@ class Scheduler:
             "max_queue_depth": self.max_queue_depth,
             "decode_steps": self._decode_steps,
             "kv_format": self._kv_format,
+            "prefix_full_hits": sum(c.prefix_hit == "full"
+                                    for c in self.completed),
+            "prefix_partial_hits": sum(c.prefix_hit == "partial"
+                                       for c in self.completed),
+            "prefix_cache": (self.prefix_cache.stats()
+                             if self.prefix_cache is not None else None),
         }
 
     # ---- continuous batching ---------------------------------------------
@@ -204,14 +229,16 @@ class Scheduler:
             tokens_per_second=len(toks) / resid,
             ttft_steps=slot.ttft_steps,
             kv_format=self._kv_format, cache_bytes=self._cache_bytes,
-            queue_depth=self._submit_depth.get(r.uid, 0)))
+            queue_depth=self._submit_depth.get(r.uid, 0),
+            prefix_hit=slot.prefix_hit))
 
     def _activate(self, slots, tok, pos, done, i: int, r: Request, first: int,
-                  admit_ts: float) -> None:
+                  admit_ts: float, prefix_hit: str = "miss") -> None:
         """Bring one freshly admitted request live in slot ``i`` (or finish
         it immediately: EOS on the very first token / a 1-token budget)."""
         slot = _Slot(req=r, tokens=[int(first)], admit_ts=admit_ts,
-                     ttft=time.perf_counter(), ttft_steps=self._decode_steps)
+                     ttft=time.perf_counter(), ttft_steps=self._decode_steps,
+                     prefix_hit=prefix_hit)
         if self.eos_id is not None and first == self.eos_id:
             self._finish(slot, "eos")
         elif r.max_new_tokens <= 1:
@@ -223,11 +250,58 @@ class Scheduler:
             pos[i] = len(r.prompt)
             done[i] = False
 
-    def _open_prefill_groups(self, slots, reserved: set) -> list:
+    # ---- prefix reuse (serving/prefix_cache.py) --------------------------
+
+    def _capture_prefix(self, r: Request, rows, j: int, first: int) -> None:
+        """Snapshot row ``j`` of freshly finalized ``rows`` into the prefix
+        store (the extract_slots host copy is bit-exact, so a later full
+        hit re-admits the same bytes a recomputation would produce)."""
+        if self.prefix_cache is None:
+            return
+        from repro.core import cache as cache_lib
+        self.prefix_cache.insert(self._fp, r.prompt,
+                                 cache_lib.extract_slots(rows, [j]),
+                                 int(first))
+
+    def _try_prefix_admit(self, state, slots, tok, pos, done, i: int,
+                          r: Request, admit_ts: float):
+        """Probe the prefix store for one pending request. Returns
+        (state', True) when the request was admitted from the store (full
+        hit: stored rows inserted; partial hit: suffix-only resumed
+        prefill); (state, False) sends it down the cold path."""
+        from repro.core import cache as cache_lib
+        hit = self.prefix_cache.lookup(self._fp, r.prompt)
+        if hit is None:
+            return state, False
+        if hit.full:
+            state = cache_lib.insert_slots(state, [i], hit.entry.rows)
+            self._activate(slots, tok, pos, done, i, r,
+                           hit.entry.first_token, admit_ts,
+                           prefix_hit="full")
+            return state, True
+        suffix = np.asarray(r.prompt[hit.prefix_len:], np.int32)[None, :]
+        try:
+            logits, rows = self.engine.resume_prefill_rows(
+                hit.entry.rows, {"tokens": suffix},
+                s_prefix=hit.prefix_len,
+                chunk_size=self.prefill_chunk_size or 32)
+        except ValueError:
+            return state, False          # inadmissible resume: go cold
+        first = int(np.asarray(logits).argmax(axis=-1)[0])
+        state = cache_lib.insert_slots(state, [i], rows)
+        self._capture_prefix(r, rows, 0, first)
+        self._activate(slots, tok, pos, done, i, r, first, admit_ts,
+                       prefix_hit="partial")
+        return state, True
+
+    def _open_prefill_groups(self, state, slots, tok, pos, done,
+                             reserved: set) -> tuple:
         """Reserve free slots for queued requests and open chunked-prefill
         jobs — one job per (FIFO-popped) equal-length group, padded to the
         full slot width so a refill wave of any group size reuses one
-        program per chunk shape."""
+        program per chunk shape. With a prefix store, full hits admit
+        immediately (no job) and partial hits open single-row resumed jobs
+        that stream only the suffix. Returns (state', groups)."""
         free = [i for i in range(self.batch_slots)
                 if slots[i] is None and i not in reserved]
         pending = []
@@ -235,10 +309,35 @@ class Scheduler:
             pending.append((free.pop(0), self.queue.popleft()))
         groups = []
         by_len: dict[int, list] = {}
+        admit_ts = time.perf_counter()
         for i, r in pending:
             self.lifecycle[r.uid].append(PREFILLING)
+            if self.prefix_cache is not None:
+                hit = self.prefix_cache.lookup(self._fp, r.prompt)
+                if hit is not None and hit.full:
+                    from repro.core import cache as cache_lib
+                    state = cache_lib.insert_slots(state, [i],
+                                                   hit.entry.rows)
+                    self._activate(slots, tok, pos, done, i, r,
+                                   hit.entry.first_token, admit_ts,
+                                   prefix_hit="full")
+                    continue
+                if hit is not None:
+                    suffix = np.asarray(r.prompt[hit.prefix_len:],
+                                        np.int32)[None, :]
+                    try:
+                        job = self.engine.start_prefill_resumed(
+                            hit.entry.rows, {"tokens": suffix},
+                            s_prefix=hit.prefix_len,
+                            chunk_size=self.prefill_chunk_size)
+                    except ValueError:
+                        pass             # inadmissible resume: go cold
+                    else:
+                        groups.append(_PrefillGroup(
+                            job=job, assignments=[(i, r)],
+                            admit_ts=admit_ts, prefix_hit="partial"))
+                        continue
             by_len.setdefault(len(r.prompt), []).append((i, r))
-        admit_ts = time.perf_counter()
         for _, group in sorted(by_len.items()):
             prompts = np.stack([r.prompt for _, r in group]).astype(np.int32)
             try:
@@ -264,7 +363,7 @@ class Scheduler:
                 continue
             groups.append(_PrefillGroup(job=job, assignments=group,
                                         admit_ts=admit_ts))
-        return groups
+        return state, groups
 
     def run(self) -> list[Completion]:
         """Drain the queue with continuous batching; returns completions
@@ -308,13 +407,33 @@ class Scheduler:
                     by_len: dict[int, list] = {}
                     for i, r in pending:
                         self.lifecycle[r.uid].append(PREFILLING)
+                        if self.prefix_cache is not None:
+                            state, hit = self._try_prefix_admit(
+                                state, slots, tok, pos, done, i, r, admit_ts)
+                            if hit:
+                                continue
                         by_len.setdefault(len(r.prompt), []).append((i, r))
                     for _, group in sorted(by_len.items()):
                         ids = [i for i, _ in group]
                         prompts = np.stack([r.prompt for _, r in group]
                                            ).astype(np.int32)
-                        state, first = eng.admit_slots(
-                            state, ids, {"tokens": jnp.asarray(prompts)})
+                        if self.prefix_cache is None:
+                            state, first = eng.admit_slots(
+                                state, ids, {"tokens": jnp.asarray(prompts)})
+                        else:
+                            # prefill-then-insert (bit-identical to
+                            # admit_slots: same prefill program + donated
+                            # masked insert) so the finalized rows are still
+                            # in hand to snapshot into the store
+                            from repro.core import cache as cache_lib
+                            logits, rows = eng.prefill_rows(
+                                {"tokens": jnp.asarray(prompts)})
+                            state = cache_lib.insert_slots(state, ids, rows)
+                            first = jnp.argmax(logits, axis=-1)
+                            for j, (_, r) in enumerate(group):
+                                self._capture_prefix(
+                                    r, rows, j,
+                                    int(np.asarray(first)[j]))
                         first = np.asarray(first)
                         for (i, r), f in zip(group, first):
                             self._activate(slots, tok, pos, done, i, r,
@@ -324,7 +443,9 @@ class Scheduler:
                 # prefill work under the stall bound (one chunk per segment
                 # while anything decodes; run-to-admission when idle).
                 reserved = {i for g in jobs for i, _ in g.assignments}
-                jobs.extend(self._open_prefill_groups(slots, reserved))
+                state, new_groups = self._open_prefill_groups(
+                    state, slots, tok, pos, done, reserved)
+                jobs.extend(new_groups)
                 live = sum(s is not None for s in slots)
                 chunks_this_boundary = 0
                 while jobs:
@@ -336,12 +457,21 @@ class Scheduler:
                         chunks_this_boundary += 1
                     if head.job.finished:
                         ids = [i for i, _ in head.assignments]
-                        state, first = eng.finish_prefill_chunked(
-                            state, head.job, ids)
+                        if self.prefix_cache is not None:
+                            state, first, rows = eng.finish_prefill_chunked(
+                                state, head.job, ids, return_rows=True)
+                            for j, (_, r) in enumerate(head.assignments):
+                                self._capture_prefix(
+                                    r, rows, j,
+                                    int(np.asarray(first)[j]))
+                        else:
+                            state, first = eng.finish_prefill_chunked(
+                                state, head.job, ids)
                         for (i, r), f in zip(head.assignments,
                                              np.asarray(first)):
                             self._activate(slots, tok, pos, done, i, r,
-                                           int(f), head.admit_ts)
+                                           int(f), head.admit_ts,
+                                           prefix_hit=head.prefix_hit)
                         jobs.pop(0)
                         if live == 0:
                             # rows just went live — stop burning boundaries

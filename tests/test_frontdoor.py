@@ -401,3 +401,117 @@ def test_async_submit_and_stream(setup):
     np.testing.assert_array_equal(np.asarray(c0.tokens), solo[0])
     np.testing.assert_array_equal(np.asarray(c1.tokens), solo[1])
     assert c0.finish_reason == "length" and c1.finish_reason == "length"
+
+
+# --------------------------------------------------------------------------
+# Shell lifecycle regressions (ISSUE 7 satellites)
+# --------------------------------------------------------------------------
+
+def test_shell_maps_bounded_under_many_requests(setup):
+    """A long-lived server must not grow per-uid state forever: futures and
+    stream queues are dropped as their request completes, and finished
+    Completions are kept in a FIFO ring of ``completions_keep``."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2)
+    eng = Engine(model, params, pol)
+    reqs = _reqs(cfg, [(6, 2)] * 12, seed=17)
+
+    async def go():
+        async with FrontDoor(eng, batch_slots=2, segment_len=4,
+                             completions_keep=4,
+                             admission=_transparent()) as fd:
+            comps = []
+            for r in reqs[:6]:
+                comps.append(await fd.submit(r))
+            streamed = [t async for t in fd.stream(reqs[6])]
+            for r in reqs[7:]:
+                comps.append(await fd.submit(r))
+            await fd.drain()
+            return fd, comps, streamed
+
+    fd, comps, streamed = asyncio.run(go())
+    assert not fd._futures and not fd._streams
+    assert len(fd._completions) == 4                 # the FIFO ring cap
+    # the ring keeps the most recent completions; older ones fell out but
+    # the full history stays on the core
+    assert fd.completion(reqs[0].uid) is None
+    assert fd.completion(reqs[-1].uid) is not None
+    assert len(fd.core.completed) == 12
+    assert len(streamed) == 2
+
+
+def test_shell_stop_safe_before_start_and_reentrant(setup):
+    """stop() before __aenter__ must not raise (the wake event does not
+    exist yet), and a second stop() is a no-op."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24)
+    eng = Engine(model, params, pol)
+
+    async def never_started():
+        fd = FrontDoor(eng, batch_slots=1, admission=_transparent())
+        await fd.stop()                              # no __aenter__ yet
+        await fd.stop()                              # re-entrant
+
+    asyncio.run(never_started())
+
+    async def double_stop():
+        fd = FrontDoor(eng, batch_slots=1, segment_len=4,
+                       admission=_transparent())
+        async with fd:
+            await fd.submit(_reqs(cfg, [(6, 2)], seed=18)[0])
+            await fd.stop()
+            await fd.stop()
+        await fd.stop()                              # after __aexit__ too
+
+    asyncio.run(double_stop())
+
+
+def test_shell_drain_covers_late_submissions(setup):
+    """drain() must wait for requests submitted AFTER it started — the
+    gather re-snapshots until no pending future remains."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2)
+    eng = Engine(model, params, pol)
+    r0, r1 = _reqs(cfg, [(8, 6), (6, 3)], seed=19)
+
+    async def go():
+        async with FrontDoor(eng, batch_slots=1, segment_len=4,
+                             admission=_transparent()) as fd:
+            fut0 = asyncio.ensure_future(fd.submit(r0))
+
+            async def late():
+                await asyncio.sleep(0.01)
+                return await fd.submit(r1)
+
+            fut1 = asyncio.ensure_future(late())
+            await asyncio.sleep(0)                   # let fut0 enqueue
+            await fd.drain()
+            assert fut0.done()
+            assert fut1.done()                       # the late one too
+            return await fut0, await fut1
+
+    c0, c1 = asyncio.run(go())
+    assert c0.finish_reason == "length" and c1.finish_reason == "length"
+
+
+def test_ingest_one_cache_stats_sync_per_wave(setup, monkeypatch):
+    """Staging N arrivals must cost ONE occupancy read (device sync), not
+    N: the live state cannot change between staged arrivals."""
+    import repro.serving.frontdoor as fdmod
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2)
+    eng = Engine(model, params, pol)
+    core = FrontDoorCore(eng, batch_slots=2, segment_len=4,
+                         admission=_transparent())
+    real = fdmod._cache_stats
+    calls = []
+    monkeypatch.setattr(fdmod, "_cache_stats",
+                        lambda state: calls.append(1) or real(state))
+
+    core.submit(_reqs(cfg, [(6, 2)] * 8, seed=20))
+    calls.clear()
+    core._ingest()
+    assert sum(calls) == 1
+    assert len(core.queue) == 8
+    core._ingest()                                   # nothing staged: free
+    assert sum(calls) == 1

@@ -1,0 +1,394 @@
+"""Prefix-reuse battery (ISSUE 7).
+
+Covers the guarantees DESIGN.md §Prefix-reuse promises:
+  * differential — a full-prefix hit re-admits rows BIT-identical to
+    recomputing the prefill, for lethe/h2o/streaming, bf16 and int8
+    (the snapshot round-trip and the insert are both exact);
+  * partial hits — suffix-only resumed prefill equals the whole-prompt
+    prefill exactly on tokens and discrete cache state (zero q_tail
+    refilled once the suffix covers the observation window; float
+    payloads to split-extent tolerance), token-exactly through the
+    scheduler in the non-compressed regime for pruning policies;
+  * the host tier — TTL-then-LRU eviction under a bytes cap holds its
+    invariants under fuzz (hypothesis + seeded fallback);
+  * isolation — entries stored under one fingerprint (policy / kv_format /
+    capacity / dtype / arch) can never hit a lookup under another;
+  * the hash chain — digests are prefix-consistent at pow2-aligned
+    boundaries and diverge on any token difference.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import cache as cache_lib
+from repro.core.policy import make_policy
+from repro.models.api import build_model
+from repro.serving.engine import Engine
+from repro.serving.prefix_cache import (PrefixCache, PrefixCacheConfig,
+                                        chain_digests, prefix_fingerprint)
+from repro.serving.scheduler import Request, Scheduler
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("qwen2.5-32b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompt(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+
+
+def _flat_equal(a, b, msg=""):
+    """Bitwise pytree equality, leaf by leaf (path-labelled)."""
+    fa, ta = jax.tree_util.tree_flatten_with_path(a)
+    fb, tb = jax.tree_util.tree_flatten_with_path(b)
+    assert ta == tb
+    for (pa, la), (_, lb) in zip(fa, fb):
+        la, lb = np.asarray(la), np.asarray(lb)
+        assert la.dtype == lb.dtype, (msg, pa)
+        np.testing.assert_array_equal(la, lb, err_msg=f"{msg} {pa}")
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# --------------------------------------------------------------------------
+# Differential: full-prefix hits are bit-identical to recomputation
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["lethe", "h2o", "streaming"])
+@pytest.mark.parametrize("kv_format", ["bf16", "int8"])
+def test_full_hit_bit_identical_to_recompute(setup, kind, kv_format):
+    """Admitting from the store == recomputing the prefill, down to the
+    last bit of every cache leaf (K/V payloads, scales, RASR scores,
+    budgets), for every pruning policy in both storage formats."""
+    cfg, model, params = setup
+    pol = make_policy(kind, capacity=24, sink_len=2, sparse_ratio=4.0,
+                      kv_format=kv_format)
+    eng = Engine(model, params, pol)
+    batch = {"tokens": jnp.asarray(_prompt(cfg, 16, seed=3))[None, :]}
+
+    logits, rows = eng.prefill_rows(batch)
+    snap = cache_lib.extract_slots(rows, [0])
+
+    # two identical fresh decode states; admit cold into one, from the
+    # snapshot into the other — the states must be indistinguishable
+    cold = cache_lib.insert_slots(eng.new_decode_state(2), [1], rows)
+    logits2, rows2 = eng.prefill_rows(batch)   # the recomputation
+    hit = cache_lib.insert_slots(eng.new_decode_state(2), [1], snap)
+    _flat_equal(cold, hit, msg=f"{kind}/{kv_format}")
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits2))
+
+    # and the decode trajectories stay identical
+    first = int(np.asarray(jnp.argmax(logits, -1))[0])
+    tokc = np.array([0, first], np.int32)
+    pos = np.array([0, 16], np.int32)
+    done = np.array([True, False])
+    cold, segc, *_ = eng.decode_segment(cold, tokc, pos, done, 4)
+    hit, segh, *_ = eng.decode_segment(hit, tokc, pos, done, 4)
+    np.testing.assert_array_equal(np.asarray(segc)[1], np.asarray(segh)[1])
+
+
+@pytest.mark.parametrize("kind", ["lethe", "streaming"])
+def test_scheduler_full_hit_tokens_equal(setup, kind):
+    """Through the scheduler: the second submission of an identical prompt
+    is served from the store ("full") and generates the same tokens."""
+    cfg, model, params = setup
+    pol = make_policy(kind, capacity=24, sink_len=2, sparse_ratio=4.0)
+    eng = Engine(model, params, pol)
+    prompt = _prompt(cfg, 12, seed=5)
+    reqs = [Request(uid=0, prompt=prompt.copy(), max_new_tokens=6),
+            Request(uid=1, prompt=prompt.copy(), max_new_tokens=6)]
+    pc = PrefixCache(PrefixCacheConfig(block_size=8))
+    sched = Scheduler(eng, batch_slots=1, segment_len=4, prefix_cache=pc)
+    sched.submit(reqs)
+    done = sched.run()
+    assert [c.prefix_hit for c in done] == ["miss", "full"]
+    np.testing.assert_array_equal(done[0].tokens, done[1].tokens)
+    s = sched.run_summary()
+    assert s["prefix_full_hits"] == 1 and s["prefix_partial_hits"] == 0
+    assert s["prefix_cache"]["inserts"] == 1
+
+
+# --------------------------------------------------------------------------
+# Partial hits: suffix-only resumed prefill
+# --------------------------------------------------------------------------
+
+def test_partial_hit_fullkv_matches_whole(setup):
+    """FullKV partial hit == whole-prompt prefill: discrete cache state
+    (positions, occupancy, budgets, eviction thresholds) and the greedy
+    token exactly; float payloads to tight tolerance (the prefix rows were
+    produced under a different pow2 length bucket, so XLA's reduction
+    trees — and therefore the last mantissa bits — differ, exactly as the
+    chunked-prefill battery documents for split-dependent extents). Once
+    the suffix covers the observation window, the zero-seeded q_tail has
+    fully refilled and resume carries no *algorithmic* approximation."""
+    cfg, model, params = setup
+    pol = make_policy("fullkv", capacity=64, obs_window=16)
+    eng = Engine(model, params, pol)
+    prefix = _prompt(cfg, 32, seed=7)
+    suffix = _prompt(cfg, 16, seed=8)          # == obs_window
+    whole = np.concatenate([prefix, suffix])
+
+    _, prows = eng.prefill_rows({"tokens": jnp.asarray(prefix)[None, :]})
+    snap = cache_lib.extract_slots(prows, [0])
+    rlog, rrows = eng.resume_prefill_rows(
+        snap, {"tokens": jnp.asarray(suffix)[None, :]},
+        s_prefix=32, chunk_size=16)
+    clog, crows = eng.prefill_rows({"tokens": jnp.asarray(whole)[None, :]},
+                                   chunk_size=16)
+    for name in ("pos", "length", "budget", "evict_at"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(crows, name)),
+            np.asarray(getattr(rrows, name)), err_msg=name)
+    for name in ("k", "v"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(crows, name), np.float32),
+            np.asarray(getattr(rrows, name), np.float32),
+            rtol=2e-5, atol=2e-5, err_msg=name)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(clog, -1)),
+                                  np.asarray(jnp.argmax(rlog, -1)))
+    np.testing.assert_allclose(np.asarray(clog), np.asarray(rlog),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("chunked", [False, True])
+def test_scheduler_partial_hit_matches_solo(setup, chunked):
+    """Pruned-policy partial hit in the non-compressed regime (restored
+    occupancy + suffix fits capacity): the resumed request's tokens equal
+    a solo cold run's, in both admission modes."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=64, obs_window=16, sink_len=2)
+    eng = Engine(model, params, pol)
+    base = _prompt(cfg, 48, seed=11)
+    ext = np.concatenate([base, _prompt(cfg, 16, seed=12)])
+
+    solo = Scheduler(eng, batch_slots=1, segment_len=4)
+    solo.submit([Request(uid=9, prompt=ext.copy(), max_new_tokens=5)])
+    ref = solo.run()[0]
+
+    pc = PrefixCache(PrefixCacheConfig(block_size=16))
+    sched = Scheduler(eng, batch_slots=1, segment_len=4, prefix_cache=pc,
+                      prefill_chunk_size=16 if chunked else None)
+    sched.submit([Request(uid=0, prompt=base.copy(), max_new_tokens=5),
+                  Request(uid=1, prompt=ext.copy(), max_new_tokens=5)])
+    done = sched.run()
+    assert done[1].prefix_hit == "partial"
+    np.testing.assert_array_equal(done[1].tokens, ref.tokens)
+    assert sched.run_summary()["prefix_partial_hits"] == 1
+
+
+def test_partial_hit_nonpruning_overflow_falls_back_cold(setup):
+    """A resume that would overflow capacity under a non-pruning policy
+    raises the typed admission error; the scheduler falls back to a cold
+    prefill (which then rejects or streams per the normal rules)."""
+    cfg, model, params = setup
+    pol = make_policy("fullkv", capacity=48, obs_window=16)
+    eng = Engine(model, params, pol)
+    base = _prompt(cfg, 32, seed=13)
+
+    _, prows = eng.prefill_rows({"tokens": jnp.asarray(base)[None, :]})
+    snap = cache_lib.extract_slots(prows, [0])
+    with pytest.raises(ValueError, match="cannot evict"):
+        eng.resume_prefill_rows(
+            snap, {"tokens": jnp.asarray(_prompt(cfg, 32, seed=14))[None, :]},
+            s_prefix=32, chunk_size=16)
+
+
+# --------------------------------------------------------------------------
+# Fingerprint isolation: incompatible entries never hit
+# --------------------------------------------------------------------------
+
+def test_fingerprint_mismatch_never_hits(setup):
+    """Entries stored under one engine identity are invisible to every
+    other: policy kind, capacity, kv_format, cache dtype and arch all
+    fold into the chain seed."""
+    cfg, _, _ = setup
+    toks = _prompt(cfg, 32, seed=21)
+    rows = {"k": np.zeros((2, 1, 4), np.int8)}
+    base_pol = make_policy("lethe", capacity=64)
+    fp = prefix_fingerprint(base_pol, jnp.bfloat16, arch="a")
+
+    pc = PrefixCache(PrefixCacheConfig(block_size=16))
+    assert pc.insert(fp, toks, rows, first_token=1)
+    assert pc.lookup(fp, toks) is not None
+
+    others = [
+        prefix_fingerprint(make_policy("h2o", capacity=64),
+                           jnp.bfloat16, arch="a"),
+        prefix_fingerprint(make_policy("lethe", capacity=32),
+                           jnp.bfloat16, arch="a"),
+        prefix_fingerprint(make_policy("lethe", capacity=64,
+                                       kv_format="int8"),
+                           jnp.bfloat16, arch="a"),
+        prefix_fingerprint(base_pol, jnp.float32, arch="a"),
+        prefix_fingerprint(base_pol, jnp.bfloat16, arch="b"),
+    ]
+    assert len({fp, *others}) == len(others) + 1    # all distinct
+    for other in others:
+        assert pc.lookup(other, toks) is None
+
+
+# --------------------------------------------------------------------------
+# Hash chain: prefix consistency at pow2-aligned boundaries
+# --------------------------------------------------------------------------
+
+def test_chain_digests_prefix_consistent():
+    """Prompts sharing their first b tokens share the digest at every
+    pow2-aligned boundary <= b; one differing token diverges everything
+    at and after its boundary."""
+    fp = b"\x01" * 16
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 1000, size=96).astype(np.int32)
+    b = a.copy()
+    b[64:] = rng.integers(0, 1000, size=32)
+
+    def digests(toks):
+        from repro.serving.engine import chunk_plan
+        bounds = tuple(int(x) for x in np.cumsum(chunk_plan(len(toks), 32)))
+        return dict(chain_digests(fp, toks, bounds))
+
+    da, db = digests(a), digests(b)
+    assert da[32] == db[32] and da[64] == db[64]
+    assert da[96] != db[96]
+
+    c = a.copy()
+    c[0] += 1                                      # first chunk differs
+    dc = digests(c)
+    assert all(da[k] != dc[k] for k in da)
+
+    # a stored full prompt is findable from its extension's boundary
+    pc = PrefixCache(PrefixCacheConfig(block_size=32))
+    pc.insert(fp, a[:64], {"x": np.zeros(4, np.float32)}, first_token=0)
+    hit = pc.lookup(fp, a)                          # a extends a[:64]
+    assert hit is not None and not hit.full and hit.prefix_len == 64
+    hit2 = pc.lookup(fp, a[:64])
+    assert hit2 is not None and hit2.full
+    assert pc.lookup(fp, b[:48]) is None            # unaligned prefix
+
+
+# --------------------------------------------------------------------------
+# Host tier: TTL-then-LRU under a bytes cap (fuzz + seeded fallback)
+# --------------------------------------------------------------------------
+
+def _mk_rows(nbytes):
+    return {"k": np.zeros(max(nbytes, 1), np.uint8)}
+
+
+def _tier_case(ops):
+    """ops: list of (kind, arg) — drive a small capped store through
+    insert/lookup/advance and check every invariant after each op."""
+    clock = FakeClock()
+    cfg = PrefixCacheConfig(max_bytes=4096, block_size=8, base_ttl_s=100.0,
+                            min_ttl_s=10.0, max_ttl_s=1000.0, min_tokens=2)
+    pc = PrefixCache(cfg, clock=clock)
+    fp = b"\x02" * 16
+    rng = np.random.default_rng(42)
+    prompts = {i: rng.integers(0, 100, size=8 * (1 + i % 3)).astype(np.int32)
+               for i in range(8)}
+    for kind, arg in ops:
+        if kind == "insert":
+            pc.insert(fp, prompts[arg % 8], _mk_rows(512 * (1 + arg % 4)),
+                      first_token=arg)
+        elif kind == "lookup":
+            hit = pc.lookup(fp, prompts[arg % 8])
+            if hit is not None:
+                assert not hit.entry.expired(clock.t)
+        else:                                       # advance the clock
+            clock.t += float(arg)
+        # invariants, after every operation
+        assert pc.bytes_used == sum(e.nbytes for e in pc._entries.values())
+        assert pc.bytes_used <= cfg.max_bytes
+        for e in pc._entries.values():
+            assert cfg.min_ttl_s <= e.ttl_s <= cfg.max_ttl_s
+    s = pc.stats()
+    assert s["lookups"] == s["full_hits"] + s["partial_hits"] + s["misses"]
+    assert s["entries"] == len(pc)
+    assert (s["inserts"] - s["evictions_ttl"] - s["evictions_lru"]
+            == s["entries"])
+
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    _OP = st.one_of(
+        st.tuples(st.just("insert"), st.integers(0, 7)),
+        st.tuples(st.just("lookup"), st.integers(0, 7)),
+        st.tuples(st.just("tick"), st.integers(1, 400)))
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(_OP, min_size=1, max_size=40))
+    def test_fuzz_tier_invariants(ops):
+        _tier_case(ops)
+except ImportError:                              # pragma: no cover
+    pass                                         # seeded sweep below
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_seeded_tier_invariants(seed):
+    rng = np.random.default_rng(seed)
+    ops = []
+    for _ in range(rng.integers(5, 40)):
+        k = rng.integers(0, 3)
+        ops.append([("insert", int(rng.integers(0, 8))),
+                    ("lookup", int(rng.integers(0, 8))),
+                    ("tick", int(rng.integers(1, 400)))][k])
+    _tier_case(ops)
+
+
+def test_ttl_expiry_and_lru_order():
+    """Deterministic tier scenario: expiry removes stale entries on probe,
+    and byte pressure evicts in strict least-recently-used order."""
+    clock = FakeClock()
+    cfg = PrefixCacheConfig(max_bytes=3000, block_size=8, base_ttl_s=100.0,
+                            min_ttl_s=10.0, max_ttl_s=1000.0, min_tokens=2)
+    pc = PrefixCache(cfg, clock=clock)
+    fp = b"\x03" * 16
+    rng = np.random.default_rng(1)
+    p = {i: rng.integers(0, 100, size=8).astype(np.int32) + 100 * i
+         for i in range(4)}
+
+    assert pc.insert(fp, p[0], _mk_rows(1000), first_token=0)
+    clock.t = 50.0
+    assert pc.lookup(fp, p[0]) is not None          # refreshes recency and
+    #                                                 boosts TTL to ~134.7s
+    assert pc.insert(fp, p[1], _mk_rows(1000), first_token=1)
+
+    clock.t = 160.0              # p1 stale (110s > its 100s base TTL);
+    #                              p0's boosted TTL still covers the gap
+    assert pc.lookup(fp, p[1]) is None
+    assert pc.stats()["evictions_ttl"] == 1
+    assert pc.lookup(fp, p[0]) is not None
+
+    # fill to the cap, then overflow: LRU (p2, untouched) goes first
+    clock.t = 170.0
+    assert pc.insert(fp, p[2], _mk_rows(1000), first_token=2)
+    clock.t = 175.0
+    assert pc.lookup(fp, p[0]) is not None           # p0 most recent
+    assert pc.insert(fp, p[3], _mk_rows(2000), first_token=3)
+    assert pc.lookup(fp, p[2]) is None               # LRU victim
+    assert pc.lookup(fp, p[0]) is not None
+    assert pc.stats()["evictions_lru"] >= 1
+
+
+def test_store_skips_trivial_and_oversized():
+    pc = PrefixCache(PrefixCacheConfig(max_bytes=100, min_tokens=4))
+    fp = b"\x04" * 16
+    assert not pc.insert(fp, np.arange(2, dtype=np.int32),
+                         _mk_rows(10), first_token=0)
+    assert not pc.insert(fp, np.arange(8, dtype=np.int32),
+                         _mk_rows(500), first_token=0)
+    assert pc.stats()["too_large"] == 1
+    assert len(pc) == 0
