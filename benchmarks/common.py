@@ -147,6 +147,20 @@ def kl_vs_reference(logp: np.ndarray, logp_ref: np.ndarray) -> float:
     return float(np.mean(np.sum(p_ref * (logp_ref - logp), axis=-1)))
 
 
+def device_topology(mesh=None) -> dict:
+    """Device/mesh identity for benchmark config blocks: every BENCH_*.json
+    records what hardware layout produced it (a single-device CPU run and
+    an 8-fake-device mesh run are not comparable rows).
+
+    ``mesh``: a ``repro.serving.meshing.ServingMesh`` (its axes are
+    recorded) or None (flat device list)."""
+    if mesh is not None:
+        return mesh.topology()
+    devs = jax.devices()
+    return {"axes": None, "n_devices": len(devs),
+            "platform": devs[0].platform}
+
+
 def merge_json_section(path: str, key: str, value) -> None:
     """Set one top-level section of a benchmark JSON, preserving the other
     sections (e.g. BENCH_kv_quant.json's ``kernel``/``serving`` halves are

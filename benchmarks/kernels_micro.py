@@ -116,6 +116,7 @@ def _occupancy_sweep(csv: common.CsvOut) -> None:
         json.dump({"shape": {"B": B, "Hq": Hq, "Hkv": Hkv, "C": C, "Dh": Dh,
                              "block_c": bc, "kv_format": "bf16",
                              "kv_payload_itemsize": 2},
+                   "device_topology": common.device_topology(),
                    "sweep": sweep}, f, indent=2)
     print(f"# wrote {out_path}")
 
@@ -193,6 +194,7 @@ def _quant_sweep(csv: common.CsvOut) -> dict:
     kernel_section = {
         "shape": {"B": B, "Hq": Hq, "Hkv": Hkv, "C": C, "Dh": Dh,
                   "block_c": bc},
+        "device_topology": common.device_topology(),
         "bytes_model": "per (b,h) program: blocks * block_c * "
                        "(payload_itemsize*Dh + scale_bytes) * 2 [K and V]; "
                        "bf16: 2*Dh, int8: 1*Dh + 4 (f32 scale/token/head)",

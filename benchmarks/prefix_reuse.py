@@ -180,6 +180,7 @@ def benchmark(*, tiny: bool = False, out_path: str | None = None,
                           ).astype(np.int32)
 
     results = {"config": {
+        "device_topology": common.device_topology(),
         "tiny": tiny, "capacity": capacity, "policy": "lethe",
         "prompt_len": prompt_len, "prefix_len": prefix_len,
         "suffix_len": suffix_len, "p_full": p_full,

@@ -24,6 +24,21 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
+
+def _mesh_bootstrap() -> None:
+    """``--mesh`` on a CPU host needs fake devices, and the
+    ``xla_force_host_platform_device_count`` flag only binds BEFORE the
+    first jax import — 8 covers every swept shape (up to 2x4)."""
+    if "--mesh" not in sys.argv:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count=8").strip()
+
+
+_mesh_bootstrap()
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -135,6 +150,7 @@ def benchmark(*, tiny: bool = False, out_path: str | None = None,
         "n_layers": cfg.n_layers, "d_model": cfg.d_model,
         "capacity": capacity,
         "kv_format": pol.kv_format,
+        "device_topology": common.device_topology(),
         "cache_bytes_per_slots": {
             str(s): _cache_stats(eng.new_decode_state(s))["cache_bytes"]
             for s in slots_grid},
@@ -260,6 +276,7 @@ def benchmark_chunked(*, tiny: bool = False, out_path: str | None = None,
         "long_new": long_new, "n_long": n_long, "tiny": tiny,
         "n_layers": cfg.n_layers, "d_model": cfg.d_model,
         "kv_format": pol.kv_format,
+        "device_topology": common.device_topology(),
         "cache_bytes": _cache_stats(
             eng.new_decode_state(slots))["cache_bytes"],
     }, "modes": {}}
@@ -401,6 +418,7 @@ def benchmark_kv_quant(*, tiny: bool = False, out_path: str | None = None,
             "capacity": capacity, "policy": "lethe", "tiny": tiny,
             "n_layers": cfg.n_layers, "d_model": cfg.d_model,
             "d_head": cfg.d_head,
+            "device_topology": common.device_topology(),
         },
         "runs": out,
         "speedup_int8_over_bf16_equal_bytes": speedup,
@@ -427,6 +445,136 @@ def benchmark_kv_quant(*, tiny: bool = False, out_path: str | None = None,
     return serving_section
 
 
+# --------------------------------------------------------------------------
+# Mesh-sharded scenario (`--mesh`): tensor-parallel continuous batching.
+#
+# The same mixed-traffic scheduler workload on a (data, model) device mesh:
+# params and the live KV state shard per launch/shardings serving rules,
+# decode runs the shard_map/GSPMD-partitioned program. On a CPU host the
+# mesh is simulated with fake host devices (xla_force_host_platform_
+# device_count), which execute the partitioned SPMD program *serially* on
+# one core: wall ≈ n_devices x per-device time, so
+#     tokens_per_s_simulated = tokens x n_devices / wall
+# estimates the per-device-parallel rate (every shard runs the same
+# program on 1/n of the heads/slots — SPMD symmetry). Collectives are host
+# memcpys, optimistic vs real ICI; the raw serialized rate is reported
+# alongside. Emits ``experiments/BENCH_sharded_serving.json``.
+# --------------------------------------------------------------------------
+
+_MESH_METHODOLOGY = (
+    "Fake host devices execute the GSPMD-partitioned program serially on "
+    "one CPU core, so wall ~= n_devices * per-device time; "
+    "tokens_per_s_simulated = tokens * n_devices / wall_s estimates the "
+    "per-device-parallel rate (SPMD symmetry: each device runs the same "
+    "program over 1/n of the kv-heads / slots). Collectives are host "
+    "memcpys (optimistic vs real interconnect); tokens_per_s_wall is the "
+    "raw serialized rate.")
+
+
+def benchmark_mesh(*, tiny: bool = False, out_path: str | None = None,
+                   csv: common.CsvOut | None = None,
+                   mesh_arg: str | None = None) -> dict:
+    from repro.serving.meshing import ServingMesh, parse_mesh_arg
+
+    if tiny:
+        n_req, prompt_len, max_new_grid, segment_len = 4, 12, (4, 8), 4
+        capacity, slots, repeats = 32, 4, 1
+        cfg = dataclasses.replace(common.bench_arch(512),
+                                  n_heads=8, n_kv_heads=4)
+    else:
+        # per-device compute must dominate the host-side scheduler tax for
+        # the serialized-wall normalisation to be clean -> the larger
+        # serving model; n_kv_heads=4 so every swept tp divides the heads
+        n_req, prompt_len, max_new_grid, segment_len = 16, 32, (8, 32), 8
+        capacity, slots, repeats = 64, 4, 3
+        cfg = dataclasses.replace(common.bench_arch(512), n_layers=6,
+                                  d_model=256, n_heads=8, n_kv_heads=4,
+                                  d_head=32, d_ff=512)
+
+    shapes = ([tuple(parse_mesh_arg(mesh_arg))]
+              if mesh_arg and mesh_arg != "sweep"
+              else [(1, 2), (1, 4), (2, 4)])
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pol = common.make_policy_for("lethe", capacity)
+    reqs = _make_requests(n_req, prompt_len, max_new_grid, cfg.vocab_size)
+
+    def measure(eng: Engine) -> tuple[dict, dict]:
+        _run_once("continuous", eng, list(reqs), slots, segment_len)  # warm
+        wall, toks = float("inf"), {}
+        for _ in range(repeats):
+            w, done, _ = _run_once("continuous", eng, list(reqs), slots,
+                                   segment_len)
+            wall = min(wall, w)
+            toks = {c.uid: np.asarray(c.tokens) for c in done}
+        tokens = int(sum(len(t) for t in toks.values()))
+        return {"wall_s": wall, "tokens": tokens,
+                "tokens_per_s_wall": tokens / max(wall, 1e-9)}, toks
+
+    single, toks0 = measure(Engine(model, params, pol))
+    single["tokens_per_s_simulated"] = single["tokens_per_s_wall"]
+    curve = []
+    for dp, tp in shapes:
+        mesh = ServingMesh.build((dp, tp))
+        r, toks = measure(Engine(model, params, pol, mesh=mesh))
+        # differential guard: the mesh run must produce the exact tokens
+        for uid, t in toks0.items():
+            np.testing.assert_array_equal(toks[uid], t,
+                                          err_msg=f"mesh {dp}x{tp} uid {uid}")
+        n_dev = dp * tp
+        r["tokens_per_s_simulated"] = r["tokens"] * n_dev / max(
+            r["wall_s"], 1e-9)
+        r["mesh"] = f"{dp}x{tp}"
+        r["n_devices"] = n_dev
+        r["device_topology"] = common.device_topology(mesh)
+        r["speedup_simulated_vs_single"] = (
+            r["tokens_per_s_simulated"]
+            / max(single["tokens_per_s_simulated"], 1e-9))
+        curve.append(r)
+        line = (f"mesh={dp}x{tp} wall={r['wall_s']:.2f}s "
+                f"tok/s_wall={r['tokens_per_s_wall']:.1f} "
+                f"tok/s_sim={r['tokens_per_s_simulated']:.1f} "
+                f"({r['speedup_simulated_vs_single']:.2f}x vs single)")
+        print(f"  [sharded_serving] {line}", flush=True)
+        if csv is not None:
+            csv.add(f"sharded_serving/mesh{dp}x{tp}",
+                    1e6 / max(r["tokens_per_s_simulated"], 1e-9),
+                    f"speedup_sim={r['speedup_simulated_vs_single']:.2f}")
+
+    results = {"config": {
+        "n_requests": n_req, "prompt_len": prompt_len,
+        "max_new_grid": list(max_new_grid), "segment_len": segment_len,
+        "slots": slots, "capacity": capacity, "policy": "lethe",
+        "tiny": tiny, "n_layers": cfg.n_layers, "d_model": cfg.d_model,
+        "n_kv_heads": cfg.n_kv_heads,
+        "device_topology": common.device_topology(),
+        "methodology": _MESH_METHODOLOGY,
+    }, "single": single, "mesh_runs": curve}
+
+    if not tiny and mesh_arg in (None, "sweep"):
+        # Acceptance: simulated tokens/s grows monotonically with the
+        # model-axis size and clears 1.3x by 4-way tensor parallel.
+        by_tp = {1: single["tokens_per_s_simulated"]}
+        for r in curve:
+            dp, tp = (int(x) for x in r["mesh"].split("x"))
+            if dp == 1:
+                by_tp[tp] = r["tokens_per_s_simulated"]
+        tps_curve = [by_tp[t] for t in sorted(by_tp)]
+        assert all(a < b for a, b in zip(tps_curve, tps_curve[1:])), by_tp
+        assert by_tp[4] / by_tp[1] >= 1.3, by_tp
+        results["tp_scaling_simulated"] = {str(t): by_tp[t]
+                                           for t in sorted(by_tp)}
+
+    out_path = out_path or os.path.join(common.CACHE_DIR,
+                                        "BENCH_sharded_serving.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"  [sharded_serving] wrote {out_path}", flush=True)
+    return results
+
+
 def run(csv: common.CsvOut) -> None:
     """benchmarks/run.py suite hook."""
     benchmark(tiny=False, csv=csv)
@@ -444,8 +592,18 @@ def main() -> None:
     ap.add_argument("--kv-format", default=None, choices=["int8"],
                     help="run the bytes-neutral quantized-cache scenario "
                          "(int8 at 2x slots vs bf16 at equal cache bytes)")
+    ap.add_argument("--mesh", nargs="?", const="sweep", default=None,
+                    metavar="DP,TP",
+                    help="run the mesh-sharded serving scenario: bare "
+                         "--mesh sweeps (1,2) (1,4) (2,4) against the "
+                         "single-device baseline; --mesh 2,4 runs that one "
+                         "shape (fake host devices are set up automatically)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.mesh is not None:
+        benchmark_mesh(tiny=args.tiny, out_path=args.out,
+                       mesh_arg=args.mesh)
+        return
     if args.kv_format == "int8":
         benchmark_kv_quant(tiny=args.tiny, out_path=args.out)
         return

@@ -261,6 +261,7 @@ def benchmark(*, tiny: bool = False, out_path: str | None = None,
           flush=True)
 
     results = {"config": {
+        "device_topology": common.device_topology(),
         "tiny": tiny, "prompt_len": prompt_len,
         "max_new": max_new, "slots": slots, "segment_len": segment_len,
         "capacity": capacity, "policy": "lethe",

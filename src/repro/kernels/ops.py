@@ -11,6 +11,8 @@
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -21,6 +23,72 @@ from repro.kernels.decode_attention import (GLOBAL_WINDOW,
 from repro.kernels.flash_prefill import flash_prefill_pallas
 
 _DEFAULT = {"impl": "auto"}
+
+
+def _ambient_mesh():
+    """The mesh a serving engine activated with ``with mesh:`` around this
+    trace, or None. Safe to branch on inside jitted code: the trace cache
+    keys on the ambient mesh context, so a mesh-bound engine and a no-mesh
+    engine never share a traced program (verified by the mesh battery)."""
+    from jax.interpreters import pxla
+    m = pxla.thread_resources.env.physical_mesh
+    if m.empty or "model" not in m.axis_names:
+        return None
+    return m
+
+
+def _decode_fused_shard_map(mesh, q, k, v, pos, cur, score, lens, win, *,
+                            gamma, softcap, scale, k_scale, v_scale,
+                            interpret):
+    """Tensor-parallel decode attention: the Pallas kernel under shard_map
+    over kv-heads, with the partial-softmax all-reduce epilogue.
+
+    Each shard runs the early-exit kernel over its local Hkv/tp heads —
+    every (head, group) softmax row is complete locally (softmax normalises
+    over C, which is unsharded), so the attention *output* needs no
+    communication at all (the Megatron wo all-reduce downstream covers it).
+    Only the RASR bookkeeping crosses shards: Eq. 2's column-sums aggregate
+    over ALL heads, so each shard's ``probsum`` is a partial sum -> one
+    [B, C] f32 psum over ``model``, after which the Eq. 5 EMA
+    (γ·score + probsum, zeroed on invalid slots) is applied to the
+    replicated score — exactly ``decode_attention_fused_ref``'s arithmetic.
+    The kernel itself runs with gamma=0 over a zero score so its fused
+    epilogue emits raw (local) column-sums.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    daxes = tuple(a for a in mesh.axis_names if a != "model")
+    dsz = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    B = q.shape[0]
+    data_ok = dsz > 1 and B >= dsz and B % dsz == 0
+    b = (daxes if len(daxes) > 1 else daxes[0]) if data_ok else None
+    from jax.sharding import PartitionSpec as P
+    qs = P(b, "model", None)
+    kvs = P(b, "model", None, None)
+    vec = P(b, None)
+    row = P(b)
+    quant = k_scale is not None
+
+    def body(q, k, v, pos, score, lens, cur, win, *scales):
+        ks, vs = scales if quant else (None, None)
+        out, ps_local, _, _ = decode_attention_pallas(
+            q, k, v, pos, jnp.zeros_like(score), lens, cur, win,
+            scale=scale, softcap=softcap, gamma=0.0, interpret=interpret,
+            k_scale=ks, v_scale=vs)
+        probsum = jax.lax.psum(ps_local, "model")
+        new_score = jnp.where(pos >= 0,
+                              gamma * score.astype(jnp.float32) + probsum,
+                              0.0)
+        return out, probsum, new_score
+
+    in_specs = [qs, kvs, kvs, vec, vec, row, row, P()]
+    args = [q, k, v, pos, score, lens, cur, win]
+    if quant:
+        in_specs += [P(b, "model", None)] * 2
+        args += [k_scale, v_scale]
+    fn = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                   out_specs=(qs, vec, vec), check_rep=False)
+    return fn(*args)
 
 
 def set_default_impl(impl: str) -> None:
@@ -59,6 +127,25 @@ def decode_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array,
     Returns (out [B,Hq,Dh], probsum [B,C], new_score [B,C])."""
     impl = _resolve(impl)
     scale = scale if scale is not None else q.shape[-1] ** -0.5
+    mesh = _ambient_mesh()
+    if mesh is not None and mesh.shape["model"] > 1 and impl != "ref":
+        # Mesh-sharded serving: wrap the kernel in shard_map over kv-heads
+        # when the head counts divide; otherwise fall back to the jnp
+        # oracle and let GSPMD partition it (Pallas-under-shard_map needs
+        # an exact head split).
+        tp = mesh.shape["model"]
+        B, Hq, _ = q.shape
+        Hkv = k.shape[1]
+        if Hkv % tp == 0 and Hq % tp == 0:
+            lens = lengths if lengths is not None else live_lengths(pos)
+            win = jnp.asarray(GLOBAL_WINDOW if window is None else window,
+                              jnp.int32)
+            cur = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (B,))
+            return _decode_fused_shard_map(
+                mesh, q, k, v, pos, cur, score, lens, win, gamma=gamma,
+                softcap=softcap, scale=scale, k_scale=k_scale,
+                v_scale=v_scale, interpret=(impl == "interpret"))
+        impl = "ref"
     if impl == "ref":
         return ref_impl.decode_attention_fused_ref(
             q, k, v, pos, cur_pos, score, gamma=gamma, window=window,

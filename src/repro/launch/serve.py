@@ -15,10 +15,35 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+import os
+import sys
 import time
 
-import jax
-import numpy as np
+
+def _mesh_bootstrap() -> None:
+    """``--mesh dp,tp`` on a CPU host needs dp*tp (fake) devices, and the
+    ``xla_force_host_platform_device_count`` flag only takes effect BEFORE
+    the first jax import — set it here so ``python -m repro.launch.serve
+    --mesh 2,4`` just works. A real multi-device backend (TPU) ignores the
+    host-platform flag; an explicit XLA_FLAGS wins."""
+    if "--mesh" not in sys.argv:
+        return
+    try:
+        dp, tp = (int(x) for x in
+                  sys.argv[sys.argv.index("--mesh") + 1].split(","))
+    except (IndexError, ValueError):
+        return                       # argparse reports the real error later
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={dp * tp}"
+        ).strip()
+
+
+_mesh_bootstrap()
+
+import jax                                                    # noqa: E402
+import numpy as np                                            # noqa: E402
 
 from repro.checkpoint import ckpt
 from repro.configs import get_arch
@@ -27,6 +52,7 @@ from repro.models.api import build_model
 from repro.serving.engine import Engine
 from repro.serving.frontdoor import (AdmissionConfig, FrontDoor,
                                      ServeRequest)
+from repro.serving.meshing import ServingMesh
 
 
 def parse_priority_mix(spec: str) -> tuple[list[int], list[float]]:
@@ -107,6 +133,11 @@ def main() -> None:
                     help="with --prefix-cache: prompts share prefixes "
                          "drawn from this many templates (Zipf-ish reuse); "
                          "0 keeps every prompt unique")
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="serve on a (data=DP, model=TP) device mesh: "
+                         "params and KV state shard over kv-heads on "
+                         "'model' and slots on 'data' (on a CPU host the "
+                         "fake-device XLA flag is set automatically)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--restore", default=None)
     args = ap.parse_args()
@@ -124,7 +155,10 @@ def main() -> None:
     pol = make_policy(args.policy, capacity=args.capacity,
                       sparse_ratio=args.sparse_ratio,
                       recent_ratio=args.recent_ratio)
-    eng = Engine(model, params, pol)
+    mesh = ServingMesh.build(args.mesh) if args.mesh else None
+    if mesh is not None:
+        print(f"mesh: {mesh.topology()}")
+    eng = Engine(model, params, pol, mesh=mesh)
 
     rng = np.random.default_rng(args.seed)
     prios, weights = parse_priority_mix(args.priority_mix)

@@ -47,7 +47,16 @@ def _kv_priority() -> tuple[int, ...]:
     """
     order = os.environ.get("REPRO_KV_SHARD_PRIORITY", "heads,cap,dh")
     idx = {"heads": 0, "cap": 1, "dh": 2}
-    return tuple(idx[x] for x in order.split(","))
+    out = []
+    for tok in order.split(","):
+        tok = tok.strip()
+        if tok not in idx:
+            raise ValueError(
+                f"REPRO_KV_SHARD_PRIORITY: invalid token {tok!r} in "
+                f"{order!r}; valid tokens are 'heads', 'cap', 'dh' "
+                "(comma-separated, e.g. 'heads,dh,cap')")
+        out.append(idx[tok])
+    return tuple(out)
 
 
 def _model_size(mesh: Mesh) -> int:
@@ -145,11 +154,39 @@ def opt_specs(p_spec: Any) -> Any:
 # Decode-state shardings
 # --------------------------------------------------------------------------
 
-def _cache_specs(cache: KVCache, mesh: Mesh, batch_size: int) -> KVCache:
+def _cache_specs(cache: KVCache, mesh: Mesh, batch_size: int,
+                 serving: bool = False) -> KVCache:
     m = _model_size(mesh)
     daxes = _data_axes(mesh)
     dsz = _data_size(mesh)
     L, B, Hkv, C, Dh = cache.k.shape
+
+    if serving:
+        # Live serving layout: the capacity axis C must stay shard-local —
+        # every slot op (append_token's one-hot select, prune_layer /
+        # compress_prefill_layer compaction gathers, tree_update_slots /
+        # reset_slot masked selects) is elementwise or a local gather over
+        # C, so a C-local layout makes the whole slot lifecycle
+        # collective-free (§Perf: capacity sharding turns each
+        # append/compact/argsort into ~GBs of all-gather per step). The
+        # model axis therefore follows the priority chain with 'cap'
+        # removed; an indivisible batch replicates over data instead of
+        # falling to the sequence-parallel branch.
+        data_ok = batch_size >= dsz and batch_size % dsz == 0
+        b_ax = (daxes if len(daxes) > 1 else daxes[0]) if data_ok else None
+        pri = tuple(ax for ax in _kv_priority() if ax != 1)
+        target = _pick_axis((Hkv, C, Dh), pri, m)
+        kv = {
+            0: P(None, b_ax, "model", None, None),
+            2: P(None, b_ax, None, None, "model"),
+            None: P(None, b_ax, None, None, None),
+        }[target]
+        vec = P(None, b_ax, None)
+        ln = P(None, b_ax)
+        sc = P(*tuple(kv)[:4]) if cache.quantized else None
+        return KVCache(k=kv, v=kv, pos=vec, score=vec, length=ln,
+                       budget=ln, evict_at=ln, sparsity=ln,
+                       k_scale=sc, v_scale=sc)
 
     if batch_size >= dsz and batch_size % dsz == 0:
         b_ax = daxes if len(daxes) > 1 else daxes[0]
@@ -190,7 +227,7 @@ def _cache_specs(cache: KVCache, mesh: Mesh, batch_size: int) -> KVCache:
 
 
 def state_specs(state: Any, cfg: ArchConfig, mesh: Mesh,
-                batch_size: int) -> Any:
+                batch_size: int, serving: bool = False) -> Any:
     m = _model_size(mesh)
     daxes = _data_axes(mesh)
     dsz = _data_size(mesh)
@@ -226,7 +263,7 @@ def state_specs(state: Any, cfg: ArchConfig, mesh: Mesh,
 
     def spec_one(sub):
         if isinstance(sub, KVCache):
-            return _cache_specs(sub, mesh, batch_size)
+            return _cache_specs(sub, mesh, batch_size, serving=serving)
         flat, treedef = jax.tree_util.tree_flatten_with_path(sub)
         return jax.tree_util.tree_unflatten(
             treedef, [leaf_spec(p, l) for p, l in flat])

@@ -45,6 +45,20 @@ import numpy as np
 from repro.core import cache as cache_lib
 from repro.core.policy import PolicyConfig
 from repro.models.api import ModelAPI
+from repro.serving.meshing import ServingMesh, mesh_context
+
+
+def _meshed(fn):
+    """Run an engine entry point under the engine's mesh context (no-op
+    for a no-mesh engine): inside ``with mesh:`` the shard_map decode
+    kernel dispatch and the ``shard_hints`` constraints bind, and the jit
+    trace cache keys on the ambient mesh so mesh/no-mesh engines never
+    share a traced program."""
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with mesh_context(self.mesh):
+            return fn(self, *args, **kwargs)
+    return wrapper
 
 
 def _sample(logits: jax.Array, key, temperature: float) -> jax.Array:
@@ -164,20 +178,32 @@ class Engine:
     """Batched serving over one model + one policy."""
 
     def __init__(self, model: ModelAPI, params, policy: PolicyConfig,
-                 cache_dtype=jnp.float32):
+                 cache_dtype=jnp.float32,
+                 mesh: "ServingMesh | str | tuple[int, int] | None" = None):
         from repro.models.api import check_kv_format
         check_kv_format(model.cfg, policy)   # fail at build, not inside jit
         self.model = model
+        # Mesh-sharded serving: ``mesh`` (a ServingMesh, or "dp,tp" / a
+        # (dp, tp) tuple for convenience) places the params once here and
+        # wraps every entry point in the mesh context; None keeps the
+        # single-device path untouched.
+        if mesh is not None and not isinstance(mesh, ServingMesh):
+            mesh = ServingMesh.build(mesh)
+        self.mesh = mesh
+        if mesh is not None:
+            params = mesh.shard_params(params, model.cfg)
         self.params = params
         self.policy = policy
         self.cache_dtype = cache_dtype
         self._segment_cache: dict = {}
         self._scan_cache: dict = {}
 
+    @_meshed
     def prefill(self, batch: dict):
         return self.model.prefill(self.params, batch, self.policy,
                                   cache_dtype=self.cache_dtype)
 
+    @_meshed
     def generate(self, batch: dict, max_new_tokens: int, *,
                  temperature: float = 0.0, seed: int = 0,
                  eos_id: int | None = None,
@@ -238,6 +264,7 @@ class Engine:
             kv_format=stats["kv_format"],
         )
 
+    @_meshed
     def generate_scan(self, batch: dict, max_new_tokens: int, *,
                       temperature: float = 0.0, seed: int = 0,
                       eos_id: int | None = None) -> GenerationResult:
@@ -340,11 +367,19 @@ class Engine:
     # All three mutators are jitted with the live state donated, so slot
     # turnover is an in-place masked select over the standing allocation.
 
+    @_meshed
     def new_decode_state(self, batch_slots: int, **kw):
-        """Empty live state with ``batch_slots`` decode slots."""
-        return self.model.init_decode_state(
+        """Empty live state with ``batch_slots`` decode slots (placed on
+        the serving mesh when one is bound: kv-heads on ``model``, slots on
+        ``data``, capacity axis C shard-local)."""
+        state = self.model.init_decode_state(
             self.policy, batch_slots, dtype=self.cache_dtype, **kw)
+        if self.mesh is not None:
+            state = self.mesh.shard_state(state, self.model.cfg,
+                                          batch_slots)
+        return state
 
+    @_meshed
     def admit_slots(self, state, slot_ids, batch: dict):
         """Admit a group of same-length requests (``batch["tokens"]`` is
         [k, S], row j destined for live slot ``slot_ids[j]``) in one
@@ -358,6 +393,7 @@ class Engine:
             cache_dtype=self.cache_dtype)
         return state, jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
+    @_meshed
     def admit_slot(self, state, slot: int, batch: dict):
         """Admit one request (``batch`` is a B=1 prompt) into slot ``slot``
         of the live state: solo prefill through the full policy machinery,
@@ -369,6 +405,7 @@ class Engine:
 
     # ---- chunked prefill (stall-free admission; DESIGN.md §Prefill) -------
 
+    @_meshed
     def start_prefill_chunked(self, batch: dict, *, chunk_size: int,
                               pad_rows_to: int | None = None) -> PrefillJob:
         """Open a chunked prefill for one group of equal-length requests.
@@ -403,6 +440,7 @@ class Engine:
                           s_total=s_total, compress=compress,
                           n_real=n_real)
 
+    @_meshed
     def prefill_chunk_step(self, job: PrefillJob) -> PrefillJob:
         """Advance one chunk — the schedulable unit of prefill work. The
         carry is donated: each step mutates the standing working buffers.
@@ -430,6 +468,7 @@ class Engine:
         job.next_chunk += 1
         return job
 
+    @_meshed
     def finish_prefill_chunked(self, state, job: PrefillJob, slot_ids, *,
                                return_rows: bool = False):
         """Finalize a completed job and insert its rows into the live
@@ -452,6 +491,7 @@ class Engine:
 
     # ---- prefix-reuse resume (serving/prefix_cache.py) --------------------
 
+    @_meshed
     def start_prefill_resumed(self, rows, batch: dict, *, s_prefix: int,
                               chunk_size: int) -> PrefillJob:
         """Open a chunked prefill that CONTINUES from restored prefix rows
@@ -486,6 +526,7 @@ class Engine:
                           plan=plan, s_total=s_total, compress=compress,
                           n_real=k, resumed=True)
 
+    @_meshed
     def resume_prefill_rows(self, rows, batch: dict, *, s_prefix: int,
                             chunk_size: int = 32,
                             max_keep: int | None = None):
@@ -504,6 +545,7 @@ class Engine:
             out = self._degrade_rows(out, job.s_total - 1, max_keep)
         return logits, out
 
+    @_meshed
     def admit_slots_chunked(self, state, slot_ids, batch: dict, *,
                             chunk_size: int, pad_rows_to: int | None = None):
         """One-shot chunked admission (start -> every chunk -> insert):
@@ -515,6 +557,7 @@ class Engine:
             job = self.prefill_chunk_step(job)
         return self.finish_prefill_chunked(state, job, slot_ids)
 
+    @_meshed
     def release_slots(self, state, slot_ids, *, pad_to: int | None = None):
         """Retire a group of slots back to empty (K/V zeroed, pos −1,
         occupancy 0, eviction threshold parked at capacity). ``pad_to``
@@ -530,6 +573,7 @@ class Engine:
         """Single-slot form of ``release_slots``."""
         return self.release_slots(state, [slot])
 
+    @_meshed
     def decode_segment(self, state, tok, pos, done, n_steps: int, *,
                        eos_id: int | None = None):
         """Run ``n_steps`` greedy decode steps over the live batch with
@@ -567,6 +611,7 @@ class Engine:
         return fn(state, jnp.asarray(tok, jnp.int32),
                   jnp.asarray(pos, jnp.int32), jnp.asarray(done, bool))
 
+    @_meshed
     def decode_segment_guarded(self, state, tok, pos, done, n_steps: int, *,
                                eos_id: int | None = None,
                                nan_pos=None, fault_pos=None):
@@ -632,6 +677,7 @@ class Engine:
                   off if fault_pos is None else jnp.asarray(fault_pos,
                                                             jnp.int32))
 
+    @_meshed
     def prefill_rows(self, batch: dict, *, chunk_size: int = 32,
                      max_keep: int | None = None):
         """Prefill one admission group WITHOUT inserting it: returns
@@ -660,6 +706,7 @@ class Engine:
             rows = self._degrade_rows(rows, s_total - 1, max_keep)
         return logits, rows
 
+    @_meshed
     def _degrade_rows(self, rows, cur_pos: int, max_keep: int):
         """Tighten freshly prefilled rows to a ``max_keep`` occupancy
         ceiling (the compress rung of the degradation ladder). Only

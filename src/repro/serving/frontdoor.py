@@ -140,8 +140,16 @@ class FrontDoorCore:
                  admission: AdmissionConfig | None = None,
                  chaos: ChaosConfig | None = None,
                  prefix_cache: PrefixCache | None = None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 mesh=None):
         self.eng = engine
+        # Mesh-sharded serving: the engine owns the mesh; the front door
+        # adopts it (fingerprint + telemetry) and re-binds it across the
+        # int8 migration rung. Explicit ``mesh`` must agree.
+        if mesh is not None and mesh is not engine.mesh:
+            raise ValueError(
+                "FrontDoorCore(mesh=...) must be the engine's own "
+                "ServingMesh (pass mesh= to Engine; the core adopts it)")
         self.batch_slots = batch_slots
         self.segment_len = segment_len
         self.eos_id = eos_id
@@ -212,11 +220,14 @@ class FrontDoorCore:
     def _fingerprint(self) -> bytes:
         """Prefix-store compatibility key for the CURRENT engine: policy
         config (capacity, kind, kv_format, every score/budget knob), cache
-        dtype and arch identity. Recomputed after the int8 migration rung —
-        bf16-era entries then stop hitting instead of inserting the wrong
-        payload layout."""
-        return prefix_fingerprint(self.eng.policy, self.eng.cache_dtype,
-                                  arch=self.eng.model.cfg.name)
+        dtype, arch identity and mesh topology. Recomputed after the int8
+        migration rung — bf16-era entries then stop hitting instead of
+        inserting the wrong payload layout."""
+        return prefix_fingerprint(
+            self.eng.policy, self.eng.cache_dtype,
+            arch=self.eng.model.cfg.name,
+            mesh=(self.eng.mesh.topology_token()
+                  if self.eng.mesh is not None else ""))
 
     def _admission_max_keep(self, p: float) -> int | None:
         if p < self.adm.compress_at:
@@ -231,7 +242,8 @@ class FrontDoorCore:
         try:
             pol8 = dataclasses.replace(self.eng.policy, kv_format="int8")
             eng8 = Engine(self.eng.model, self.eng.params, pol8,
-                          cache_dtype=self.eng.cache_dtype)
+                          cache_dtype=self.eng.cache_dtype,
+                          mesh=self.eng.mesh)
         except ValueError:
             self._int8_disabled = True
             return
@@ -661,6 +673,8 @@ class FrontDoorCore:
             "max_queue_depth": self.max_queue_depth,
             "decode_steps": self._decode_steps,
             "kv_format": self._kv_format,
+            "mesh": (self.eng.mesh.topology() if self.eng.mesh is not None
+                     else None),
             "peak_pressure": max(self.pressure_trace, default=0.0),
             "prefix_full_hits": sum(c.prefix_hit == "full"
                                     for c in self.completed),

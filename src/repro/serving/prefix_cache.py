@@ -49,13 +49,20 @@ from typing import Callable
 import numpy as np
 
 
-def prefix_fingerprint(policy, cache_dtype=None, arch: str = "") -> bytes:
+def prefix_fingerprint(policy, cache_dtype=None, arch: str = "",
+                       mesh: str = "") -> bytes:
     """Compatibility fingerprint for stored entries: every knob that changes
     the *bytes* a prefill produces. Two engines whose fingerprints differ
     must never exchange entries — the fingerprint seeds the hash chain, so a
-    mismatch produces disjoint key spaces rather than a checked failure."""
+    mismatch produces disjoint key spaces rather than a checked failure.
+
+    ``mesh`` is the serving mesh's topology token
+    (``ServingMesh.topology_token()``: axis names/sizes + device count, ""
+    for single-device) — snapshots captured under one sharding must never
+    hit a lookup under another: the snapshot gather and the insert scatter
+    are layout-exact only within one placement."""
     blob = "|".join([repr(sorted(vars(policy).items())),
-                     str(cache_dtype), str(arch)])
+                     str(cache_dtype), str(arch), str(mesh)])
     return hashlib.blake2b(blob.encode(), digest_size=16).digest()
 
 

@@ -116,8 +116,18 @@ class Scheduler:
                  segment_len: int = 32, eos_id: int | None = None,
                  track_occupancy: bool = False,
                  prefill_chunk_size: int | None = None,
-                 prefix_cache=None):
+                 prefix_cache=None, mesh=None):
         self.engine = engine
+        # Mesh-sharded serving: the engine owns the mesh (params/state
+        # placement + the shard_map decode dispatch); the scheduler only
+        # needs it for the prefix-store fingerprint and run telemetry. An
+        # explicit ``mesh`` kwarg is accepted for end-to-end plumbing but
+        # must agree with the engine's.
+        if mesh is not None and mesh is not engine.mesh:
+            raise ValueError(
+                "Scheduler(mesh=...) must be the engine's own ServingMesh "
+                "(pass mesh= to Engine; the scheduler adopts it)")
+        self.mesh = engine.mesh
         # Content-hashed prefix store (serving/prefix_cache.PrefixCache):
         # admission probes it before prefilling — full hits insert stored
         # rows, partial hits resume suffix-only prefill, misses prefill
@@ -125,8 +135,11 @@ class Scheduler:
         self.prefix_cache = prefix_cache
         if prefix_cache is not None:
             from repro.serving.prefix_cache import prefix_fingerprint
-            self._fp = prefix_fingerprint(engine.policy, engine.cache_dtype,
-                                          arch=engine.model.cfg.name)
+            self._fp = prefix_fingerprint(
+                engine.policy, engine.cache_dtype,
+                arch=engine.model.cfg.name,
+                mesh=(self.mesh.topology_token()
+                      if self.mesh is not None else ""))
         self.batch_slots = batch_slots
         self.pad_token = pad_token
         self.segment_len = segment_len
@@ -204,6 +217,8 @@ class Scheduler:
             "max_queue_depth": self.max_queue_depth,
             "decode_steps": self._decode_steps,
             "kv_format": self._kv_format,
+            "mesh": (self.mesh.topology() if self.mesh is not None
+                     else None),
             "prefix_full_hits": sum(c.prefix_hit == "full"
                                     for c in self.completed),
             "prefix_partial_hits": sum(c.prefix_hit == "partial"

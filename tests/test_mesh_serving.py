@@ -1,0 +1,367 @@
+"""Mesh-sharded serving battery (DESIGN.md §Sharded serving).
+
+Proves the tensor-parallel serving path is a *transparent* layout change:
+
+  * differential — mesh decode produces exactly the single-device tokens
+    (and cache leaves equal to documented float tolerance) for
+    lethe/h2o/streaming, bf16 and int8, through the slot primitives the
+    scheduler composes;
+  * placement — the live decode state lands where
+    ``shardings.state_specs(serving=True)`` says: kv-heads on ``model``,
+    slots on ``data``, the capacity axis C always shard-local;
+  * the shard_map decode kernel (partial-softmax psum epilogue) matches
+    the jnp oracle, at the ops level and through the engine's jitted
+    ``decode_segment``;
+  * indivisible head counts fall back to the GSPMD-partitioned oracle and
+    still match;
+  * the serving stack on top keeps working: scheduler differential,
+    preempt→resume round trip, prefix-store full hit — all under the mesh.
+
+The whole module skips on a single-device host: run it under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI ``sharded``
+job does).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.core import cache as cache_lib
+from repro.core.policy import make_policy
+from repro.kernels import ops, ref
+from repro.models.api import build_model
+from repro.serving.engine import Engine
+from repro.serving.frontdoor import (AdmissionConfig, FrontDoorCore,
+                                     ServeRequest)
+from repro.serving.meshing import ServingMesh, parse_mesh_arg
+from repro.serving.prefix_cache import PrefixCache, PrefixCacheConfig
+from repro.serving.scheduler import Request, Scheduler
+
+NEED = 4
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < NEED,
+    reason=f"mesh battery needs >= {NEED} devices; run under "
+           f"XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+INF = float("inf")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("qwen2.5-32b").reduced()     # Hq=4, Hkv=2, Dh=32
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=shape).astype(np.int32)
+
+
+def _leaves_close(a, b, msg=""):
+    """Mesh state == single-device state, leaf by leaf. Documented
+    tolerance: float leaves to allclose(rtol=1e-4, atol=5e-5) — GSPMD
+    partitioning reassociates reductions, so f32 payloads/scores/scales
+    carry ~1e-6-relative jitter; int8 payloads to one quantisation step
+    (the jitter may flip a rounded code by one); every other integer leaf
+    (positions, lengths, budgets, eviction state) bit-exact."""
+    fa, ta = jax.tree_util.tree_flatten_with_path(a)
+    fb, tb = jax.tree_util.tree_flatten_with_path(b)
+    assert ta == tb
+    for (pa, la), (_, lb) in zip(fa, fb):
+        la, lb = np.asarray(la), np.asarray(lb)
+        path = f"{msg} {jax.tree_util.keystr(pa)}"
+        assert la.dtype == lb.dtype, path
+        if la.dtype == np.int8:
+            d = np.abs(la.astype(np.int32) - lb.astype(np.int32)).max()
+            assert d <= 1, f"{path}: int8 codes differ by {d} > 1"
+        elif np.issubdtype(la.dtype, np.floating):
+            np.testing.assert_allclose(
+                la.astype(np.float64), lb.astype(np.float64),
+                rtol=1e-4, atol=5e-5, err_msg=path)
+        else:
+            np.testing.assert_array_equal(la, lb, err_msg=path)
+
+
+def _transparent(**kw):
+    base = dict(compress_at=INF, shed_at=INF, reject_at=INF)
+    base.update(kw)
+    return AdmissionConfig(**base)
+
+
+def _solo(engine, prompt, max_new):
+    res = engine.generate({"tokens": jnp.asarray(prompt)[None, :]}, max_new)
+    return np.asarray(res.tokens[0, :res.gen_lens[0]])
+
+
+# --------------------------------------------------------------------------
+# Placement: the live state lands on the serving layout
+# --------------------------------------------------------------------------
+
+def test_serving_state_placement(setup):
+    """kv-heads on 'model', slots on 'data', C shard-local — and every
+    leaf of the fresh state matches state_specs(serving=True) exactly."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2, sparse_ratio=4.0,
+                      kv_format="int8")
+    eng = Engine(model, params, pol, mesh=ServingMesh.build((2, 2)))
+    state = eng.new_decode_state(4)
+
+    caches = [x for x in jax.tree.leaves(
+        state, is_leaf=lambda t: isinstance(t, cache_lib.KVCache))
+        if isinstance(x, cache_lib.KVCache)]
+    assert caches
+    c = caches[0]                                # k [L, B, Hkv, C, Dh]
+    assert c.k.sharding.spec[2] == "model"       # heads split 2-way
+    assert c.k.sharding.spec[3] is None          # C never sharded
+    assert c.k.sharding.spec[1] == "data"        # slots split 2-way
+    assert c.k_scale.sharding.spec[2] == "model"  # scales co-shard
+    assert c.length.sharding.spec[1] == "data"
+    assert c.pos.sharding.spec[2] is None        # C local on metadata too
+
+    from repro.launch import shardings
+    spec_tree = shardings.state_specs(state, cfg, eng.mesh.mesh, 4,
+                                      serving=True)
+    flat_s = jax.tree_util.tree_flatten_with_path(state)[0]
+    flat_p = jax.tree_util.tree_flatten_with_path(spec_tree)[0]
+    for (path, leaf), (_, spec) in zip(flat_s, flat_p):
+        want = NamedSharding(eng.mesh.mesh, spec)
+        assert leaf.sharding.is_equivalent_to(want, leaf.ndim), \
+            (jax.tree_util.keystr(path), leaf.sharding, spec)
+
+    # params went through the production rules: something is model-sharded
+    assert any("model" in str(leaf.sharding.spec)
+               for leaf in jax.tree.leaves(eng.params))
+
+
+def test_mesh_build_errors():
+    with pytest.raises(ValueError, match="two comma-separated ints"):
+        parse_mesh_arg("2x4")
+    with pytest.raises(ValueError, match=">= 1"):
+        parse_mesh_arg("0,4")
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        ServingMesh.build((64, 64))
+
+
+# --------------------------------------------------------------------------
+# Differential: mesh slot decode == single-device slot decode
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["lethe", "h2o", "streaming"])
+@pytest.mark.parametrize("kv_format", ["bf16", "int8"])
+def test_mesh_decode_differential(setup, kind, kv_format):
+    """(data=2, model=2): admit + segment decode through the slot
+    primitives must reproduce the single-device tokens exactly and the
+    cache leaves to the documented tolerance."""
+    cfg, model, params = setup
+    pol = make_policy(kind, capacity=24, sink_len=2, sparse_ratio=4.0,
+                      kv_format=kv_format)
+    eng0 = Engine(model, params, pol)
+    eng1 = Engine(model, params, pol, mesh=ServingMesh.build((2, 2)))
+    batch = {"tokens": jnp.asarray(_prompts(cfg, (4, 12), seed=1))}
+
+    s0 = eng0.new_decode_state(4)
+    s1 = eng1.new_decode_state(4)
+    s0, first0 = eng0.admit_slots(s0, [0, 1, 2, 3], batch)
+    s1, first1 = eng1.admit_slots(s1, [0, 1, 2, 3], batch)
+    np.testing.assert_array_equal(np.asarray(first0), np.asarray(first1),
+                                  err_msg=f"{kind}/{kv_format} first")
+
+    tok = np.asarray(first0)
+    pos = np.full(4, 12, np.int32)
+    done = np.zeros(4, bool)
+    s0, seg0, *_ = eng0.decode_segment(s0, tok, pos, done, 6)
+    s1, seg1, *_ = eng1.decode_segment(s1, tok, pos, done, 6)
+    np.testing.assert_array_equal(np.asarray(seg0), np.asarray(seg1),
+                                  err_msg=f"{kind}/{kv_format} segment")
+    _leaves_close(s0, s1, msg=f"{kind}/{kv_format}")
+
+
+def test_indivisible_heads_fall_back_to_oracle(setup):
+    """(data=1, model=4) does not divide Hkv=2: decode must take the
+    GSPMD-partitioned jnp-oracle path and still match single-device."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2, sparse_ratio=4.0)
+    eng0 = Engine(model, params, pol)
+    eng1 = Engine(model, params, pol, mesh=ServingMesh.build((1, 4)))
+    batch = {"tokens": jnp.asarray(_prompts(cfg, (2, 10), seed=2))}
+
+    s0 = eng0.new_decode_state(2)
+    s1 = eng1.new_decode_state(2)
+    s0, first0 = eng0.admit_slots(s0, [0, 1], batch)
+    s1, first1 = eng1.admit_slots(s1, [0, 1], batch)
+    np.testing.assert_array_equal(np.asarray(first0), np.asarray(first1))
+    tok, pos, done = np.asarray(first0), np.full(2, 10, np.int32), \
+        np.zeros(2, bool)
+    s0, seg0, *_ = eng0.decode_segment(s0, tok, pos, done, 8)
+    s1, seg1, *_ = eng1.decode_segment(s1, tok, pos, done, 8)
+    np.testing.assert_array_equal(np.asarray(seg0), np.asarray(seg1))
+    _leaves_close(s0, s1, msg="tp4-fallback")
+
+
+# --------------------------------------------------------------------------
+# shard_map decode kernel: psum epilogue == oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quant", [False, True])
+def test_shard_map_kernel_matches_oracle(quant):
+    """ops.decode_attention_fused under an active mesh dispatches the
+    shard_map-wrapped Pallas kernel (interpret on CPU); its output,
+    psum'd probsum and EMA'd scores must match the no-mesh oracle."""
+    B, Hq, Hkv, C, Dh = 4, 4, 2, 64, 32
+    lives = [1, 17, 33, 64]
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = jax.random.normal(ks[0], (B, Hq, Dh))
+    kf = jax.random.normal(ks[1], (B, Hkv, C, Dh))
+    vf = jax.random.normal(ks[2], (B, Hkv, C, Dh))
+    pos = jnp.stack([jnp.where(jnp.arange(C) < n, jnp.arange(C), -1)
+                     for n in lives]).astype(jnp.int32)
+    score = jnp.where(pos >= 0, jax.random.uniform(ks[3], (B, C)), 0.0)
+    cur = jnp.asarray([n - 1 for n in lives], jnp.int32)
+    k_scale = v_scale = None
+    k, v = kf, vf
+    if quant:
+        amax_k = jnp.abs(kf).max(-1) / 127.0            # [B,Hkv,C]
+        amax_v = jnp.abs(vf).max(-1) / 127.0
+        k = jnp.round(kf / amax_k[..., None]).astype(jnp.int8)
+        v = jnp.round(vf / amax_v[..., None]).astype(jnp.int8)
+        k_scale, v_scale = amax_k, amax_v
+
+    o_ref, ps_ref, ns_ref = ref.decode_attention_fused_ref(
+        q, k, v, pos, cur, score, gamma=0.95, window=None,
+        scale=Dh ** -0.5, k_scale=k_scale, v_scale=v_scale)
+
+    sm = ServingMesh.build((2, 2))
+    with sm.mesh:
+        o, ps, ns = ops.decode_attention_fused(
+            q, k, v, pos, cur, score, gamma=0.95, scale=Dh ** -0.5,
+            k_scale=k_scale, v_scale=v_scale, impl="interpret")
+    assert np.abs(np.asarray(o) - np.asarray(o_ref)).max() <= 1e-5
+    assert np.abs(np.asarray(ps) - np.asarray(ps_ref)).max() <= 1e-5
+    assert np.abs(np.asarray(ns) - np.asarray(ns_ref)).max() <= 1e-5
+
+
+@pytest.mark.parametrize("kv_format", ["bf16", "int8"])
+def test_engine_decode_via_shard_map_kernel(setup, kv_format):
+    """Force impl=interpret so the (2,2)-mesh engine dispatches the
+    shard_map kernel inside its jitted decode_segment — tokens must still
+    match the single-device engine running the plain interpret kernel."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=16, sink_len=2, sparse_ratio=4.0,
+                      kv_format=kv_format)
+    eng0 = Engine(model, params, pol)
+    eng1 = Engine(model, params, pol, mesh=ServingMesh.build((2, 2)))
+    batch = {"tokens": jnp.asarray(_prompts(cfg, (2, 8), seed=7))}
+    s0 = eng0.new_decode_state(2)
+    s1 = eng1.new_decode_state(2)
+    s0, first0 = eng0.admit_slots(s0, [0, 1], batch)
+    s1, first1 = eng1.admit_slots(s1, [0, 1], batch)
+    tok = np.asarray(first0)
+    pos, done = np.full(2, 8, np.int32), np.zeros(2, bool)
+    # interpret only around decode: the Pallas *prefill* kernel cannot take
+    # a traced window, and prefill is not what this test is about
+    ops.set_default_impl("interpret")
+    jax.clear_caches()
+    try:
+        s0, seg0, *_ = eng0.decode_segment(s0, tok, pos, done, 5)
+        s1, seg1, *_ = eng1.decode_segment(s1, tok, pos, done, 5)
+    finally:
+        ops.set_default_impl("auto")
+        jax.clear_caches()
+    np.testing.assert_array_equal(np.asarray(first0), np.asarray(first1))
+    np.testing.assert_array_equal(np.asarray(seg0), np.asarray(seg1))
+    _leaves_close(s0, s1, msg=f"shard_map/{kv_format}")
+
+
+# --------------------------------------------------------------------------
+# The serving stack on top: scheduler, preemption, prefix store
+# --------------------------------------------------------------------------
+
+def test_scheduler_matches_solo_under_mesh(setup):
+    """Continuous batching on the mesh engine reproduces solo per-request
+    greedy tokens from a single-device engine."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2, sparse_ratio=4.0)
+    solo_eng = Engine(model, params, pol)
+    eng = Engine(model, params, pol, mesh=ServingMesh.build((2, 2)))
+    spec = [(8, 6), (12, 9), (8, 11), (10, 7), (9, 5)]
+    reqs = [Request(uid=i, prompt=_prompts(cfg, (n,), seed=10 + i),
+                    max_new_tokens=m)
+            for i, (n, m) in enumerate(spec)]
+    solo = {r.uid: _solo(solo_eng, r.prompt, r.max_new_tokens)
+            for r in reqs}
+
+    sched = Scheduler(eng, batch_slots=2, segment_len=4)
+    sched.submit(reqs)
+    done = sched.run()
+    assert [c.uid for c in done] == [r.uid for r in reqs]
+    for c in done:
+        np.testing.assert_array_equal(np.asarray(c.tokens), solo[c.uid],
+                                      err_msg=f"uid {c.uid}")
+    s = sched.run_summary()
+    assert s["mesh"] == eng.mesh.topology()
+    assert s["mesh"]["axes"] == {"data": 2, "model": 2}
+
+
+@pytest.mark.parametrize("kv_format", ["bf16", "int8"])
+def test_preempt_resume_roundtrip_under_mesh(setup, kv_format):
+    """Forced preemption-to-host + resume under the mesh changes no token:
+    extract_slots gathers the sharded rows to host, insert_slots scatters
+    them back onto the mesh layout."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2, sparse_ratio=4.0,
+                      target_fill=0.5, kv_format=kv_format)
+    solo_eng = Engine(model, params, pol)
+    eng = Engine(model, params, pol, mesh=ServingMesh.build((2, 2)))
+    spec = [(8, 12), (12, 10), (8, 14), (12, 11)]
+    reqs = [ServeRequest(uid=i, prompt=_prompts(cfg, (n,), seed=30 + i),
+                         max_new_tokens=m)
+            for i, (n, m) in enumerate(spec)]
+    solo = {r.uid: _solo(solo_eng, r.prompt, r.max_new_tokens)
+            for r in reqs}
+
+    core = FrontDoorCore(eng, batch_slots=2, segment_len=3,
+                         admission=_transparent())
+    core.submit(reqs)
+    core.step()
+    forced = 0
+    for victim in (0, 1):
+        if core.slots[victim] is not None:
+            core.preempt_slot(victim)
+            forced += 1
+    assert forced >= 1
+    core.step()
+    if core.slots[0] is not None:
+        core.preempt_slot(0)
+        forced += 1
+    done = core.run()
+
+    assert [c.uid for c in done] == [r.uid for r in reqs]
+    for c in done:
+        np.testing.assert_array_equal(
+            np.asarray(c.tokens), solo[c.uid],
+            err_msg=f"uid {c.uid} (mesh/{kv_format})")
+    s = core.run_summary()
+    assert s["preempted"] == forced
+    assert s["mesh"]["axes"] == {"data": 2, "model": 2}
+
+
+def test_prefix_full_hit_under_mesh(setup):
+    """The prefix store round-trips through the mesh: a repeated prompt is
+    served from the host snapshot ("full" hit) with identical tokens."""
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2, sparse_ratio=4.0)
+    eng = Engine(model, params, pol, mesh=ServingMesh.build((2, 2)))
+    prompt = _prompts(cfg, (12,), seed=5)
+    reqs = [Request(uid=0, prompt=prompt.copy(), max_new_tokens=6),
+            Request(uid=1, prompt=prompt.copy(), max_new_tokens=6)]
+    pc = PrefixCache(PrefixCacheConfig(block_size=8))
+    sched = Scheduler(eng, batch_slots=1, segment_len=4, prefix_cache=pc)
+    sched.submit(reqs)
+    done = sched.run()
+    assert [c.prefix_hit for c in done] == ["miss", "full"]
+    np.testing.assert_array_equal(done[0].tokens, done[1].tokens)
+    assert sched.run_summary()["prefix_full_hits"] == 1

@@ -240,6 +240,28 @@ def test_fingerprint_mismatch_never_hits(setup):
         assert pc.lookup(other, toks) is None
 
 
+def test_mesh_topology_folds_into_fingerprint(setup):
+    """Snapshots captured under one serving-mesh topology are invisible to
+    every other (and to single-device serving): the per-shard byte layout
+    differs, so the topology token seeds the hash chain too."""
+    cfg, _, _ = setup
+    toks = _prompt(cfg, 32, seed=23)
+    pol = make_policy("lethe", capacity=64)
+    fp_single = prefix_fingerprint(pol, jnp.bfloat16, arch="a")
+    fp_m22 = prefix_fingerprint(pol, jnp.bfloat16, arch="a",
+                                mesh="mesh(data=2,model=2)")
+    fp_m14 = prefix_fingerprint(pol, jnp.bfloat16, arch="a",
+                                mesh="mesh(data=1,model=4)")
+    assert len({fp_single, fp_m22, fp_m14}) == 3
+
+    pc = PrefixCache(PrefixCacheConfig(block_size=16))
+    rows = {"k": np.zeros((2, 1, 4), np.int8)}
+    assert pc.insert(fp_m22, toks, rows, first_token=1)
+    assert pc.lookup(fp_m22, toks) is not None
+    assert pc.lookup(fp_single, toks) is None
+    assert pc.lookup(fp_m14, toks) is None
+
+
 # --------------------------------------------------------------------------
 # Hash chain: prefix consistency at pow2-aligned boundaries
 # --------------------------------------------------------------------------

@@ -1,0 +1,66 @@
+"""models/shard_hints unit tests: the hint() degradation contract and the
+REPRO_PREFILL_SEQ_SHARD=1 context-parallel prefill layout.
+
+The first two tests run on any host (no devices needed); the mesh-backed
+spec check skips below 2 devices (the CI ``sharded`` job runs it under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import shard_hints
+
+
+def test_hint_is_noop_outside_mesh():
+    """with_sharding_constraint against unbound axis names must degrade to
+    identity — prefill runs unchanged on a mesh-less host."""
+    x = jnp.arange(12.0).reshape(3, 4)
+    y = shard_hints.hint(x, "data", "model")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+    # and through jit, where the constraint would otherwise be staged
+    def f(x):
+        return shard_hints.hint(x, "data", None) * 2.0
+    np.testing.assert_array_equal(np.asarray(jax.jit(f)(x)),
+                                  np.asarray(x) * 2.0)
+
+
+def test_seq_shard_disabled_is_identity(monkeypatch):
+    monkeypatch.delenv("REPRO_PREFILL_SEQ_SHARD", raising=False)
+    q = jnp.zeros((1, 2, 4, 8))
+    k = jnp.ones((1, 1, 4, 8))
+    q2, k2, v2 = shard_hints.prefill_attention_hints(q, k, k)
+    assert q2 is q and k2 is k and v2 is k
+    out = jnp.zeros((1, 2, 4, 8))
+    assert shard_hints.prefill_out_hint(out) is out
+
+
+@pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >= 2 devices; run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+def test_seq_shard_specs_under_host_mesh(monkeypatch):
+    """REPRO_PREFILL_SEQ_SHARD=1 under a (data, model) mesh produces the
+    documented layout: Q and the attention output sequence-sharded on
+    'model', K/V replicated across 'model'."""
+    monkeypatch.setenv("REPRO_PREFILL_SEQ_SHARD", "1")
+    mesh = Mesh(np.array(jax.devices()[:2]).reshape(1, 2),
+                ("data", "model"))
+    qh = jnp.zeros((2, 4, 8, 16))              # [B, Hq, S, Dh]
+    kh = jnp.zeros((2, 2, 8, 16))              # [B, Hkv, S, Dh]
+
+    with mesh:
+        q2, k2, v2 = jax.jit(shard_hints.prefill_attention_hints)(
+            qh, kh, kh)
+        out = jax.jit(shard_hints.prefill_out_hint)(qh)
+
+    def same(x, spec):
+        return x.sharding.is_equivalent_to(
+            NamedSharding(mesh, spec), x.ndim)
+    assert same(q2, P("data", None, "model", None))
+    assert same(out, P("data", None, "model", None))
+    assert same(k2, P("data", None, None, None))
+    assert same(v2, P("data", None, None, None))

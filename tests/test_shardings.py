@@ -108,6 +108,47 @@ def test_kv_cache_fallback_chain():
         assert kspec[1] == "data"
 
 
+def test_kv_priority_rejects_unknown_token(monkeypatch):
+    """A typo in REPRO_KV_SHARD_PRIORITY must fail loudly, naming the
+    valid tokens — not silently fall back to the default order."""
+    monkeypatch.setenv("REPRO_KV_SHARD_PRIORITY", "heads,bogus")
+    with pytest.raises(ValueError, match=r"'heads', 'cap', 'dh'"):
+        shardings._kv_priority()
+    with pytest.raises(ValueError, match=r"invalid token ''"):
+        monkeypatch.setenv("REPRO_KV_SHARD_PRIORITY", "heads,,dh")
+        shardings._kv_priority()
+    # whitespace around tokens is tolerated
+    monkeypatch.setenv("REPRO_KV_SHARD_PRIORITY", "heads , dh")
+    assert shardings._kv_priority() == (0, 2)
+
+
+def test_serving_cache_specs_keep_capacity_local():
+    """serving=True: the model axis follows the priority chain with 'cap'
+    removed — C stays shard-local even when the env order prefers it."""
+    import os
+    cfg = get_arch("qwen2.5-32b")
+    model = build_model(cfg)
+    from repro.configs import get_shape
+    shape = get_shape("decode_32k")
+    pol = make_policy("lethe", capacity=4096)
+    st = specs.decode_state_sds(model, shape, pol)
+    old = os.environ.get("REPRO_KV_SHARD_PRIORITY")
+    os.environ["REPRO_KV_SHARD_PRIORITY"] = "cap,heads,dh"
+    try:
+        spec = shardings.state_specs(st, cfg, MESH, shape.global_batch,
+                                     serving=True)
+    finally:
+        if old is None:
+            del os.environ["REPRO_KV_SHARD_PRIORITY"]
+        else:
+            os.environ["REPRO_KV_SHARD_PRIORITY"] = old
+    kspec = spec.k if not isinstance(spec, dict) else spec["kv"].k
+    assert kspec[3] is None                      # C never sharded
+    assert "model" not in (kspec[3],)
+    sspec = spec.score if not isinstance(spec, dict) else spec["kv"].score
+    assert sspec[2] is None                      # score's C axis local too
+
+
 def test_long500k_sequence_parallel():
     cfg = get_arch("qwen2.5-32b")
     model = build_model(cfg)
