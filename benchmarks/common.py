@@ -35,6 +35,10 @@ RECALL = pipeline.RecallConfig(n_values=16, n_pairs=4, filler_steps=12,
 TRAIN_STEPS = {"reasoning": 1200, "recall": 1200}
 
 POLICY_GRID = ("fullkv", "h2o", "streaming", "pyramidkv", "lethe")
+# The paper grid plus the decode-time eviction rivals (LazyEviction, G-KV):
+# the quality regression surface benchmarks/policy_quality.py sweeps.
+PRUNING_FAMILIES = ("h2o", "streaming", "pyramidkv", "lethe",
+                    "lazyeviction", "gkv")
 
 
 def bench_arch(vocab_size: int):
@@ -45,13 +49,19 @@ def bench_arch(vocab_size: int):
         d_ff=256, vocab_size=vocab_size)
 
 
-def make_policy_for(kind: str, capacity: int) -> PolicyConfig:
+def make_policy_for(kind: str, capacity: int, **kw) -> PolicyConfig:
     # gamma/sparse_ratio tuned on the recall task (see EXPERIMENTS.md):
     # aggressive decay (gamma=0.95) forgets long-range keys; near-1 decay
     # approaches H2O. 0.995/τ=20 balances CoT recency vs recall retention.
-    return make_policy(kind, capacity=capacity, sink_len=4,
-                       sparse_ratio=20.0, recent_ratio=0.3,
-                       target_fill=0.6, gamma=1.0 if kind == "h2o" else 0.995)
+    # H2O and G-KV accumulate undecayed mass (γ=1; G-KV age-normalises at
+    # decide time instead of decaying).
+    kw.setdefault("sink_len", 4)
+    kw.setdefault("sparse_ratio", 20.0)
+    kw.setdefault("recent_ratio", 0.3)
+    kw.setdefault("target_fill", 0.6)
+    kw.setdefault("gamma", 1.0 if kind in ("h2o", "gkv") else 0.995)
+    kw.setdefault("lag_window", max(8, capacity // 4))
+    return make_policy(kind, capacity=capacity, **kw)
 
 
 def train_model(task: str = "reasoning", steps_n: int | None = None,

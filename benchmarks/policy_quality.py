@@ -1,0 +1,204 @@
+"""Reasoning-quality gate: every pruning family vs FullKV on held-out
+long-generation continuations.
+
+The harness "Hold Onto That Thought" (arXiv 2512.12008) argues for: a FullKV
+engine greedy-generates a long CoT continuation from a held-out reasoning
+prompt, then every pruning family teacher-force-decodes the *same*
+continuation through its pruned cache at a matched cache budget. Three
+quality metrics per (family, kv_format) cell:
+
+  * ``agreement``  — fraction of continuation positions where the family's
+    greedy argmax matches the FullKV continuation token (per-token
+    agreement; FullKV scores 1.0 on its own continuation by greedy
+    self-consistency, which doubles as a harness sanity gate);
+  * ``kl``         — mean KL(FullKV || family) of the next-token
+    distributions over the continuation (logit divergence);
+  * ``delta_nll``  — mean extra nats the family pays on the continuation
+    tokens vs FullKV (perplexity-style: exp(delta_nll) is the ppl ratio).
+
+Families are matched *within* a kv_format: the int8 grid is scored against
+the int8 FullKV reference so quantization error never masquerades as
+pruning error. ``cache_bytes`` records the physical per-cell cache cost so
+rows are comparable across formats at matched bytes.
+
+Modes:
+  * full (default): trained tiny reasoning model (cached under
+    experiments/), binding budgets, writes the ``quality`` section of
+    experiments/BENCH_policy_quality.json.
+  * ``--tiny``: the CI gate. Random-init weights, two sweeps:
+      1. non-binding budgets (recent window >= context): every family must
+         agree 1.0 with FullKV — the whole-grid differential correctness
+         gate (pruning that never fires must be exact, bf16 AND int8);
+      2. binding budgets: every cell must produce finite metrics.
+    Writes the ``tiny`` section and exits non-zero on gate failure.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from common import (CACHE_DIR, PRUNING_FAMILIES, REASONING, bench_arch,
+                    device_topology, kl_vs_reference, make_policy_for,
+                    merge_json_section, teacher_forced_decode, train_model)
+from repro.core.policy import make_policy
+from repro.data import pipeline
+from repro.models.api import build_model
+from repro.serving.engine import Engine, _cache_stats
+
+KV_FORMATS = ("bf16", "int8")
+OUT = os.path.join(CACHE_DIR, "BENCH_policy_quality.json")
+
+
+def held_out_prompt(batch_size: int, prompt_len: int, seed: int = 77_000):
+    """Held-out CoT prefix (seed far from the training stream): the model
+    continues the modular-arithmetic chain from mid-reasoning."""
+    dcfg = REASONING
+    b = pipeline.reasoning_batch(dcfg, seed)
+    toks = np.asarray(b["tokens"])[:batch_size]
+    return jnp.asarray(toks[:, :prompt_len])
+
+
+def family_policy(kind: str, capacity: int, kv_format: str,
+                  non_binding: bool):
+    if non_binding:
+        # recent window covers the whole budget -> nothing is ever evicted
+        # (every keep-rule retains the full valid set); budgets stay above
+        # any occupancy this run reaches, so prune triggers never fire.
+        return make_policy_for(kind, capacity, kv_format=kv_format,
+                               recent_ratio=1.0, target_fill=0.75)
+    return make_policy_for(kind, capacity, kv_format=kv_format)
+
+
+def score_grid(model, params, *, prompt_len: int, gen: int, batch: int,
+               cap_family: int, cap_full: int, non_binding: bool) -> dict:
+    """One (families x kv_formats) sweep -> metric cells."""
+    prompt = held_out_prompt(batch, prompt_len)
+    grid = {}
+    for fmt in KV_FORMATS:
+        ref_pol = make_policy(
+            "fullkv", capacity=cap_full, sink_len=4, kv_format=fmt)
+        eng = Engine(model, params, ref_pol)
+        ref = eng.generate({"tokens": prompt}, gen)
+        tokens = jnp.concatenate(
+            [prompt, jnp.asarray(ref.tokens)], axis=1)      # [B, S+G]
+
+        cells = {}
+        for kind in ("fullkv",) + PRUNING_FAMILIES:
+            cap = cap_full if kind == "fullkv" else cap_family
+            pol = (ref_pol if kind == "fullkv"
+                   else family_policy(kind, cap, fmt, non_binding))
+            logits = teacher_forced_decode(
+                model, params, pol, tokens, prompt_len)      # [G, B, V]
+            logp = np.asarray(jax.nn.log_softmax(logits))
+            if kind == "fullkv":
+                ref_logp = logp
+            cont = np.asarray(tokens[:, prompt_len:]).T      # [G, B]
+            pred = logp.argmax(-1)
+            nll = -np.take_along_axis(
+                logp, cont[..., None], axis=-1).mean()
+            ref_nll = -np.take_along_axis(
+                ref_logp, cont[..., None], axis=-1).mean()
+            _, state = model.prefill(
+                params, {"tokens": tokens[:, :prompt_len]}, pol)
+            cells[kind] = {
+                "capacity": cap,
+                "cache_bytes": int(_cache_stats(state)["cache_bytes"]),
+                "agreement": float((pred == cont).mean()),
+                "kl": kl_vs_reference(
+                    logp.reshape(-1, logp.shape[-1]),
+                    ref_logp.reshape(-1, ref_logp.shape[-1])),
+                "delta_nll": float(nll - ref_nll),
+            }
+            print(f"  [{fmt}] {kind:>12s}: agree={cells[kind]['agreement']:.3f} "
+                  f"kl={cells[kind]['kl']:.4f} "
+                  f"dnll={cells[kind]['delta_nll']:+.4f} "
+                  f"bytes={cells[kind]['cache_bytes']}")
+        grid[fmt] = cells
+    return grid
+
+
+def check_gates(grid: dict, *, non_binding: bool) -> list[str]:
+    fails = []
+    for fmt, cells in grid.items():
+        for kind, m in cells.items():
+            if not all(np.isfinite([m["agreement"], m["kl"],
+                                    m["delta_nll"]])):
+                fails.append(f"{fmt}/{kind}: non-finite metrics {m}")
+            if not 0.0 <= m["agreement"] <= 1.0:
+                fails.append(f"{fmt}/{kind}: agreement out of range {m}")
+        if cells["fullkv"]["agreement"] != 1.0:
+            fails.append(f"{fmt}/fullkv: greedy self-consistency broken "
+                         f"(agreement={cells['fullkv']['agreement']})")
+        if non_binding:
+            for kind, m in cells.items():
+                if m["agreement"] != 1.0 or m["kl"] > 1e-5:
+                    fails.append(
+                        f"{fmt}/{kind}: non-binding budget must be exact "
+                        f"(agreement={m['agreement']}, kl={m['kl']})")
+    return fails
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI gate: random-init weights, non-binding "
+                         "exactness sweep + binding finiteness sweep")
+    ap.add_argument("--gen", type=int, default=None,
+                    help="continuation length (default 40 full / 12 tiny)")
+    args = ap.parse_args()
+
+    if args.tiny:
+        cfg = bench_arch(REASONING.vocab_size)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        gen = args.gen or 12
+        prompt_len, batch = 16, 4
+        print("== tiny gate 1/2: non-binding budgets (must be exact) ==")
+        g_exact = score_grid(model, params, prompt_len=prompt_len, gen=gen,
+                             batch=batch, cap_family=128, cap_full=128,
+                             non_binding=True)
+        print("== tiny gate 2/2: binding budgets (must be finite) ==")
+        g_bind = score_grid(model, params, prompt_len=prompt_len, gen=gen,
+                            batch=batch, cap_family=24, cap_full=64,
+                            non_binding=False)
+        fails = (check_gates(g_exact, non_binding=True)
+                 + check_gates(g_bind, non_binding=False))
+        merge_json_section(OUT, "tiny", {
+            "config": {"prompt_len": prompt_len, "gen": gen, "batch": batch,
+                       "trained": False, "device": device_topology()},
+            "non_binding": g_exact, "binding": g_bind,
+            "gate": "pass" if not fails else fails})
+        for f in fails:
+            print("GATE FAIL:", f)
+        print("tiny policy-quality gate:", "PASS" if not fails else "FAIL")
+        return 1 if fails else 0
+
+    model, params = train_model("reasoning")
+    gen = args.gen or 40
+    prompt_len, batch = 20, 8
+    print("== policy quality grid (trained model, binding budgets) ==")
+    grid = score_grid(model, params, prompt_len=prompt_len, gen=gen,
+                      batch=batch, cap_family=32, cap_full=96,
+                      non_binding=False)
+    fails = check_gates(grid, non_binding=False)
+    merge_json_section(OUT, "quality", {
+        "config": {"prompt_len": prompt_len, "gen": gen, "batch": batch,
+                   "trained": True, "cap_family": 32, "cap_full": 96,
+                   "device": device_topology()},
+        "grid": grid,
+        "gate": "pass" if not fails else fails})
+    for f in fails:
+        print("GATE FAIL:", f)
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

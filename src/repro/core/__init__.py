@@ -2,25 +2,27 @@
 
 Public API:
   policy     — unified PolicyConfig for {fullkv, lethe, h2o, streaming,
-               pyramidkv}
+               pyramidkv, lazyeviction, gkv}
   cache      — fixed-capacity slotted KV cache pytree + append/compaction
   sparsity   — Hoyer sparsity (Eq. 1) + layerwise budget allocator
   pruning    — Algorithm 1 breakpoint + keep rules + prune rounds
   rasr       — Eq. 5 recency-aware score maintenance
 """
-from repro.core.policy import (FULLKV, H2O, LETHE, PYRAMIDKV, STREAMING,
-                               PolicyConfig, make_policy)
+from repro.core.policy import (FULLKV, GKV, H2O, LAZYEVICTION, LETHE,
+                               PYRAMIDKV, STREAMING, PolicyConfig,
+                               make_policy)
 from repro.core.cache import KVCache, init_cache
 from repro.core.sparsity import (allocate_budgets, hoyer_sparsity,
                                  layer_sparsity_from_probs,
                                  update_sparsity_ema)
 from repro.core.pruning import algorithm1_breakpoint, prune_layer
-from repro.core.rasr import prefill_scores, update_scores
+from repro.core.rasr import global_scores, prefill_scores, update_scores
 
 __all__ = [
-    "FULLKV", "H2O", "LETHE", "PYRAMIDKV", "STREAMING",
+    "FULLKV", "GKV", "H2O", "LAZYEVICTION", "LETHE", "PYRAMIDKV",
+    "STREAMING",
     "PolicyConfig", "make_policy", "KVCache", "init_cache",
     "allocate_budgets", "hoyer_sparsity", "layer_sparsity_from_probs",
     "update_sparsity_ema", "algorithm1_breakpoint", "prune_layer",
-    "prefill_scores", "update_scores",
+    "global_scores", "prefill_scores", "update_scores",
 ]

@@ -1,9 +1,12 @@
 """Unified cache-management policy configuration.
 
 All five methods of the paper's evaluation grid — FullKV, H2O, StreamingLLM,
-PyramidKV and Lethe — are expressed through one ``PolicyConfig`` so that the
-cache/compaction machinery is shared ("all baselines are re-implemented within
-a unified framework", §Experimental Setup).
+PyramidKV and Lethe — plus the decode-time eviction rivals LazyEviction
+(arXiv 2506.15969, lagged eviction with an observation window) and G-KV
+(arXiv 2512.00504, age-normalised global-attention scoring) are expressed
+through one ``PolicyConfig`` so that the cache/compaction machinery is shared
+("all baselines are re-implemented within a unified framework",
+§Experimental Setup).
 
 Paper-hyperparameter mapping:
   * ``sparse_ratio`` (paper default 400)  -> ``sparse_ratio`` = τ of Eq. 4 /
@@ -15,15 +18,17 @@ Paper-hyperparameter mapping:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, fields, replace
 
 FULLKV = "fullkv"
 LETHE = "lethe"
 H2O = "h2o"
 STREAMING = "streaming"
 PYRAMIDKV = "pyramidkv"
+LAZYEVICTION = "lazyeviction"
+GKV = "gkv"
 
-KINDS = (FULLKV, LETHE, H2O, STREAMING, PYRAMIDKV)
+KINDS = (FULLKV, LETHE, H2O, STREAMING, PYRAMIDKV, LAZYEVICTION, GKV)
 
 # KV-cache storage formats. "bf16" = dense: K/V stored at the engine's
 # ``cache_dtype`` (bf16 on TPU, f32 in the CPU tests) — the pre-quantization
@@ -49,10 +54,16 @@ class PolicyConfig:
     # PyramidKV schedule endpoints as fractions of nominal budget
     pyramid_top_ratio: float = 0.4
     pyramid_bottom_ratio: float = 1.6
+    # LazyEviction: extra decode steps a row observes past its budget before
+    # the lagged eviction actually fires (arXiv 2506.15969).
+    lag_window: int = 64
     kv_format: str = "bf16"      # KV storage format (see KV_FORMATS)
 
     def __post_init__(self):
-        assert self.kind in KINDS, self.kind
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"unknown policy kind {self.kind!r}; valid kinds are "
+                f"{', '.join(KINDS)}")
         if self.kv_format not in KV_FORMATS:
             raise ValueError(
                 f"unknown kv_format {self.kv_format!r}; "
@@ -82,6 +93,12 @@ class PolicyConfig:
 
 
 def fullkv(capacity: int, **kw) -> PolicyConfig:
+    field_names = {f.name for f in fields(PolicyConfig)}
+    unknown = sorted(set(kw) - field_names)
+    if unknown:
+        raise ValueError(
+            f"unknown PolicyConfig field(s) for fullkv(): {unknown}; "
+            f"valid fields are {sorted(field_names)}")
     kw = {k: v for k, v in kw.items()       # rest is irrelevant to FullKV
           if k in ("sink_len", "obs_window", "kv_format")}
     return PolicyConfig(kind=FULLKV, capacity=capacity, **kw)
@@ -106,14 +123,39 @@ def pyramidkv(capacity: int = 1024, **kw) -> PolicyConfig:
     return PolicyConfig(kind=PYRAMIDKV, capacity=capacity, **kw)
 
 
+def lazyeviction(capacity: int = 1024, **kw) -> PolicyConfig:
+    # Lagged eviction: when a row first reaches its budget it keeps
+    # everything and opens a ``lag_window``-step observation phase so that
+    # recurring reasoning tokens can regain score before the (heavy-hitter)
+    # eviction actually fires (arXiv 2506.15969).
+    return PolicyConfig(kind=LAZYEVICTION, capacity=capacity, **kw)
+
+
+def gkv(capacity: int = 1024, **kw) -> PolicyConfig:
+    # G-KV scores tokens by *global* attention mass: undecayed accumulation
+    # (γ=1 through the kernel epilogue's Eq. 5 path), age-normalised at
+    # decide time so old tokens are not favoured merely for having been
+    # observed longer (arXiv 2512.00504).
+    kw.setdefault("gamma", 1.0)
+    return PolicyConfig(kind=GKV, capacity=capacity, **kw)
+
+
 PRESETS = {
     FULLKV: fullkv,
     LETHE: lethe,
     H2O: h2o,
     STREAMING: streaming,
     PYRAMIDKV: pyramidkv,
+    LAZYEVICTION: lazyeviction,
+    GKV: gkv,
 }
 
 
 def make_policy(kind: str, capacity: int, **kw) -> PolicyConfig:
-    return PRESETS[kind](capacity, **kw)
+    try:
+        preset = PRESETS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy kind {kind!r}; valid kinds are "
+            f"{', '.join(PRESETS)}") from None
+    return preset(capacity, **kw)

@@ -27,8 +27,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cache as cache_lib
-from repro.core.policy import (FULLKV, H2O, LETHE, PYRAMIDKV, STREAMING,
-                               PolicyConfig)
+from repro.core import rasr as rasr_lib
+from repro.core.policy import (FULLKV, GKV, H2O, LAZYEVICTION, LETHE,
+                               PYRAMIDKV, STREAMING, PolicyConfig)
 
 _EPS = 1e-9
 _NEG = -jnp.inf
@@ -140,22 +141,49 @@ def decide_row(scores: jax.Array, pos: jax.Array, length: jax.Array,
 
     kind = policy.kind
     # THE single sort of the prune round: slot ids by window-masked score,
-    # descending, ties broken by slot index (stable argsort).
-    sort_scores = jnp.where(valid_w, masked_scores, _NEG)
+    # descending, ties broken by slot index (stable argsort). G-KV ranks on
+    # the age-normalised global score instead of the raw RASR accumulator
+    # (the kind is static, so only one of the two rankings is ever traced).
+    if kind == GKV:
+        rank_base = rasr_lib.global_scores(masked_scores, pos, cur_pos)
+    else:
+        rank_base = masked_scores
+    sort_scores = jnp.where(valid_w, rank_base, _NEG)
     order = jnp.argsort(-sort_scores).astype(jnp.int32)
 
-    breakpoint = jnp.full((), -1, jnp.int32)
-    if kind == STREAMING:
-        keep = protected & valid_w
-        new_evict = budget
-    elif kind in (H2O, PYRAMIDKV):
+    def _heavy_hitter_keep():
         # heavy-hitter top-k within (budget - protected count)
         n_protected = jnp.sum(protected & valid_w)
         n_hh = jnp.maximum(budget - n_protected, 0)
         candidates = valid_w & ~protected
         heavy = candidates & (_subset_ranks(order, candidates) < n_hh)
-        keep = (protected | heavy) & valid_w
+        return (protected | heavy) & valid_w
+
+    breakpoint = jnp.full((), -1, jnp.int32)
+    if kind == STREAMING:
+        keep = protected & valid_w
         new_evict = budget
+    elif kind in (H2O, PYRAMIDKV, GKV):
+        keep = _heavy_hitter_keep()
+        new_evict = budget
+    elif kind == LAZYEVICTION:
+        # Lagged eviction (arXiv 2506.15969). The observation phase is
+        # encoded in the existing per-row (budget, evict_at) pair — no new
+        # pytree leaf, so preemption/prefix-store/mesh snapshots carry it
+        # for free. Trigger with evict_at <= budget = the row just reached
+        # its budget: DEFER — keep everything and push evict_at out by
+        # ``lag_window`` decode steps while the score EMA keeps observing
+        # (recurring reasoning tokens regain rank). Trigger with
+        # evict_at > budget = the observation window (or the 15/16·C
+        # capacity backstop) expired: evict down to budget by the
+        # heavy-hitter rule and re-arm the observation flag.
+        observing = evict_at <= budget
+        keep = jnp.where(observing, valid_w, _heavy_hitter_keep())
+        lag = max(int(policy.lag_window), 1)
+        new_evict = jnp.where(
+            observing,
+            jnp.clip(evict_at + lag, 1, policy.capacity),
+            budget).astype(jnp.int32)
     elif kind == LETHE:
         bp, salient = algorithm1_breakpoint(
             sort_scores, length, n_segments=policy.n_segments,

@@ -37,6 +37,22 @@ def update_scores(layer: cache_lib.KVCache, probsum: jax.Array,
     return dataclasses.replace(layer, score=new_score)
 
 
+def global_scores(score: jax.Array, pos: jax.Array,
+                  cur_pos: jax.Array) -> jax.Array:
+    """G-KV decide-time ranking: age-normalised global attention mass.
+
+    G-KV (arXiv 2512.00504) accumulates *undecayed* attention mass — the
+    γ=1 special case of the Eq. 5 EMA, so the kernel epilogue needs no new
+    knob — but a raw running sum favours old tokens simply for having been
+    scored on more decode steps. Dividing each token's accumulated mass by
+    its observation age (steps since it entered the context) yields its mean
+    per-step attention share, the global score the keep-rule ranks on.
+    Invalid slots (pos < 0) are passed through; callers mask them anyway.
+    """
+    age = jnp.maximum(cur_pos - pos + 1, 1).astype(jnp.float32)
+    return score / age
+
+
 def prefill_scores(colsums: jax.Array, obs_window: int) -> jax.Array:
     """Initial RASR scores from prefill observation-window column sums.
 

@@ -69,9 +69,12 @@ def allocate_budgets(sparsity: jax.Array, *, capacity: int, nominal: int,
 
     ``sparsity``: [L] per-layer Hoyer estimates *of one request*. Denser
     layers (low sparsity) receive proportionally larger budgets; the total
-    budget is conserved at ``L * nominal`` so Lethe is iso-memory with a
-    uniform allocator. Batched callers vmap over the batch axis (see
-    ``allocate_budgets_batched``) so every serving slot gets its own
+    budget is conserved at ``L * nominal`` — exactly, whenever that total is
+    feasible within the per-layer floor/ceiling (``L*floor <= L*nominal <=
+    L*ceil``) — so Lethe is iso-memory with a uniform allocator. When the
+    total is infeasible every layer saturates at the violated bound (the
+    nearest achievable allocation). Batched callers vmap over the batch axis
+    (see ``allocate_budgets_batched``) so every serving slot gets its own
     allocation — budget conservation is per request, exactly as in the
     single-request paper setting.
 
@@ -91,7 +94,21 @@ def allocate_budgets(sparsity: jax.Array, *, capacity: int, nominal: int,
     room = jnp.where(slack >= 0, ceil - budgets, budgets - floor)
     room_total = jnp.maximum(jnp.sum(room), _EPS)
     budgets = jnp.clip(budgets + slack * room / room_total, floor, ceil)
-    return budgets.astype(jnp.int32)
+    # Exact integer conservation: the proportional pass leaves float slack
+    # and the int cast truncates, silently losing up to ~L tokens. Truncate,
+    # then hand the integer residual out deterministically in layer order —
+    # each layer absorbs as much of what is still outstanding as its
+    # floor/ceiling room allows (an exclusive cumsum of room gives every
+    # layer its share in one vectorised pass, no loop).
+    floor_i = jnp.asarray(max(min_budget, sink_len + recent_len + 1), jnp.int32)
+    ceil_i = jnp.asarray(int(capacity * 15 / 16), jnp.int32)
+    b = jnp.clip(budgets.astype(jnp.int32), floor_i, ceil_i)
+    resid = jnp.asarray(L * nominal, jnp.int32) - jnp.sum(b)
+    room_up = ceil_i - b
+    room_dn = b - floor_i
+    give = jnp.clip(resid - (jnp.cumsum(room_up) - room_up), 0, room_up)
+    take = jnp.clip(-resid - (jnp.cumsum(room_dn) - room_dn), 0, room_dn)
+    return jnp.where(resid >= 0, b + give, b - take)
 
 
 def allocate_budgets_batched(sparsity: jax.Array, **kw) -> jax.Array:

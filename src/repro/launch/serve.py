@@ -101,10 +101,13 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--policy", default="lethe",
                     choices=["fullkv", "lethe", "h2o", "streaming",
-                             "pyramidkv"])
+                             "pyramidkv", "lazyeviction", "gkv"])
     ap.add_argument("--capacity", type=int, default=64)
     ap.add_argument("--sparse-ratio", type=float, default=4.0)
     ap.add_argument("--recent-ratio", type=float, default=0.3)
+    ap.add_argument("--lag-window", type=int, default=64,
+                    help="lazyeviction: decode steps a row observes past "
+                         "its budget before the lagged eviction fires")
     ap.add_argument("--slots", type=int, default=4,
                     help="live decode slots (continuous batching width)")
     ap.add_argument("--segment-len", type=int, default=16)
@@ -154,7 +157,8 @@ def main() -> None:
 
     pol = make_policy(args.policy, capacity=args.capacity,
                       sparse_ratio=args.sparse_ratio,
-                      recent_ratio=args.recent_ratio)
+                      recent_ratio=args.recent_ratio,
+                      lag_window=args.lag_window)
     mesh = ServingMesh.build(args.mesh) if args.mesh else None
     if mesh is not None:
         print(f"mesh: {mesh.topology()}")

@@ -92,7 +92,8 @@ def test_chunk_plan_pow2_decomposition():
 # Differential: chunked == whole, bit for bit
 # --------------------------------------------------------------------------
 
-@pytest.mark.parametrize("kind", ["lethe", "h2o", "streaming"])
+@pytest.mark.parametrize("kind", ["lethe", "h2o", "streaming",
+                                  "lazyeviction", "gkv"])
 @pytest.mark.parametrize("plan", [(4, 4, 4),     # divides S=12
                                   (8, 4),        # does not divide
                                   (12,)])        # single chunk
@@ -199,7 +200,8 @@ def test_prefill_chunk_donates_carry(qwen):
 # Compression: prompts longer than capacity
 # --------------------------------------------------------------------------
 
-@pytest.mark.parametrize("kind", ["lethe", "h2o", "streaming"])
+@pytest.mark.parametrize("kind", ["lethe", "h2o", "streaming",
+                                  "lazyeviction", "gkv"])
 def test_long_prompt_compressed_prefill(qwen, kind):
     """Prompts up to 2x capacity stream through prefill-phase eviction:
     occupancy stays bounded, the sink and final tokens survive, and the

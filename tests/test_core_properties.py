@@ -169,7 +169,8 @@ def test_prune_invariants(n_valid, tau, seed):
 
 
 @SET
-@given(st.sampled_from(["h2o", "streaming", "pyramidkv", "lethe"]))
+@given(st.sampled_from(["h2o", "streaming", "pyramidkv", "lethe",
+                        "lazyeviction", "gkv"]))
 def test_all_policies_respect_protections(kind):
     lay, _ = _mk_layer(n_valid=50, seed=7)
     pol = make_policy(kind, capacity=64, sink_len=3, sparse_ratio=2.0,

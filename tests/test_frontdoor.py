@@ -101,7 +101,8 @@ def test_frontdoor_matches_solo(setup):
 # Preemption-to-host: bit-exact resume, all policies, bf16 and int8
 # --------------------------------------------------------------------------
 
-@pytest.mark.parametrize("kind", ["lethe", "h2o", "streaming"])
+@pytest.mark.parametrize("kind", ["lethe", "h2o", "streaming",
+                                  "lazyeviction", "gkv"])
 @pytest.mark.parametrize("kv_format", ["bf16", "int8"])
 def test_preempt_resume_differential(setup, kind, kv_format):
     """Forcing preemption at segment boundaries must not change a single

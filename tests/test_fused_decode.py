@@ -146,7 +146,8 @@ def _count_sorts(jaxpr) -> int:
     return n
 
 
-@pytest.mark.parametrize("kind", ["lethe", "h2o", "streaming", "pyramidkv"])
+@pytest.mark.parametrize("kind", ["lethe", "h2o", "streaming", "pyramidkv",
+                                  "lazyeviction", "gkv"])
 def test_prune_round_single_sort(kind):
     """One prune round lowers to exactly one sort over C per row: decide_row
     ranks once, every mask is cumsum-derived, compact is sort-free."""

@@ -200,7 +200,8 @@ def _tiny_setup(vocab=128):
     return cfg, model, params, toks
 
 
-@pytest.mark.parametrize("kind", ["lethe", "h2o", "streaming"])
+@pytest.mark.parametrize("kind", ["lethe", "h2o", "streaming",
+                                  "lazyeviction", "gkv"])
 def test_generate_int8_vs_dense_differential(kind):
     """Stated tolerance: int8 prefill logits within 0.08 abs of dense
     (random init, |logits| ~ O(1)), ≥ 70% greedy-token agreement over a

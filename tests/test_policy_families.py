@@ -1,0 +1,210 @@
+"""LazyEviction + G-KV policy families, and the typed policy-config errors.
+
+Unit-level coverage of the two decode-time eviction rivals added next to the
+paper grid (integration — continuous==solo, chunked==whole, int8, preempt/
+resume — rides the existing parametrized batteries):
+
+  * G-KV (arXiv 2512.00504): ranks on age-normalised *global* attention
+    mass (γ=1 accumulation / observation age), so an old token favoured by
+    raw H2O accumulation loses to a young token with a higher per-step
+    share.
+  * LazyEviction (arXiv 2506.15969): lagged two-phase eviction encoded in
+    the per-row (budget, evict_at) pair — reach budget → keep everything
+    and observe for ``lag_window`` steps → then evict by heavy-hitter rank,
+    letting recurring reasoning tokens regain score in between.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as cache_lib
+from repro.core import pruning, rasr
+from repro.core.policy import (GKV, KINDS, LAZYEVICTION, PolicyConfig,
+                               fullkv, gkv, lazyeviction, make_policy)
+
+
+# --------------------------------------------------------------------------
+# Policy config: registration + typed rejection of invalid input
+# --------------------------------------------------------------------------
+
+def test_new_kinds_registered():
+    assert LAZYEVICTION in KINDS and GKV in KINDS
+    assert make_policy("lazyeviction", 64).kind == LAZYEVICTION
+    assert make_policy("gkv", 64).kind == GKV
+    # G-KV accumulates undecayed global attention mass (γ=1 by preset)
+    assert gkv(64).gamma == 1.0
+    assert lazyeviction(64, lag_window=7).lag_window == 7
+
+
+def test_make_policy_unknown_kind_typed_error():
+    with pytest.raises(ValueError, match="valid kinds are .*lethe"):
+        make_policy("h20", 64)                      # typo'd kind
+    with pytest.raises(ValueError, match="unknown policy kind"):
+        make_policy("", 64)
+
+
+def test_policyconfig_unknown_kind_typed_error():
+    with pytest.raises(ValueError, match="unknown policy kind 'nope'"):
+        PolicyConfig(kind="nope")
+
+
+def test_fullkv_rejects_typoed_kwargs():
+    with pytest.raises(ValueError, match="snik_len"):
+        fullkv(64, snik_len=2)                      # typo must not vanish
+    # valid-but-irrelevant fields are still silently dropped ...
+    assert fullkv(64, sparse_ratio=8.0).sparse_ratio != 8.0
+    # ... while the fields FullKV does honour pass through
+    assert fullkv(64, sink_len=7).sink_len == 7
+    assert fullkv(64, kv_format="int8").kv_format == "int8"
+
+
+def test_make_policy_rejects_typoed_kwargs():
+    with pytest.raises(TypeError):
+        make_policy("lethe", 64, lag_windw=4)
+
+
+# --------------------------------------------------------------------------
+# decide_row helpers
+# --------------------------------------------------------------------------
+
+def _row(C=16, n_valid=10, base_score=0.01):
+    pos = np.full(C, -1, np.int32)
+    pos[:n_valid] = np.arange(n_valid)
+    scores = np.full(C, 0.0, np.float32)
+    scores[:n_valid] = base_score
+    return pos, scores
+
+
+def _decide(scores, pos, n_valid, policy, budget, evict_at):
+    return pruning.decide_row(
+        jnp.asarray(scores), jnp.asarray(pos), jnp.int32(n_valid),
+        jnp.int32(n_valid - 1), policy=policy,
+        budget=jnp.int32(budget), evict_at=jnp.int32(evict_at))
+
+
+# --------------------------------------------------------------------------
+# G-KV: age-normalised ranking beats raw accumulation
+# --------------------------------------------------------------------------
+
+def test_gkv_age_normalisation_flips_h2o_ranking():
+    # Token A (pos 1) is old with a big accumulated score; token B (pos 7)
+    # is young with a smaller total but a larger per-step share. With one
+    # heavy-hitter seat, H2O keeps A; G-KV keeps B.
+    pos, scores = _row(n_valid=10)
+    scores[1] = 5.0          # A: age 9 -> share 5/9 ~ 0.56
+    scores[7] = 3.0          # B: age 3 -> share 3/3 = 1.0
+    kw = dict(capacity=16, sink_len=0, recent_ratio=0.3)
+    budget = 2               # protected = last token only -> n_hh = 1
+    keep_h2o = np.asarray(_decide(
+        scores, pos, 10, make_policy("h2o", **kw), budget, budget).keep)
+    keep_gkv = np.asarray(_decide(
+        scores, pos, 10, make_policy("gkv", **kw), budget, budget).keep)
+    assert keep_h2o[1] and not keep_h2o[7]
+    assert keep_gkv[7] and not keep_gkv[1]
+    assert keep_h2o.sum() == keep_gkv.sum() == budget
+
+
+def test_gkv_global_scores_helper():
+    pos = jnp.asarray([0, 4, 9, -1])
+    score = jnp.asarray([10.0, 10.0, 10.0, 10.0])
+    g = np.asarray(rasr.global_scores(score, pos, jnp.int32(9)))
+    np.testing.assert_allclose(g[:3], [1.0, 10 / 6, 10.0])  # ages 10, 6, 1
+    assert np.isfinite(g).all()
+
+
+# --------------------------------------------------------------------------
+# LazyEviction: defer-then-evict two-phase machinery
+# --------------------------------------------------------------------------
+
+def test_lazyeviction_defers_then_evicts():
+    pol = make_policy("lazyeviction", capacity=16, sink_len=2,
+                      lag_window=4)
+    pos, scores = _row(n_valid=12)
+    scores[:12] = np.linspace(1.0, 0.1, 12)
+    budget = 6
+    # phase 1: trigger at the budget boundary -> observe, nothing evicted
+    d1 = _decide(scores, pos, 12, pol, budget, evict_at=budget)
+    assert np.asarray(d1.keep).sum() == 12
+    assert int(d1.new_evict_at) == budget + 4
+    # phase 2: the lagged trigger -> heavy-hitter eviction down to budget,
+    # observation re-armed
+    d2 = _decide(scores, pos, 12, pol, budget, evict_at=budget + 4)
+    assert np.asarray(d2.keep).sum() == budget
+    assert int(d2.new_evict_at) == budget
+
+
+def test_lazyeviction_lag_clipped_to_capacity():
+    pol = make_policy("lazyeviction", capacity=16, sink_len=2,
+                      lag_window=1000)
+    pos, scores = _row(n_valid=12)
+    d = _decide(scores, pos, 12, pol, 6, evict_at=6)
+    # the observation window cannot outrun the cache: the 15/16·C capacity
+    # backstop in prune_layer fires first
+    assert int(d.new_evict_at) == pol.capacity
+
+
+def _mk_lazy_layer(pol, n_valid, budget):
+    c = cache_lib.init_cache(n_layers=1, batch=2, n_kv_heads=2,
+                             capacity=pol.capacity, d_head=8, policy=pol,
+                             dtype=jnp.float32)
+    lay = c.layer(0)
+    key = jax.random.PRNGKey(0)
+    for t in range(n_valid):
+        kn = jax.random.normal(jax.random.fold_in(key, t), (2, 2, 8))
+        lay = cache_lib.append_token(lay, kn, kn, t, 1.0)
+    return dataclasses.replace(
+        lay, budget=jnp.full((2,), budget, jnp.int32),
+        evict_at=jnp.full((2,), budget, jnp.int32))
+
+
+def test_lazyeviction_prune_layer_sawtooth():
+    pol = make_policy("lazyeviction", capacity=16, sink_len=2,
+                      lag_window=4)
+    lay = _mk_lazy_layer(pol, n_valid=12, budget=6)
+    cur = jnp.int32(11)
+    # round 1: occupancy >= budget triggers, but eviction is deferred
+    r1 = pruning.prune_layer(lay, cur, policy=pol)
+    assert (np.asarray(r1.length) == 12).all()
+    assert (np.asarray(r1.evict_at) == 10).all()
+    # round 2: the lagged threshold fires -> compacted down to budget
+    r2 = pruning.prune_layer(r1, cur, policy=pol)
+    assert (np.asarray(r2.length) == 6).all()
+    assert (np.asarray(r2.evict_at) == 6).all()
+    # survivors keep the sinks and the most recent token
+    pos = np.asarray(r2.pos)
+    for b in range(2):
+        live = set(pos[b][pos[b] >= 0].tolist())
+        assert {0, 1, 11} <= live
+
+
+def test_lazyeviction_observation_rescues_recurring_token():
+    """The policy's reason to exist: a token that is cold when the budget
+    is first hit but re-attended during the observation window survives the
+    lagged eviction — the same scores evicted immediately (H2O) drop it."""
+    pol = make_policy("lazyeviction", capacity=16, sink_len=2,
+                      lag_window=4, gamma=1.0)
+    lay = _mk_lazy_layer(pol, n_valid=12, budget=6)
+    x = 5                                     # the recurring token's slot
+    scores = np.full((2, 16), 0.0, np.float32)
+    scores[:, :12] = np.linspace(1.0, 0.5, 12)
+    scores[:, x] = 0.01                       # cold at the budget boundary
+    lay = dataclasses.replace(lay, score=jnp.asarray(scores))
+
+    h2o_keep = np.asarray(_decide(scores[0], np.asarray(lay.pos)[0], 12,
+                                  make_policy("h2o", capacity=16,
+                                             sink_len=2),
+                                  6, 6).keep)
+    assert not h2o_keep[x]                    # immediate eviction drops it
+
+    r1 = pruning.prune_layer(lay, jnp.int32(11), policy=pol)   # deferred
+    # during the observation window the token is re-attended hard
+    bump = jnp.zeros((2, 16)).at[:, x].set(3.0)
+    r1 = rasr.update_scores(r1, bump, gamma=pol.gamma)
+    r2 = pruning.prune_layer(r1, jnp.int32(11), policy=pol)    # eviction
+    pos = np.asarray(r2.pos)
+    for b in range(2):
+        assert 5 in pos[b][pos[b] >= 0].tolist()
+        assert np.asarray(r2.length)[b] == 6

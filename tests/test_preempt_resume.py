@@ -111,7 +111,8 @@ try:
     _REQ = st.tuples(st.sampled_from(_LENS), st.integers(*_MAXNEW))
 
     @settings(max_examples=6, deadline=None)
-    @given(st.sampled_from(["lethe", "h2o", "streaming"]),
+    @given(st.sampled_from(["lethe", "h2o", "streaming",
+                            "lazyeviction", "gkv"]),
            st.lists(_REQ, min_size=2, max_size=6),
            st.sampled_from([2, 3]),
            st.integers(0, 2 ** 16),
@@ -125,7 +126,8 @@ except ImportError:                          # pragma: no cover
 
 @pytest.mark.parametrize("policy,case_seed,slots",
                          [("lethe", 0, 2), ("h2o", 1, 3),
-                          ("streaming", 2, 2), ("lethe", 3, 3)])
+                          ("streaming", 2, 2), ("lethe", 3, 3),
+                          ("lazyeviction", 4, 2), ("gkv", 5, 3)])
 def test_seeded_preempt_resume(setup, policy, case_seed, slots):
     """Deterministic fallback sweep — runs even without hypothesis."""
     rng = np.random.default_rng(case_seed)

@@ -53,13 +53,17 @@ def _solo(engine, req, eos_id=None):
 # Differential: continuous == per-request greedy, all policies, any order
 # --------------------------------------------------------------------------
 
-@pytest.mark.parametrize("kind", ["lethe", "h2o", "streaming"])
+@pytest.mark.parametrize(
+    "kind", ["lethe", "h2o", "streaming", "lazyeviction", "gkv"])
 def test_continuous_matches_solo_generate(setup, kind):
     cfg, model, params = setup
+    # lag_window small enough that lazyeviction's lagged eviction actually
+    # fires inside these short generations (only lazyeviction reads it).
     pol = make_policy(kind, capacity=24, sink_len=2, sparse_ratio=4.0,
-                      target_fill=0.5)
+                      target_fill=0.5, lag_window=4)
     eng = Engine(model, params, pol)
-    seed = {"lethe": 0, "h2o": 1, "streaming": 2}[kind]
+    seed = {"lethe": 0, "h2o": 1, "streaming": 2,
+            "lazyeviction": 3, "gkv": 4}[kind]
     reqs = _requests(cfg, [(8, 3), (12, 9), (8, 14), (12, 6), (8, 1),
                            (12, 11), (8, 7)], seed=seed)
     solo = {r.uid: _solo(eng, r) for r in reqs}

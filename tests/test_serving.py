@@ -27,9 +27,11 @@ def _prompt(cfg, B, S, seed=1):
 
 def test_generate_all_policies(setup):
     cfg, model, params = setup
-    for kind in ["fullkv", "lethe", "h2o", "streaming", "pyramidkv"]:
+    for kind in ["fullkv", "lethe", "h2o", "streaming", "pyramidkv",
+                 "lazyeviction", "gkv"]:
         cap = 96 if kind == "fullkv" else 24
-        pol = make_policy(kind, capacity=cap, sink_len=2, sparse_ratio=4.0)
+        pol = make_policy(kind, capacity=cap, sink_len=2, sparse_ratio=4.0,
+                          lag_window=4)
         eng = Engine(model, params, pol)
         res = eng.generate(_prompt(cfg, 2, 16), 12)
         assert res.tokens.shape == (2, 12)
