@@ -1,0 +1,308 @@
+"""Crash recovery: snapshot restore vs journal replay, and what the WAL
+costs while nothing is crashing.
+
+Two measurements a durability claim needs (DESIGN.md §Durability):
+
+* **Recovery-vs-replay curve** — crash the same durable run at several
+  generation-progress fractions, then recover twice from the same
+  journal: once WITH the pool checkpoints (snapshotted rows re-enter
+  through ``insert_slots``) and once with the checkpoints withheld
+  (every outstanding row re-prefills and regenerates its suppressed
+  prefix). The metric is *time until every outstanding request emits its
+  first fresh token* — the client-visible recovery gap. The later the
+  crash, the more tokens replay has to regenerate, so the snapshot
+  speedup grows with progress; the acceptance bar is >= 3x at the latest
+  crash point (asserted on the full run).
+* **Checkpoint overhead** — the same traffic with durability off vs on
+  (fsync'd journal + periodic checkpoints): wall-time overhead fraction
+  and per-checkpoint write cost. This is the row to read against
+  ``BENCH_serving_traffic.json``'s uninstrumented continuous-batching
+  numbers.
+
+Both recovered streams are asserted bitwise identical to the undisturbed
+baseline before any timing is reported — a fast recovery of wrong tokens
+is not a recovery.
+
+Emits ``experiments/BENCH_crash_recovery.json``. Standalone:
+    PYTHONPATH=src python benchmarks/crash_recovery.py [--tiny]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.models.api import build_model
+from repro.serving import durability as dur_lib
+from repro.serving.engine import Engine
+from repro.serving.frontdoor import (AdmissionConfig, FrontDoorCore,
+                                     ServeRequest)
+
+INF = float("inf")
+
+
+def _requests(n: int, prompt_len: int, max_new: int, vocab: int,
+              seed: int = 0) -> list[ServeRequest]:
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(
+        uid=i,
+        prompt=rng.integers(0, vocab, size=prompt_len).astype(np.int32),
+        max_new_tokens=max_new)
+        for i in range(n)]
+
+
+def _transparent() -> AdmissionConfig:
+    return AdmissionConfig(compress_at=INF, shed_at=INF, reject_at=INF)
+
+
+def _drain(core, streams=None):
+    while not core.idle:
+        ev, _ = core.step()
+        if streams is not None:
+            for uid, toks in ev:
+                streams.setdefault(uid, []).extend(toks)
+    return {c.uid: list(c.tokens) for c in core.completed}
+
+
+def _run_traffic(eng, reqs, *, slots, segment_len, durability=None):
+    """Closed-loop drain; returns (wall_s, {uid: tokens}, summary)."""
+    core = FrontDoorCore(eng, batch_slots=slots, segment_len=segment_len,
+                         admission=_transparent(), durability=durability)
+    core.submit(reqs)
+    t0 = time.perf_counter()
+    out = _drain(core)
+    return time.perf_counter() - t0, out, core.run_summary()
+
+
+def _crash_at_fraction(eng, reqs, root, frac, total_tokens, *, slots,
+                       segment_len, ckpt_every):
+    """Durable run crashed (SimulatedCrash at the next segment boundary)
+    once ``frac`` of the workload's tokens have been generated."""
+    d = dur_lib.Durability(dur_lib.DurabilityConfig(
+        root=root, checkpoint_every=ckpt_every))
+    core = FrontDoorCore(eng, batch_slots=slots, segment_len=segment_len,
+                         admission=_transparent(), durability=d)
+    core.submit(reqs)
+    produced = 0
+    try:
+        while not core.idle:
+            ev, _ = core.step()
+            produced += sum(len(t) for _, t in ev)
+            if produced >= frac * total_tokens:
+                d.crash_points.add("after_harvest")
+    except dur_lib.SimulatedCrash:
+        pass
+    assert dur_lib.list_checkpoints(root), \
+        "crash landed before any pool checkpoint committed"
+    return produced
+
+
+def _timed_recovery(eng, root, base, *, slots, segment_len) -> dict:
+    """Recover and report the client-visible gap: wall until EVERY
+    outstanding uid emits its first fresh (post-watermark) token, then
+    drain and assert the assembled streams match the baseline bitwise."""
+    t0 = time.perf_counter()
+    core, report = dur_lib.recover(eng, root, batch_slots=slots,
+                                   segment_len=segment_len,
+                                   admission=_transparent())
+    recover_call_s = time.perf_counter() - t0
+    outstanding = {u for u in base
+                   if u not in report["finished"]}
+    streams = {u: list(t) for u, t in report["durable_tokens"].items()}
+    waiting = set(outstanding)
+    first_fresh_s = None
+    while not core.idle:
+        ev, _ = core.step()
+        for uid, toks in ev:
+            streams.setdefault(uid, []).extend(toks)
+            waiting.discard(uid)
+        if not waiting and first_fresh_s is None:
+            first_fresh_s = time.perf_counter() - t0
+    for c in core.completed:        # finished while queued (edge): count
+        waiting.discard(c.uid)
+    total_s = time.perf_counter() - t0
+    if first_fresh_s is None:
+        first_fresh_s = total_s
+    for u, toks in base.items():    # correctness before timing is quoted
+        np.testing.assert_array_equal(
+            streams.get(u, []), toks,
+            err_msg=f"recovered stream diverged for uid {u}")
+    return {
+        "recover_call_s": recover_call_s,
+        "time_to_all_fresh_s": first_fresh_s,
+        "total_s": total_s,
+        "resumed_from_checkpoint": report["resumed_from_checkpoint"],
+        "replayed_from_prompt": report["replayed_from_prompt"],
+        "outstanding": report["outstanding"],
+    }
+
+
+def benchmark(*, tiny: bool = False, out_path: str | None = None,
+              csv: common.CsvOut | None = None) -> dict:
+    # single wave (n_req == slots): every request stays live from admit to
+    # crash, so checkpoints always hold the full pool and the staleness
+    # gap resume must regenerate is bounded by ckpt_every segments — the
+    # clean contrast against replay's frac*max_new regeneration
+    if tiny:
+        cfg, capacity = common.bench_arch(512), 32
+        slots, segment_len, prompt_len, max_new, n_req = 2, 4, 16, 32, 2
+        fracs = (0.5, 0.75)
+    else:
+        cfg, capacity = common.bench_arch(512), 64
+        slots, segment_len, prompt_len, max_new, n_req = 4, 8, 32, 96, 4
+        fracs = (0.25, 0.5, 0.75)
+    ckpt_every = 2
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pol = common.make_policy_for("lethe", capacity)
+    eng = Engine(model, params, pol)
+    reqs = _requests(n_req, prompt_len, max_new, cfg.vocab_size)
+    total_tokens = n_req * max_new
+
+    work = tempfile.mkdtemp(prefix="bench_crash_")
+    results: dict = {"config": {
+        "device_topology": common.device_topology(),
+        "tiny": tiny, "policy": "lethe", "capacity": capacity,
+        "kv_format": pol.kv_format, "slots": slots,
+        "segment_len": segment_len, "prompt_len": prompt_len,
+        "max_new": max_new, "n_requests": n_req,
+        "checkpoint_every": ckpt_every,
+        "n_layers": cfg.n_layers, "d_model": cfg.d_model,
+    }}
+    try:
+        # ---- checkpoint overhead: durability off vs on ------------------
+        # (first run doubles as compile warmup; measure the second pair)
+        _run_traffic(eng, reqs, slots=slots, segment_len=segment_len)
+        plain_s, base, _ = _run_traffic(eng, reqs, slots=slots,
+                                        segment_len=segment_len)
+        dur_root = os.path.join(work, "overhead")
+        dur_s, dur_out, dur_sum = _run_traffic(
+            eng, reqs, slots=slots, segment_len=segment_len,
+            durability=dur_lib.DurabilityConfig(root=dur_root,
+                                                checkpoint_every=ckpt_every))
+        for u, toks in base.items():
+            np.testing.assert_array_equal(dur_out[u], toks)
+        ds = dur_sum["durability"]
+        results["checkpoint_overhead"] = {
+            "plain_wall_s": plain_s,
+            "durable_wall_s": dur_s,
+            "overhead_frac": dur_s / max(plain_s, 1e-9) - 1.0,
+            "plain_tok_s": total_tokens / max(plain_s, 1e-9),
+            "durable_tok_s": total_tokens / max(dur_s, 1e-9),
+            "journal_appends": ds["journal_appends"],
+            "checkpoints_written": ds["checkpoints_written"],
+            "checkpoint_mean_s": ds["checkpoint_seconds_mean"],
+        }
+        oh = results["checkpoint_overhead"]
+        print(f"  [crash_recovery] WAL+checkpoint overhead: "
+              f"{oh['overhead_frac'] * 100:.1f}% "
+              f"({oh['durable_tok_s']:.1f} vs {oh['plain_tok_s']:.1f} "
+              f"tok/s; {oh['checkpoints_written']} ckpts @ "
+              f"{oh['checkpoint_mean_s'] * 1e3:.1f}ms)", flush=True)
+        if csv is not None:
+            csv.add("crash_recovery/overhead",
+                    1e6 * oh["checkpoint_mean_s"],
+                    f"overhead_frac={oh['overhead_frac']:.3f}")
+
+        # ---- recovery-vs-replay curve -----------------------------------
+        # warm BOTH recovery paths on a throwaway crash first: snapshot
+        # resume compiles insert_slots + suppressed-resume programs on
+        # first use, and charging that one-time cost to a timed cell
+        # would make resume look slower than replay
+        warm_root = os.path.join(work, "warm")
+        _crash_at_fraction(eng, reqs, warm_root, fracs[0], total_tokens,
+                           slots=slots, segment_len=segment_len,
+                           ckpt_every=ckpt_every)
+        warm_replay = os.path.join(work, "warm_replay")
+        os.makedirs(warm_replay)
+        shutil.copy(os.path.join(warm_root, dur_lib.JOURNAL_NAME),
+                    os.path.join(warm_replay, dur_lib.JOURNAL_NAME))
+        _timed_recovery(eng, warm_root, base, slots=slots,
+                        segment_len=segment_len)
+        _timed_recovery(eng, warm_replay, base, slots=slots,
+                        segment_len=segment_len)
+
+        results["recovery"] = {}
+        for frac in fracs:
+            root = os.path.join(work, f"crash{int(frac * 100)}")
+            produced = _crash_at_fraction(
+                eng, reqs, root, frac, total_tokens, slots=slots,
+                segment_len=segment_len, ckpt_every=ckpt_every)
+            # replay-root: same journal, checkpoints withheld — recovery
+            # must fall back to re-prefill + watermark-suppressed decode
+            replay_root = os.path.join(work, f"replay{int(frac * 100)}")
+            os.makedirs(replay_root)
+            shutil.copy(os.path.join(root, dur_lib.JOURNAL_NAME),
+                        os.path.join(replay_root, dur_lib.JOURNAL_NAME))
+            resume = _timed_recovery(eng, root, base, slots=slots,
+                                     segment_len=segment_len)
+            replay = _timed_recovery(eng, replay_root, base, slots=slots,
+                                     segment_len=segment_len)
+            assert resume["resumed_from_checkpoint"] > 0, resume
+            assert replay["resumed_from_checkpoint"] == 0, replay
+            speedup = (replay["time_to_all_fresh_s"]
+                       / max(resume["time_to_all_fresh_s"], 1e-9))
+            results["recovery"][f"{frac:g}"] = {
+                "crash_fraction": frac,
+                "tokens_before_crash": produced,
+                "snapshot_resume": resume,
+                "journal_replay": replay,
+                "restore_speedup": speedup,
+            }
+            print(f"  [crash_recovery] crash@{frac:g}: resume "
+                  f"{resume['time_to_all_fresh_s'] * 1e3:.0f}ms "
+                  f"(resumed={resume['resumed_from_checkpoint']}) vs "
+                  f"replay {replay['time_to_all_fresh_s'] * 1e3:.0f}ms "
+                  f"-> {speedup:.1f}x", flush=True)
+            if csv is not None:
+                csv.add(f"crash_recovery/crash{frac:g}",
+                        1e6 * resume["time_to_all_fresh_s"],
+                        f"speedup={speedup:.2f}")
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+    last = results["recovery"][f"{fracs[-1]:g}"]
+    results["restore_speedup_at_latest_crash"] = last["restore_speedup"]
+    if not tiny:
+        # the durability claim: restoring a late-progress pool from its
+        # snapshot beats regenerating it from the journal by >= 3x
+        assert last["restore_speedup"] >= 3.0, last
+    out_path = out_path or os.path.join(common.CACHE_DIR,
+                                        "BENCH_crash_recovery.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"  [crash_recovery] wrote {out_path}", flush=True)
+    return results
+
+
+def run(csv: common.CsvOut) -> None:
+    """benchmarks/run.py suite hook."""
+    benchmark(tiny=False, csv=csv)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 2 crash points on the tiny bench arch")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    res = benchmark(tiny=args.tiny, out_path=args.out)
+    print(f"restore speedup at latest crash point: "
+          f"{res['restore_speedup_at_latest_crash']:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

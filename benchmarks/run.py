@@ -13,9 +13,10 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks import (ablation_ratios, common, fig1_sparsity, fig4_scaling,
-                        kernels_micro, serving_traffic, table1_accuracy,
-                        table2_memory, table3_throughput)
+from benchmarks import (ablation_ratios, common, crash_recovery,
+                        fig1_sparsity, fig4_scaling, kernels_micro,
+                        serving_traffic, table1_accuracy, table2_memory,
+                        table3_throughput)
 
 SUITES = {
     "table1": table1_accuracy.run,
@@ -26,6 +27,7 @@ SUITES = {
     "ablation": ablation_ratios.run,
     "kernels": kernels_micro.run,
     "serving": serving_traffic.run,
+    "crash": crash_recovery.run,
 }
 
 

@@ -1,6 +1,16 @@
 """Minimal pytree checkpointing (npz + structure manifest) — no orbax in
 this environment. Handles nested dict/list/tuple/NamedTuple pytrees of
-jnp/np arrays plus scalar leaves."""
+jnp/np arrays plus scalar leaves.
+
+Also the *bit-exact* pack/unpack pair the durability layer and the prefix
+store share (``pack_bitexact``/``unpack_bitexact``): numpy's npz format
+preserves the raw bytes of extension dtypes (ml_dtypes bfloat16) but
+degrades their dtype to an opaque void on load, so packing records every
+leaf's dtype name and unpacking view-casts the loaded bytes back. The
+round trip is the identity on bit patterns — which is what lets a slot
+snapshot (``cache.extract_slots``) go to disk and come back through
+``cache.insert_slots`` bitwise unchanged, the property the crash-recovery
+checkpoints rest on."""
 from __future__ import annotations
 
 import json
@@ -60,6 +70,79 @@ def restore(path: str, tree_like):
                       if hasattr(leaf, "dtype") else arr.item())
     treedef = jax.tree_util.tree_structure(tree_like)
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# --------------------------------------------------------------------------
+# Bit-exact pytree (de)serialization — shared by serving/durability.py
+# (pool checkpoints) and serving/prefix_cache.py (store persistence).
+# --------------------------------------------------------------------------
+
+def _resolve_dtype(name: str) -> np.dtype:
+    """Dtype by name, resolving ml_dtypes extension dtypes (bfloat16,
+    float8_*, ...) that plain ``np.dtype(name)`` does not know."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def pack_bitexact(tree, prefix: str = "") -> tuple[dict, dict]:
+    """Flatten a (numpy or jax) pytree into npz-storable arrays plus a
+    JSON-safe meta block recording key order and true dtype names. ``None``
+    leaves (e.g. the dense path's absent k_scale) are recorded in the meta
+    and skipped. ``prefix`` namespaces the keys so several trees can share
+    one npz."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays: dict[str, np.ndarray] = {}
+    keys, dtypes = [], []
+    for path, leaf in flat:
+        key = prefix + "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        keys.append(key)
+        dtypes.append(arr.dtype.name)
+        arrays[key] = arr
+    return arrays, {"keys": keys, "dtypes": dtypes, "prefix": prefix}
+
+
+def unpack_bitexact(arrays, meta: dict, tree_like):
+    """Rebuild the tree packed by ``pack_bitexact`` into the structure of
+    ``tree_like`` (a shape/structure donor with the same leaf paths, e.g. a
+    fresh ``extract_slots`` of an empty state). Loaded bytes are view-cast
+    back to their recorded dtypes, so the round trip is bitwise."""
+    by_key = dict(zip(meta["keys"], meta["dtypes"]))
+    prefix = meta.get("prefix", "")
+    flat_like = jax.tree_util.tree_flatten_with_path(tree_like)[0]
+    leaves = []
+    for path, _ in flat_like:
+        key = prefix + "/".join(_path_str(p) for p in path)
+        if key not in by_key:
+            raise KeyError(f"packed tree missing leaf {key!r}")
+        arr = np.asarray(arrays[key])
+        want = _resolve_dtype(by_key[key])
+        if arr.dtype != want:
+            arr = arr.view(want)
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_rows(path: str, tree) -> int:
+    """One-tree convenience: ``<path>.npz`` + ``<path>.meta.json``.
+    Returns payload bytes written (the npz size on disk)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays, meta = pack_bitexact(tree)
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+    return os.path.getsize(path + ".npz")
+
+
+def load_rows(path: str, tree_like):
+    with open(path + ".meta.json") as f:
+        meta = json.load(f)
+    with np.load(path + ".npz") as data:
+        return unpack_bitexact(dict(data), meta, tree_like)
 
 
 def latest_step(path: str) -> int | None:

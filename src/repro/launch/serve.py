@@ -16,6 +16,7 @@ from __future__ import annotations
 import argparse
 import asyncio
 import os
+import signal
 import sys
 import time
 
@@ -49,9 +50,10 @@ from repro.checkpoint import ckpt
 from repro.configs import get_arch
 from repro.core.policy import make_policy
 from repro.models.api import build_model
+from repro.serving import durability as dur_lib
 from repro.serving.engine import Engine
 from repro.serving.frontdoor import (AdmissionConfig, FrontDoor,
-                                     ServeRequest)
+                                     RetryConfig, ServeRequest)
 from repro.serving.meshing import ServingMesh
 
 
@@ -141,9 +143,27 @@ def main() -> None:
                          "params and KV state shard over kv-heads on "
                          "'model' and slots on 'data' (on a CPU host the "
                          "fake-device XLA flag is set automatically)")
+    ap.add_argument("--durability-dir", default=None, metavar="DIR",
+                    help="crash-safe serving: write-ahead request journal "
+                         "+ periodic bit-exact pool checkpoints under DIR "
+                         "(DESIGN.md §Durability)")
+    ap.add_argument("--checkpoint-every", type=int, default=8,
+                    help="segment boundaries between pool checkpoints "
+                         "(0 = journal only)")
+    ap.add_argument("--keep-checkpoints", type=int, default=2)
+    ap.add_argument("--recover", action="store_true",
+                    help="replay the journal in --durability-dir before "
+                         "serving: checkpointed requests resume bit-exactly "
+                         "from their snapshots, the rest re-prefill")
+    ap.add_argument("--no-retry", action="store_true",
+                    help="disable the transient-fault retry ladder "
+                         "(faulted rows then fail immediately)")
+    ap.add_argument("--max-retries", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--restore", default=None)
     args = ap.parse_args()
+    if args.recover and not args.durability_dir:
+        ap.error("--recover requires --durability-dir")
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -192,16 +212,6 @@ def main() -> None:
                 [t, rng.integers(0, cfg.vocab_size, size=tail)]
             ).astype(np.int32)
 
-    reqs = [ServeRequest(
-        uid=i, prompt=make_prompt(),
-        max_new_tokens=args.gen,
-        priority=int(rng.choice(prios, p=weights)),
-        deadline_s=dl, decode_timeout_s=dt)
-        for i in range(args.requests)]
-    gaps = (list(rng.exponential(1.0 / args.arrival_rate,
-                                 size=args.requests))
-            if args.arrival_rate > 0 else [0.0] * args.requests)
-
     adm = AdmissionConfig(enable_shed=not args.no_shed,
                           enable_preempt=not args.no_preempt)
     prefix_cache = None
@@ -211,21 +221,115 @@ def main() -> None:
         prefix_cache = PrefixCache(PrefixCacheConfig(
             max_bytes=args.prefix_cache_mb << 20, block_size=16))
 
+    core_kw = dict(segment_len=args.segment_len, admission=adm,
+                   prefix_cache=prefix_cache,
+                   retry=None if args.no_retry
+                   else RetryConfig(max_retries=args.max_retries,
+                                    backoff_base_s=0.05))
+    dur_cfg = None
+    if args.durability_dir:
+        dur_cfg = dur_lib.DurabilityConfig(
+            root=args.durability_dir,
+            checkpoint_every=args.checkpoint_every,
+            keep_checkpoints=args.keep_checkpoints)
+
+    core = None
+    uid0 = 0
+    if args.recover:
+        core, report = dur_lib.recover(eng, args.durability_dir,
+                                       batch_slots=args.slots,
+                                       durability=dur_cfg, **core_kw)
+        uid0 = max(report["known_uids"], default=-1) + 1
+        print(f"recovery: records={report['journal_records']} "
+              f"truncated_bytes={report['journal_truncated_bytes']} "
+              f"resumed={report['resumed_from_checkpoint']} "
+              f"replayed={report['replayed_from_prompt']} "
+              f"checkpoint={report['checkpoint_seq']}")
+        for uid, toks in sorted(report["durable_tokens"].items()):
+            state = report["finished"].get(uid, "outstanding")
+            print(f"  uid={uid}: {len(toks)} durable tokens "
+                  f"({state}) — replayable to a reconnecting client")
+
+    reqs = [ServeRequest(
+        uid=uid0 + i, prompt=make_prompt(),
+        max_new_tokens=args.gen,
+        priority=int(rng.choice(prios, p=weights)),
+        deadline_s=dl, decode_timeout_s=dt)
+        for i in range(args.requests)]
+    gaps = (list(rng.exponential(1.0 / args.arrival_rate,
+                                 size=args.requests))
+            if args.arrival_rate > 0 else [0.0] * args.requests)
+
     async def serve():
-        async with FrontDoor(eng, batch_slots=args.slots,
-                             segment_len=args.segment_len,
-                             admission=adm,
-                             prefix_cache=prefix_cache) as fd:
+        if core is not None:
+            fd_ctx = FrontDoor(eng, args.slots, core=core)
+        else:
+            fd_ctx = FrontDoor(eng, batch_slots=args.slots,
+                               durability=dur_cfg, **core_kw)
+        drained = None
+        stop = asyncio.Event()
+
+        def on_signal(name: str) -> None:
+            # second signal = hard exit; first = graceful drain below
+            if stop.is_set():
+                os._exit(1)
+            print(f"\n[{name}] graceful drain: halting after the "
+                  f"in-flight segment ...")
+            stop.set()
+
+        loop = asyncio.get_running_loop()
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            loop.add_signal_handler(sig, on_signal, sig.name)
+        async with fd_ctx as fd:
             t0 = time.perf_counter()
-            await drive(fd, reqs, gaps, stream=not args.no_stream)
-            await fd.drain()
+            work = asyncio.ensure_future(
+                drive(fd, reqs, gaps, stream=not args.no_stream))
+            stopper = asyncio.ensure_future(stop.wait())
+            await asyncio.wait({work, stopper},
+                               return_when=asyncio.FIRST_COMPLETED)
+            if stop.is_set():
+                work.cancel()                 # pending arrivals never land
+                await asyncio.gather(work, return_exceptions=True)
+                await fd.halt()
+                drained = fd.core.shutdown(
+                    checkpoint=dur_cfg is not None)
+            else:
+                stopper.cancel()
+                await fd.drain()
+                # recovered requests have no awaiting client future —
+                # hold the door open until the pump parks on an empty core
+                while not fd.quiesced and not stop.is_set():
+                    await asyncio.sleep(0.05)
+                if dur_cfg is not None and not stop.is_set():
+                    fd.core.shutdown(checkpoint=False)  # seal: clean exit
             wall = time.perf_counter() - t0
             s = fd.core.run_summary()
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            loop.remove_signal_handler(sig)
+        if drained is not None:
+            print(f"drained: live={drained['live']} "
+                  f"queued={drained['queued']} "
+                  f"staged={drained['staged']} "
+                  f"checkpoint_seq={drained['checkpoint_seq']}")
+            if dur_cfg is not None:
+                print(f"restart with:  --recover --durability-dir "
+                      f"{args.durability_dir}")
         print(f"\npolicy={args.policy} capacity={args.capacity} "
               f"slots={args.slots} kv_format={s['kv_format']}")
         print(f"completed={s['completed']} reasons={s['finish_reasons']}")
         print(f"preempted={s['preempted']} max_queue={s['max_queue_depth']} "
               f"peak_pressure={s['peak_pressure']:.2f}")
+        if s["failed"] or s["retries"]:
+            print(f"faults: details={s['failure_details']} "
+                  f"retries={s['retries']} "
+                  f"quarantined={s['quarantined_slots']}")
+        if s.get("durability"):
+            ds = s["durability"]
+            print(f"durability: journal_appends={ds['journal_appends']} "
+                  f"tokens_logged={ds['tokens_logged']} "
+                  f"checkpoints={ds['checkpoints_written']} "
+                  f"ckpt_mean={ds['checkpoint_seconds_mean'] * 1e3:.1f}ms "
+                  f"sealed={ds['sealed']}")
         if s.get("prefix_cache"):
             pcs = s["prefix_cache"]
             print(f"prefix store: hit_rate={pcs['hit_rate']:.2f} "
@@ -235,8 +339,10 @@ def main() -> None:
         ok = [c for c in fd.core.completed
               if c.finish_reason in ("eos", "length")]
         toks = sum(len(c.tokens) for c in ok)
+        n_expected = len(reqs) + (report["outstanding"] if args.recover
+                                  else 0)
         print(f"goodput={toks / max(wall, 1e-9):.1f} tok/s over {wall:.2f}s "
-              f"({len(ok)}/{len(reqs)} requests healthy)")
+              f"({len(ok)}/{n_expected} requests healthy)")
 
     asyncio.run(serve())
 

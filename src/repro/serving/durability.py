@@ -1,0 +1,517 @@
+"""Crash-safe serving: write-ahead request journal, bit-exact pool
+checkpoints, and deterministic restart recovery.
+
+Lethe makes mid-generation KV state *expensive to lose*: after a crash a
+request can only be rebuilt by re-prefilling and re-decoding every emitted
+token, and stateful policies (LazyEviction's armed/observing phase carried
+in ``(budget, evict_at)``) make the live cache the only authoritative copy
+of pruning state. This module is the durability layer over the primitives
+the serving stack already proved bit-exact:
+
+* **Write-ahead journal** (``Journal``) — an append-only, fsync'd JSONL of
+  request lifecycle events: ``submit`` (prompt + knobs) → ``admit`` →
+  per-segment ``tok`` records carrying an *absolute token offset* (the
+  emission watermark) → exactly one ``end`` terminal. Every line carries a
+  blake2b checksum; a torn tail (the line a SIGKILL interrupted) is
+  detected on read and truncated before the journal is appended again.
+  The journal is appended BEFORE tokens become client-visible, so the
+  watermark always covers everything a client may have seen.
+
+* **Pool checkpoints** (``write_checkpoint``/``load_checkpoint``) — the
+  live slots (plus any preempted host snapshots) serialized from
+  ``cache.extract_slots`` rows through the bit-exact pack in
+  ``checkpoint/ckpt.py``, written atomically (tmp dir + rename; a crash
+  mid-write leaves no ``ckpt-*`` entry). The manifest is fingerprinted by
+  the PR-7 ``prefix_fingerprint`` (policy knobs + ``kv_format`` + cache
+  dtype + arch + mesh ``topology_token()``), so a checkpoint can never
+  restore under an incompatible layout — recovery then falls back to
+  journal replay.
+
+* **Recovery** (``recover``) — replays the journal against the newest
+  compatible checkpoint: snapshotted rows re-enter the pool through the
+  preemption ``insert_slots`` path (resuming mid-generation bit-exactly),
+  admitted-but-unsnapshotted rows fall back to re-prefill (probing the
+  prefix store when one is attached), and the emission watermark makes
+  token emission at-most-once: regenerated tokens below the watermark are
+  recomputed (bit-identical, the snapshot/differential guarantee) but
+  never re-emitted or re-journaled. Terminals are exactly-once: a uid with
+  an ``end`` record is never requeued.
+
+``SimulatedCrash`` + ``Durability.crash_points`` give the kill-point test
+harness deterministic crash injection at the boundaries that matter
+(after-admit, mid-segment, after-harvest-before-journal-append,
+mid-checkpoint) without having to race a real SIGKILL. DESIGN.md
+§Durability documents the format and the recovery semantics;
+``benchmarks/crash_recovery.py`` measures restore-vs-replay.
+"""
+from __future__ import annotations
+
+import glob
+import hashlib
+import json
+import os
+import shutil
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.checkpoint import ckpt
+
+JOURNAL_NAME = "journal.log"
+_CKPT_PREFIX = "ckpt-"
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised by an armed crash point: the kill-point harness's stand-in
+    for SIGKILL. Only raised when a test arms ``Durability.crash_points``;
+    production runs never see it."""
+
+
+@dataclass
+class DurabilityConfig:
+    root: str                      # directory for journal + checkpoints
+    fsync: bool = True             # fsync every journal append
+    checkpoint_every: int = 8      # boundaries between pool checkpoints
+    keep_checkpoints: int = 2      # completed checkpoints retained on disk
+
+
+def _line(rec: dict) -> str:
+    body = json.dumps(rec, separators=(",", ":"), sort_keys=True)
+    c = hashlib.blake2b(body.encode(), digest_size=4).hexdigest()
+    return f"{body} #{c}\n"
+
+
+def _parse_line(line: str) -> dict | None:
+    """One journal line -> record, or None when torn/corrupt (bad JSON,
+    bad checksum, or missing trailing newline)."""
+    if not line.endswith("\n"):
+        return None
+    try:
+        body, c = line.rstrip("\n").rsplit(" #", 1)
+    except ValueError:
+        return None
+    if hashlib.blake2b(body.encode(), digest_size=4).hexdigest() != c:
+        return None
+    try:
+        return json.loads(body)
+    except json.JSONDecodeError:
+        return None
+
+
+def read_journal(path: str) -> tuple[list[dict], int]:
+    """Read every intact record; returns (records, good_bytes) where
+    ``good_bytes`` is the byte offset of the first torn/corrupt line (==
+    file size for a clean journal). Everything past the first bad line is
+    ignored — the journal is append-only, so a corrupt line means the
+    crash interrupted that append and nothing after it was written."""
+    records: list[dict] = []
+    good = 0
+    if not os.path.exists(path):
+        return records, good
+    with open(path, "rb") as f:
+        for raw in f:
+            rec = _parse_line(raw.decode("utf-8", errors="replace"))
+            if rec is None:
+                break
+            records.append(rec)
+            good += len(raw)
+    return records, good
+
+
+class Journal:
+    """Append-only fsync'd journal writer. ``append`` is write-ahead: it
+    returns only after the line is on disk (when ``fsync``), so any event
+    the serving loop acts on is durable first."""
+
+    def __init__(self, path: str, *, fsync: bool = True):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self.path = path
+        self.fsync = fsync
+        self._f = open(path, "a", encoding="utf-8")
+        self.n_appends = 0
+
+    def append(self, rec: dict) -> None:
+        self._f.write(_line(rec))
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+        self.n_appends += 1
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.flush()
+            os.fsync(self._f.fileno())
+            self._f.close()
+
+
+# --------------------------------------------------------------------------
+# Pool checkpoints
+# --------------------------------------------------------------------------
+
+@dataclass
+class Checkpoint:
+    """A loaded pool checkpoint: per-uid snapshot rows + decode cursors."""
+    seq: int
+    fingerprint: str               # hex of the prefix_fingerprint bytes
+    uids: list[int]
+    rows: object                   # packed tree, batch axis = len(uids)
+    tok: dict[int, int]            # uid -> last emitted token
+    pos: dict[int, int]            # uid -> next decode position
+    n_tokens: dict[int, int]       # uid -> tokens generated at snapshot
+
+    def row_for(self, uid: int):
+        """Single-row (batch axis 1) slice for one uid — exactly the
+        ``rows_state`` shape ``cache.insert_slots`` re-admits."""
+        import jax
+        j = self.uids.index(uid)
+        return jax.tree.map(lambda x: np.asarray(x)[:, j:j + 1], self.rows)
+
+
+def _ckpt_dir(root: str, seq: int) -> str:
+    return os.path.join(root, f"{_CKPT_PREFIX}{seq:06d}")
+
+
+def list_checkpoints(root: str) -> list[int]:
+    out = []
+    for d in glob.glob(os.path.join(root, f"{_CKPT_PREFIX}*")):
+        if os.path.isfile(os.path.join(d, "manifest.json")):
+            try:
+                out.append(int(os.path.basename(d)[len(_CKPT_PREFIX):]))
+            except ValueError:
+                continue
+    return sorted(out)
+
+
+def write_checkpoint(root: str, seq: int, fingerprint: bytes,
+                     entries: list[tuple[int, object, int, int, int]], *,
+                     keep: int = 2, crash=None) -> str:
+    """Atomically write checkpoint ``seq``: ``entries`` is a list of
+    (uid, rows with batch axis 1, last_token, next_pos, n_tokens). Rows
+    are concatenated along the batch axis and packed bit-exactly; the
+    manifest (written last, inside a tmp dir renamed into place) is what
+    makes a checkpoint visible — a crash at any earlier point leaves only
+    an ignored ``.tmp-*`` directory. Old checkpoints beyond ``keep`` are
+    pruned AFTER the new one commits."""
+    import jax
+    tmp = os.path.join(root, f".tmp-{seq:06d}")
+    final = _ckpt_dir(root, seq)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    uids = [int(u) for u, *_ in entries]
+    if entries:
+        rows = jax.tree.map(
+            lambda *xs: np.concatenate([np.asarray(x) for x in xs], axis=1),
+            *[r for _, r, *_ in entries])
+    else:
+        rows = {}
+    arrays, meta = ckpt.pack_bitexact(rows)
+    np.savez(os.path.join(tmp, "rows.npz"), **arrays)
+    if crash is not None:
+        crash("mid_checkpoint")      # rows on disk, manifest missing
+    manifest = {
+        "seq": seq,
+        "fingerprint": fingerprint.hex(),
+        "uids": uids,
+        "tok": [int(t) for _, _, t, _, _ in entries],
+        "pos": [int(p) for _, _, _, p, _ in entries],
+        "n_tokens": [int(n) for _, _, _, _, n in entries],
+        "rows_meta": meta,
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final) if not os.path.exists(final) else None
+    # prune superseded checkpoints (never the one just written)
+    for old in list_checkpoints(root)[:-keep] if keep else []:
+        if old != seq:
+            shutil.rmtree(_ckpt_dir(root, old), ignore_errors=True)
+    return final
+
+
+def load_checkpoint(root: str, seq: int, donor_row) -> Checkpoint:
+    """Load checkpoint ``seq``; ``donor_row`` is a single-row extract of a
+    fresh decode state under the SAME engine config (structure/dtype
+    donor for the bit-exact unpack)."""
+    d = _ckpt_dir(root, seq)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    uids = manifest["uids"]
+    if uids:
+        with np.load(os.path.join(d, "rows.npz")) as data:
+            rows = ckpt.unpack_bitexact(dict(data), manifest["rows_meta"],
+                                        donor_row)
+    else:
+        rows = {}
+    return Checkpoint(
+        seq=manifest["seq"], fingerprint=manifest["fingerprint"],
+        uids=uids, rows=rows,
+        tok=dict(zip(uids, manifest["tok"])),
+        pos=dict(zip(uids, manifest["pos"])),
+        n_tokens=dict(zip(uids, manifest["n_tokens"])))
+
+
+def latest_compatible_checkpoint(root: str, fingerprint: bytes,
+                                 donor_row) -> Checkpoint | None:
+    """Newest checkpoint whose manifest fingerprint matches the CURRENT
+    engine's — an incompatible one (different policy knobs, kv_format, or
+    mesh topology) is skipped, not coerced: recovery then falls back to
+    journal replay for its rows."""
+    for seq in reversed(list_checkpoints(root)):
+        d = _ckpt_dir(root, seq)
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        if manifest["fingerprint"] == fingerprint.hex():
+            return load_checkpoint(root, seq, donor_row)
+    return None
+
+
+# --------------------------------------------------------------------------
+# The runtime object the front door drives
+# --------------------------------------------------------------------------
+
+class Durability:
+    """Journal + checkpoint driver bound to one serving run directory.
+
+    The front door calls the ``log_*`` hooks at each lifecycle transition
+    (each append is durable before the event becomes client-visible) and
+    ``maybe_checkpoint``/``write_pool_checkpoint`` at segment boundaries.
+    ``crash_points`` is the kill-point harness hook: arming a point name
+    makes the matching ``crash()`` call raise ``SimulatedCrash`` exactly
+    once, emulating a SIGKILL at that boundary."""
+
+    def __init__(self, cfg: DurabilityConfig | str):
+        if isinstance(cfg, str):
+            cfg = DurabilityConfig(root=cfg)
+        self.cfg = cfg
+        os.makedirs(cfg.root, exist_ok=True)
+        self.journal = Journal(os.path.join(cfg.root, JOURNAL_NAME),
+                               fsync=cfg.fsync)
+        seqs = list_checkpoints(cfg.root)
+        self._next_seq = (seqs[-1] + 1) if seqs else 1
+        self._boundaries = 0
+        self.sealed = False
+        # telemetry
+        self.n_checkpoints = 0
+        self.n_tokens_logged = 0
+        self.checkpoint_seconds: list[float] = []
+        # kill-point harness: arm a point name to crash there (once)
+        self.crash_points: set[str] = set()
+
+    # ---- crash injection --------------------------------------------------
+
+    def crash(self, point: str) -> None:
+        if point in self.crash_points:
+            self.crash_points.discard(point)
+            raise SimulatedCrash(point)
+
+    # ---- journal events ---------------------------------------------------
+
+    def log_open(self, fingerprint: bytes) -> None:
+        self.journal.append({"ev": "open", "fp": fingerprint.hex()})
+
+    def log_submit(self, req) -> None:
+        self.journal.append({
+            "ev": "submit", "uid": int(req.uid),
+            "prompt": [int(t) for t in np.asarray(req.prompt).reshape(-1)],
+            "n": int(req.max_new_tokens), "pri": int(req.priority),
+            "dl": req.deadline_s, "dt": req.decode_timeout_s})
+
+    def log_admit(self, uid: int) -> None:
+        self.journal.append({"ev": "admit", "uid": int(uid)})
+
+    def log_tokens(self, uid: int, off: int, toks: list[int]) -> None:
+        if not toks:
+            return
+        self.journal.append({"ev": "tok", "uid": int(uid), "off": int(off),
+                             "toks": [int(t) for t in toks]})
+        self.n_tokens_logged += len(toks)
+
+    def log_terminal(self, uid: int, reason: str,
+                     detail: str | None = None) -> None:
+        self.journal.append({"ev": "end", "uid": int(uid), "reason": reason,
+                             "detail": detail})
+
+    def log_recover(self, n_resumed: int, n_replayed: int) -> None:
+        self.journal.append({"ev": "recover", "resumed": n_resumed,
+                             "replayed": n_replayed})
+
+    def seal(self) -> None:
+        """Graceful-shutdown marker: every non-terminal uid before the seal
+        is intentionally outstanding (checkpointed or queued), not lost."""
+        if not self.sealed:
+            self.journal.append({"ev": "seal"})
+            self.sealed = True
+        self.journal.close()
+
+    # ---- checkpoints ------------------------------------------------------
+
+    def checkpoint_due(self) -> bool:
+        self._boundaries += 1
+        return (self.cfg.checkpoint_every > 0
+                and self._boundaries % self.cfg.checkpoint_every == 0)
+
+    def write_pool_checkpoint(self, fingerprint: bytes, entries) -> int:
+        import time
+        t0 = time.perf_counter()
+        seq = self._next_seq
+        write_checkpoint(self.cfg.root, seq, fingerprint, entries,
+                         keep=self.cfg.keep_checkpoints, crash=self.crash)
+        self._next_seq += 1
+        self.n_checkpoints += 1
+        self.checkpoint_seconds.append(time.perf_counter() - t0)
+        return seq
+
+    def stats(self) -> dict:
+        return {
+            "journal_appends": self.journal.n_appends,
+            "tokens_logged": self.n_tokens_logged,
+            "checkpoints_written": self.n_checkpoints,
+            "last_checkpoint_seq": self._next_seq - 1,
+            "checkpoint_seconds_mean": (
+                float(np.mean(self.checkpoint_seconds))
+                if self.checkpoint_seconds else 0.0),
+            "sealed": self.sealed,
+        }
+
+
+# --------------------------------------------------------------------------
+# Journal digest + recovery
+# --------------------------------------------------------------------------
+
+@dataclass
+class JournalDigest:
+    """Per-uid fold of a journal: what was promised (submit), what was
+    durably emitted (the token watermark), and what terminated."""
+    requests: dict[int, dict] = field(default_factory=dict)
+    order: list[int] = field(default_factory=list)       # submit order
+    admitted: set[int] = field(default_factory=set)
+    tokens: dict[int, list[int]] = field(default_factory=dict)
+    terminal: dict[int, tuple[str, str | None]] = field(default_factory=dict)
+    sealed: bool = False
+
+    def outstanding(self) -> list[int]:
+        return [u for u in self.order if u not in self.terminal]
+
+    def watermark(self, uid: int) -> int:
+        return len(self.tokens.get(uid, []))
+
+
+def digest_journal(records: list[dict]) -> JournalDigest:
+    d = JournalDigest()
+    for r in records:
+        ev = r["ev"]
+        if ev == "submit":
+            uid = r["uid"]
+            if uid not in d.requests:
+                d.order.append(uid)
+            d.requests[uid] = r
+        elif ev == "admit":
+            d.admitted.add(r["uid"])
+        elif ev == "tok":
+            lst = d.tokens.setdefault(r["uid"], [])
+            off, toks = r["off"], r["toks"]
+            if off > len(lst):          # gap cannot happen in a valid log
+                raise ValueError(
+                    f"journal token gap for uid {r['uid']}: "
+                    f"offset {off} past watermark {len(lst)}")
+            lst[off:off + len(toks)] = toks
+        elif ev == "end":
+            d.terminal[r["uid"]] = (r["reason"], r.get("detail"))
+        elif ev == "seal":
+            d.sealed = True
+    return d
+
+
+def recover(engine, root: str, *, batch_slots: int,
+            durability: "Durability | DurabilityConfig | str | None" = None,
+            **core_kw):
+    """Rebuild a ``FrontDoorCore`` from the journal + newest compatible
+    checkpoint in ``root``. Returns (core, report).
+
+    * torn journal tail -> truncated, then the journal is re-opened for
+      appending (the recovered core keeps writing the same stream; token
+      offsets are absolute, so the watermark survives any number of
+      crashes);
+    * uids with a terminal -> skipped (exactly-once terminal);
+    * snapshotted uids under a matching fingerprint -> queued holding
+      their checkpoint rows; admission re-enters them through the
+      preemption ``insert_slots`` path (no prefill);
+    * everything else outstanding -> queued cold; admission re-prefills
+      (through the prefix store when one is attached and hits);
+    * every recovered uid carries its emission watermark: regenerated
+      tokens below it are recomputed bit-exactly but never re-emitted or
+      re-journaled (at-most-once emission).
+    """
+    from repro.core import cache as cache_lib
+    from repro.serving.frontdoor import FrontDoorCore, ServeRequest, _Entry
+    from repro.serving.scheduler import PREEMPTED, QUEUED
+
+    jpath = os.path.join(root, JOURNAL_NAME)
+    records, good = read_journal(jpath)
+    torn = (os.path.getsize(jpath) - good if os.path.exists(jpath) else 0)
+    if torn:
+        with open(jpath, "r+b") as f:     # drop the torn tail before we
+            f.truncate(good)              # ever append again
+    dig = digest_journal(records)
+
+    if durability is None:
+        durability = DurabilityConfig(root=root)
+    core = FrontDoorCore(engine, batch_slots, durability=durability,
+                         **core_kw)
+    dur = core.dur
+
+    donor = cache_lib.extract_slots(engine.new_decode_state(1), [0])
+    ck = latest_compatible_checkpoint(root, core._fp, donor)
+
+    n_resumed = n_replayed = 0
+    now = core.clock()
+    for uid in dig.outstanding():
+        r = dig.requests[uid]
+        req = ServeRequest(
+            uid=uid, prompt=np.asarray(r["prompt"], np.int32),
+            max_new_tokens=r["n"], priority=r.get("pri", 0),
+            deadline_s=r.get("dl"), decode_timeout_s=r.get("dt"))
+        core._seq += 1
+        e = _Entry(req=req, submit_ts=now, seq=core._seq,
+                   queue_depth=len(core.queue))
+        w = dig.watermark(uid)
+        e.emit_from = w
+        e.journaled = w
+        if ck is not None and uid in ck.tok:
+            n = ck.n_tokens[uid]
+            e.tokens = list(dig.tokens.get(uid, [])[:n])
+            e.snapshot = (ck.row_for(uid), ck.tok[uid], ck.pos[uid])
+            core.lifecycle[uid] = [QUEUED, PREEMPTED]
+            n_resumed += 1
+        else:
+            e.tokens = []                 # cold: re-prefill + re-decode
+            core.lifecycle[uid] = [QUEUED]
+            n_replayed += 1
+        core.queue.append(e)
+    dur.log_recover(n_resumed, n_replayed)
+
+    report = {
+        "journal_records": len(records),
+        "journal_truncated_bytes": torn,
+        "sealed": dig.sealed,
+        "terminals": len(dig.terminal),
+        "outstanding": len(dig.outstanding()),
+        "known_uids": sorted(dig.requests),
+        "resumed_from_checkpoint": n_resumed,
+        "replayed_from_prompt": n_replayed,
+        "checkpoint_seq": ck.seq if ck is not None else None,
+        # The output-commit record: tokens the journal proves durable per
+        # uid (offset-addressed). A token can be fsync'd and then lost on
+        # the wire when the crash lands between the append and the client
+        # write — the serving shell replays these to a reconnecting client
+        # from its acknowledged offset, which is what turns the core's
+        # at-most-once emission into an exactly-once client stream.
+        "durable_tokens": {u: list(t) for u, t in dig.tokens.items()},
+        "finished": {u: r for u, (r, _) in dig.terminal.items()},
+    }
+    return core, report

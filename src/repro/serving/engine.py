@@ -48,6 +48,13 @@ from repro.models.api import ModelAPI
 from repro.serving.meshing import ServingMesh, mesh_context
 
 
+# Fault classification codes in ``decode_segment_guarded``'s ``bad_kind``
+# output (0 = healthy row): the device-side half of the front door's
+# ``Completion.failure_detail`` taxonomy.
+BAD_NAN = 1        # non-finite logits (real or chaos-injected)
+BAD_FAULT = 2      # flagged per-row kernel fault
+
+
 def _meshed(fn):
     """Run an engine entry point under the engine's mesh context (no-op
     for a no-mesh engine): inside ``with mesh:`` the shard_map decode
@@ -630,10 +637,15 @@ class Engine:
         makes "surviving rows are bit-identical to a fault-free run" a
         structural guarantee rather than a numerical accident.
 
-        Returns (state', tokens [B, n_steps], pos', done', first_bad [B])
-        where ``first_bad[i]`` is the segment-step index of row i's first
-        faulty token (``n_steps`` = row stayed healthy): tokens at steps
-        ``< first_bad[i]`` are trustworthy, later ones are not.
+        Returns (state', tokens [B, n_steps], pos', done', first_bad [B],
+        bad_kind [B]) where ``first_bad[i]`` is the segment-step index of
+        row i's first faulty token (``n_steps`` = row stayed healthy):
+        tokens at steps ``< first_bad[i]`` are trustworthy, later ones are
+        not. ``bad_kind[i]`` classifies the first fault — ``BAD_NAN`` for
+        non-finite logits (real or injected), ``BAD_FAULT`` for a flagged
+        row fault, 0 for a healthy row — so the front door's retry ladder
+        and the ``failure_detail`` taxonomy report *cause*, not just
+        position.
         """
         key = ("guarded", n_steps, eos_id)
         fn = self._segment_cache.get(key)
@@ -645,27 +657,35 @@ class Engine:
                 B = tok.shape[0]
 
                 def step(carry, t):
-                    state, tok, pos, done, first_bad = carry
+                    state, tok, pos, done, first_bad, bad_kind = carry
                     logits, state = model.module.decode_step(
                         params, state, tok, pos, model.cfg, policy)
                     logits = jnp.where((pos == nan_pos)[:, None],
                                        jnp.float32(jnp.nan), logits)
-                    bad_now = (~jnp.isfinite(logits).all(axis=-1)
-                               | (pos == fault_pos))
-                    first_bad = jnp.where(bad_now & (first_bad == n_steps),
-                                          t, first_bad)
+                    is_nan = ~jnp.isfinite(logits).all(axis=-1)
+                    bad_now = is_nan | (pos == fault_pos)
+                    fresh = bad_now & (first_bad == n_steps)
+                    bad_kind = jnp.where(
+                        fresh,
+                        jnp.where(is_nan, jnp.int32(BAD_NAN),
+                                  jnp.int32(BAD_FAULT)),
+                        bad_kind)
+                    first_bad = jnp.where(fresh, t, first_bad)
                     nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                     if eos_id is not None:
                         nxt = jnp.where(done, eos_id, nxt)
                         done = done | (nxt == eos_id)
-                    return (state, nxt, pos + 1, done, first_bad), nxt
+                    return (state, nxt, pos + 1, done, first_bad,
+                            bad_kind), nxt
 
                 first0 = jnp.full((B,), n_steps, jnp.int32)
-                (state, tok, pos, done, first_bad), toks = jax.lax.scan(
-                    step, (state, tok, pos, done, first0),
-                    jnp.arange(n_steps, dtype=jnp.int32))
+                kind0 = jnp.zeros((B,), jnp.int32)
+                (state, tok, pos, done, first_bad, bad_kind), toks = \
+                    jax.lax.scan(
+                        step, (state, tok, pos, done, first0, kind0),
+                        jnp.arange(n_steps, dtype=jnp.int32))
                 return (state, jnp.swapaxes(toks, 0, 1), pos, done,
-                        first_bad)
+                        first_bad, bad_kind)
 
             self._segment_cache[key] = fn
         B = len(tok)

@@ -49,15 +49,23 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Iterable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cache as cache_lib
-from repro.serving.engine import Engine, _cache_stats
+from repro.serving.durability import Durability, DurabilityConfig
+from repro.serving.engine import BAD_FAULT, Engine, _cache_stats
 from repro.serving.prefix_cache import PrefixCache, prefix_fingerprint
-from repro.serving.scheduler import (DECODING, FINISHED, FINISH_REASONS,
-                                     PREEMPTED, PREFILLING, QUEUED,
-                                     Completion)
+from repro.serving.scheduler import (DECODING, FAILURE_DETAILS, FINISHED,
+                                     FINISH_REASONS, PREEMPTED, PREFILLING,
+                                     QUEUED, Completion)
+
+
+def _tree_row(tree, j: int):
+    """Batch-axis-1 slice of one row out of an ``extract_slots`` host
+    pytree (batch is always axis 1 in the slotted layout)."""
+    return jax.tree.map(lambda x: np.asarray(x)[:, j:j + 1], tree)
 
 
 @dataclass
@@ -104,9 +112,30 @@ class AdmissionConfig:
 class ChaosConfig:
     """Fault-injection hooks (robustness battery). Keys are request uids;
     values are generated-token indices (>= 1 — token 0 comes from the
-    prefill logits) at which the fault fires during decode."""
+    prefill logits) at which the fault fires during decode.
+
+    ``persistent``: by default an injection is *transient* — it fires at
+    most once per (uid, kind), so a retry ladder can recover past it (the
+    hardware-glitch model). ``persistent=True`` re-arms it every segment
+    (the broken-row model), which is what drives a retry ladder to
+    ``retry_exhausted`` + slot quarantine.
+    """
     nan_logits_at: dict[int, int] = field(default_factory=dict)
     fault_at: dict[int, int] = field(default_factory=dict)
+    persistent: bool = False
+
+
+@dataclass
+class RetryConfig:
+    """Transient-fault retry ladder (DESIGN.md §Durability). A faulted row
+    (non-finite logits / flagged row fault) rolls back to its last good
+    pre-segment snapshot and re-queues with exponential backoff:
+    ``min(backoff_base_s * 2**(attempt-1), backoff_cap_s)``. After
+    ``max_retries`` failed attempts the slot is quarantined (never reused
+    this process) and the request fails with ``retry_exhausted``."""
+    max_retries: int = 3
+    backoff_base_s: float = 0.0
+    backoff_cap_s: float = 1.0
 
 
 @dataclass
@@ -123,6 +152,17 @@ class _Entry:
     # preemption snapshot: (host rows pytree, last token, next position)
     snapshot: tuple | None = None
     prefix_hit: str = "miss"          # "full" | "partial" | "miss"
+    # durability watermarks (token-list offsets): tokens below emit_from
+    # were already streamed to the client in a previous incarnation of the
+    # process (recomputed bit-exactly, never re-emitted); tokens below
+    # journaled are already durable in the write-ahead journal.
+    emit_from: int = 0
+    journaled: int = 0
+    # transient-fault retry ladder state
+    retries: int = 0
+    retry_after: float = 0.0          # backoff: not admissible before this
+    good: tuple | None = None         # last clean pre-segment snapshot
+    failure_detail: str | None = None
 
 
 class FrontDoorCore:
@@ -139,6 +179,9 @@ class FrontDoorCore:
                  segment_len: int = 8, eos_id: int | None = None,
                  admission: AdmissionConfig | None = None,
                  chaos: ChaosConfig | None = None,
+                 retry: RetryConfig | None = None,
+                 durability: "Durability | DurabilityConfig | str | None"
+                 = None,
                  prefix_cache: PrefixCache | None = None,
                  clock: Callable[[], float] = time.perf_counter,
                  mesh=None):
@@ -184,6 +227,22 @@ class FrontDoorCore:
         self._int8_strikes = 0
         self._migrated = False
         self._int8_disabled = False
+
+        # transient-fault retry ladder (None = the pre-durability behavior:
+        # a faulted row terminates as ``failed`` immediately)
+        self.retry = retry
+        self.quarantined: set[int] = set()
+        self._chaos_fired: set[tuple[int, str]] = set()
+        self.n_retries = 0
+
+        # write-ahead journal + pool checkpoints (serving/durability.py);
+        # accepts a Durability, a DurabilityConfig, or a bare root path
+        if durability is not None and not isinstance(durability,
+                                                     Durability):
+            durability = Durability(durability)
+        self.dur = durability
+        if self.dur is not None:
+            self.dur.log_open(self._fp)
 
     # ---- submission -------------------------------------------------------
 
@@ -273,7 +332,7 @@ class FrontDoorCore:
             # preemption is on) anything that outranks a live resident —
             # shedding those would starve exactly the work the ladder is
             # trying to protect.
-            free = sum(s is None for s in self.slots)
+            free = len(self._free_ids())
             order = sorted(self.queue,
                            key=lambda e: (-e.req.priority, e.seq))
             protected = {id(e) for e in order[:free]}
@@ -296,8 +355,14 @@ class FrontDoorCore:
 
     # ---- terminal bookkeeping --------------------------------------------
 
-    def _finish(self, e: _Entry, reason: str) -> None:
+    def _finish(self, e: _Entry, reason: str,
+                detail: str | None = None) -> None:
         assert reason in FINISH_REASONS, reason
+        if detail is None and reason == "failed":
+            detail = e.failure_detail
+        assert detail is None or detail in FAILURE_DETAILS, detail
+        if self.dur is not None:          # write-ahead: exactly-once
+            self.dur.log_terminal(e.req.uid, reason, detail)
         now = self.clock()
         toks = np.asarray(e.tokens, np.int32)
         resid = max(now - (e.admit_ts or now), 1e-9)
@@ -314,7 +379,9 @@ class FrontDoorCore:
             ttft_steps=e.ttft_steps,
             kv_format=self._kv_format, cache_bytes=self._cache_bytes,
             priority=e.req.priority, preemptions=e.preemptions,
-            queue_depth=e.queue_depth, prefix_hit=e.prefix_hit))
+            queue_depth=e.queue_depth, prefix_hit=e.prefix_hit,
+            failure_detail=detail if reason == "failed" else None,
+            retries=e.retries))
         self._events_done.append(self.completed[-1])
 
     def _release(self, i: int) -> None:
@@ -336,6 +403,8 @@ class FrontDoorCore:
         # under admission waves.
         occ = self._occupancy()
         for r in staged:
+            if self.dur is not None:      # write-ahead: durable before any
+                self.dur.log_submit(r)    # admission verdict is visible
             self._seq += 1
             e = _Entry(req=r, submit_ts=self.clock(), seq=self._seq,
                        queue_depth=len(self.queue))
@@ -351,7 +420,7 @@ class FrontDoorCore:
                 self._finish(e, "rejected")
                 continue
             if (occ + self._queued_demand() >= a.reject_at
-                    and self._slot_of(None) is None):
+                    and not self._free_ids()):
                 self._finish(e, "rejected")
                 continue
             self.queue.append(e)
@@ -361,6 +430,12 @@ class FrontDoorCore:
             if s is entry:
                 return i
         return None
+
+    def _free_ids(self) -> list[int]:
+        """Admissible free slots — quarantined slots (retry-exhausted
+        faults) are never handed out again."""
+        return [i for i in range(self.batch_slots)
+                if self.slots[i] is None and i not in self.quarantined]
 
     def _expired(self, e: _Entry, now: float) -> bool:
         d = e.req.deadline_s
@@ -413,8 +488,14 @@ class FrontDoorCore:
 
     def _admit(self, pressure: float) -> None:
         B = self.batch_slots
+        # entries inside their retry backoff window are invisible to this
+        # boundary's admission (and cannot trigger preemption)
+        now = self.clock()
+        waiting = [e for e in self.queue if e.retry_after > now]
+        if waiting:
+            self.queue = [e for e in self.queue if e.retry_after <= now]
         self.queue.sort(key=lambda e: (-e.req.priority, e.seq))
-        free = [i for i in range(B) if self.slots[i] is None]
+        free = self._free_ids()
 
         # preempt: queue head strictly outranks the lowest-priority
         # resident and no slot is free
@@ -429,7 +510,7 @@ class FrontDoorCore:
                 break
             self.preempt_slot(victim)
             self.queue.sort(key=lambda e: (-e.req.priority, e.seq))
-            free = [i for i in range(B) if self.slots[i] is None]
+            free = self._free_ids()
 
         # resume preempted entries individually; group fresh admissions by
         # prompt length so a refill wave shares prefill programs
@@ -448,16 +529,35 @@ class FrontDoorCore:
                 self._admit_group(ids, group, pressure)
             # instant completions (EOS-at-first-token, rejected groups) may
             # have freed slots again — loop and refill them
-            free = [i for i in range(B) if self.slots[i] is None]
+            free = self._free_ids()
+        self.queue.extend(waiting)
+
+    def _journal_tokens(self, e: _Entry, off: int, toks: list[int]) -> None:
+        """Append the suffix of ``toks`` (absolute offsets ``off..``) not
+        yet covered by the entry's journal watermark. Recovered entries
+        regenerate their pre-crash tokens bit-exactly — those fall below
+        the watermark and are NOT re-journaled (the journal stays
+        append-only with contiguous offsets across process incarnations)."""
+        if self.dur is None or not toks:
+            return
+        end = off + len(toks)
+        if end <= e.journaled:
+            return
+        start = max(e.journaled - off, 0)
+        self.dur.log_tokens(e.req.uid, off + start, toks[start:])
+        e.journaled = end
 
     def _go_live(self, e: _Entry, i: int, first: int) -> None:
         """Post-prefill bookkeeping shared by cold, full-hit and partial-hit
         admission: record the first token, then either finish immediately
         (EOS-at-first-token / 1-token budget) or bring the slot live."""
+        off = len(e.tokens)
         e.tokens.append(int(first))
         e.first_token_ts = self.clock()
         e.ttft_steps = self._decode_steps
-        self._events_tok.append((e.req.uid, [int(first)]))
+        self._journal_tokens(e, off, [int(first)])
+        if off >= e.emit_from:        # at-most-once emission across crashes
+            self._events_tok.append((e.req.uid, [int(first)]))
         if self.eos_id is not None and int(first) == self.eos_id:
             self._finish(e, "eos")
             self._release(i)
@@ -511,7 +611,7 @@ class FrontDoorCore:
         e.prefix_hit = "partial"
         lg = np.asarray(logits[0])
         if not np.isfinite(lg).all():
-            self._finish(e, "failed")
+            self._finish(e, "failed", detail="prefill_nonfinite")
             return True
         first = int(lg.argmax())
         self.state = cache_lib.insert_slots(self.state, [i], rows)
@@ -526,6 +626,8 @@ class FrontDoorCore:
         for e in group:
             self.lifecycle[e.req.uid].append(PREFILLING)
             e.admit_ts = admit_ts
+            if self.dur is not None:
+                self.dur.log_admit(e.req.uid)
 
         # -- prefix-store probe: full hits insert stored rows, partial hits
         # resume suffix prefill; only the misses pay a cold prefill --------
@@ -565,7 +667,7 @@ class FrontDoorCore:
         self.state = cache_lib.insert_slots(self.state, ins, rows)
         for j, (e, i, ok, f) in enumerate(zip(group, ids, finite, first)):
             if not ok:         # poisoned prompt: row never went live
-                self._finish(e, "failed")
+                self._finish(e, "failed", detail="prefill_nonfinite")
                 continue
             self._capture_prefix(e, rows, j, int(f),
                                  degraded=max_keep is not None)
@@ -580,26 +682,42 @@ class FrontDoorCore:
         for i, e in enumerate(self.slots):
             if e is None:
                 continue
-            for table, out in ((self.chaos.nan_logits_at, nan_pos),
-                               (self.chaos.fault_at, fault_pos)):
+            for table, out, kind in (
+                    (self.chaos.nan_logits_at, nan_pos, "nan"),
+                    (self.chaos.fault_at, fault_pos, "fault")):
                 k = table.get(e.req.uid)
-                if k is not None and k >= len(e.tokens):
-                    # generated-token index k is produced by the decode
-                    # step consuming token k-1, i.e. at absolute position
-                    # prompt_len + k - 1
-                    out[i] = len(e.req.prompt) + k - 1
+                if k is None or k < len(e.tokens):
+                    continue
+                if (not self.chaos.persistent
+                        and (e.req.uid, kind) in self._chaos_fired):
+                    continue      # transient fault already fired once
+                # generated-token index k is produced by the decode
+                # step consuming token k-1, i.e. at absolute position
+                # prompt_len + k - 1
+                out[i] = len(e.req.prompt) + k - 1
         return nan_pos, fault_pos
 
     def step(self) -> tuple[list, list]:
         """One scheduler boundary + one decode segment. Returns
         (token_events, completions) produced this step, where
-        ``token_events`` is a list of (uid, [new tokens]) for streaming."""
+        ``token_events`` is a list of (uid, [new tokens]) for streaming.
+
+        With a durability layer bound, the boundary is ordered so every
+        client-visible event is write-ahead journaled before it is exposed:
+        submits/admits/first tokens during admission, harvested tokens
+        after the segment, terminals last — and the four kill points
+        (``after_admit``, ``mid_segment``, ``after_harvest``,
+        ``mid_checkpoint``) sit exactly at the boundaries the recovery
+        guarantees are proven over.
+        """
         self._events_tok: list = []
         self._events_done: list = []
         self._ingest()
         self._expire()
         p = self._ladder()
         self._admit(p)
+        if self.dur is not None:
+            self.dur.crash("after_admit")
 
         to_reset = [i for i in range(self.batch_slots)
                     if self.slots[i] is None]
@@ -609,28 +727,60 @@ class FrontDoorCore:
         active = [i for i in range(self.batch_slots)
                   if self.slots[i] is not None]
         if not active:
+            self._maybe_checkpoint()
             return self._events_tok, self._events_done
 
+        if self.retry is not None:
+            # last-good capture: one host extract of the live rows at the
+            # clean pre-segment boundary — the state a transient fault in
+            # the coming segment rolls back to
+            rows = cache_lib.extract_slots(self.state, active)
+            for j, i in enumerate(active):
+                e = self.slots[i]
+                e.good = (_tree_row(rows, j), int(self.tok[i]),
+                          int(self.pos[i]))
+
         nan_pos, fault_pos = self._chaos_arrays()
-        self.state, seg, pos_j, done_j, first_bad = \
+        self.state, seg, pos_j, done_j, first_bad, bad_kind = \
             self.eng.decode_segment_guarded(
                 self.state, self.tok, self.pos, self.done,
                 self.segment_len, eos_id=self.eos_id,
                 nan_pos=nan_pos, fault_pos=fault_pos)
         seg = np.asarray(seg)
         first_bad = np.asarray(first_bad)
+        bad_kind = np.asarray(bad_kind)
         self.pos, self.done = np.array(pos_j), np.array(done_j)
         self.tok = seg[:, -1].astype(np.int32)
         self._decode_steps += self.segment_len
+        if self.dur is not None:
+            self.dur.crash("mid_segment")
 
         now = self.clock()
+        emits: list[tuple[_Entry, int, list[int]]] = []
+        finals: list[tuple[int, _Entry, str]] = []
+        rollbacks: list[tuple[int, _Entry, str]] = []
         for i in active:
             e = self.slots[i]
             want = e.req.max_new_tokens
             reason = None
+            bad = int(first_bad[i])
+            if bad < self.segment_len:
+                detail = ("row_fault" if int(bad_kind[i]) == BAD_FAULT
+                          else "nan_logits")
+                self._chaos_fired.add(
+                    (e.req.uid,
+                     "fault" if int(bad_kind[i]) == BAD_FAULT else "nan"))
+                if self.retry is not None and e.good is not None:
+                    # discard the whole segment for this row (the clean
+                    # prefix regenerates bit-exactly from the snapshot —
+                    # nothing emitted, so nothing can double-emit)
+                    rollbacks.append((i, e, detail))
+                    continue
+                e.failure_detail = detail
+            off0 = len(e.tokens)
             fresh: list[int] = []
             for s, t in enumerate(seg[i]):
-                if s >= first_bad[i]:
+                if s >= bad:
                     reason = "failed"
                     break
                 e.tokens.append(int(t))
@@ -642,13 +792,105 @@ class FrontDoorCore:
                     reason = "length"
                     break
             if fresh:
-                self._events_tok.append((e.req.uid, fresh))
+                emits.append((e, off0, fresh))
             if reason is None and self._expired(e, now):
                 reason = "timeout"
             if reason is not None:
-                self._finish(e, reason)
-                self._release(i)
+                finals.append((i, e, reason))
+
+        # entries are harvested but nothing is journaled or client-visible
+        # yet — the kill point the write-ahead ordering is proven at
+        if self.dur is not None:
+            self.dur.crash("after_harvest")
+        for e, off0, fresh in emits:
+            self._journal_tokens(e, off0, fresh)
+            vis = [t for k, t in enumerate(fresh) if off0 + k >= e.emit_from]
+            if vis:
+                self._events_tok.append((e.req.uid, vis))
+        for i, e, reason in finals:
+            self._finish(e, reason)
+            self._release(i)
+        for i, e, detail in rollbacks:
+            self._rollback(i, e, detail)
+        self._maybe_checkpoint()
         return self._events_tok, self._events_done
+
+    # ---- transient-fault retry / durability hooks ------------------------
+
+    def _rollback(self, i: int, e: _Entry, detail: str) -> None:
+        """Roll a faulted row back to its last good pre-segment snapshot
+        and re-queue it under exponential backoff — or, past the retry
+        cap, quarantine the slot and fail with ``retry_exhausted``."""
+        e.failure_detail = detail
+        if e.retries >= self.retry.max_retries:   # budget already spent:
+            self.quarantined.add(i)               # this fault is terminal,
+            self._finish(e, "failed", detail="retry_exhausted")  # not a
+            self._release(i)                      # retry
+            return
+        e.retries += 1
+        self.n_retries += 1
+        rows, tok, pos = e.good
+        e.snapshot = (rows, tok, pos)
+        back = min(self.retry.backoff_base_s * (2 ** (e.retries - 1)),
+                   self.retry.backoff_cap_s)
+        e.retry_after = self.clock() + back
+        self.lifecycle[e.req.uid].append(PREEMPTED)
+        self.queue.append(e)
+        self._release(i)
+
+    def _checkpoint_entries(self) -> list[tuple]:
+        """Everything with KV state worth persisting: live rows (one host
+        extract) plus queued preemption/retry snapshots. Each entry is
+        (uid, rows[batch=1], last token, next pos, tokens generated)."""
+        entries: list[tuple] = []
+        live = [i for i in range(self.batch_slots)
+                if self.slots[i] is not None]
+        if live:
+            rows = cache_lib.extract_slots(self.state, live)
+            for j, i in enumerate(live):
+                e = self.slots[i]
+                entries.append((e.req.uid, _tree_row(rows, j),
+                                int(self.tok[i]), int(self.pos[i]),
+                                len(e.tokens)))
+        for e in self.queue:
+            if e.snapshot is not None:
+                rows, tok, pos = e.snapshot
+                if self._migrated:
+                    # keep the checkpoint layout-uniform with the live pool
+                    # (mirrors _resume's requantize-on-the-way-in)
+                    rows = cache_lib.tree_quantize(rows)
+                entries.append((e.req.uid, rows, tok, pos, len(e.tokens)))
+        return entries
+
+    def _checkpoint_now(self) -> int | None:
+        if self.dur is None:
+            return None
+        return self.dur.write_pool_checkpoint(self._fp,
+                                              self._checkpoint_entries())
+
+    def _maybe_checkpoint(self) -> None:
+        if self.dur is not None and self.dur.checkpoint_due():
+            self._checkpoint_now()
+
+    def shutdown(self, *, checkpoint: bool = True) -> dict:
+        """Graceful drain (the SIGTERM path): journal anything staged but
+        not yet ingested (so a restart replays it), checkpoint every row
+        holding KV state, seal the journal. The core must not be stepped
+        afterwards; ``durability.recover`` rebuilds the outstanding work
+        in a fresh process."""
+        info = {
+            "live": sum(s is not None for s in self.slots),
+            "queued": len(self.queue),
+            "staged": len(self._staged),
+            "checkpoint_seq": None,
+        }
+        if self.dur is not None:
+            for r in self._staged:
+                self.dur.log_submit(r)
+            if checkpoint:
+                info["checkpoint_seq"] = self._checkpoint_now()
+            self.dur.seal()
+        return info
 
     def run(self) -> list[Completion]:
         """Drain synchronously (closed-loop form, mirrors
@@ -660,8 +902,12 @@ class FrontDoorCore:
 
     def run_summary(self) -> dict:
         by_reason = {r: 0 for r in FINISH_REASONS}
+        details: dict[str, int] = {}
         for c in self.completed:
             by_reason[c.finish_reason] += 1
+            if c.failure_detail is not None:
+                details[c.failure_detail] = details.get(c.failure_detail,
+                                                        0) + 1
         return {
             "completed": len(self.completed),
             "finish_reasons": by_reason,
@@ -669,6 +915,9 @@ class FrontDoorCore:
             "preempted": self.n_preemptions,
             "timeout": by_reason["timeout"],
             "failed": by_reason["failed"],
+            "failure_details": details,
+            "retries": self.n_retries,
+            "quarantined_slots": sorted(self.quarantined),
             "rejected": by_reason["rejected"],
             "max_queue_depth": self.max_queue_depth,
             "decode_steps": self._decode_steps,
@@ -682,6 +931,8 @@ class FrontDoorCore:
                                        for c in self.completed),
             "prefix_cache": (self.prefix_cache.stats()
                              if self.prefix_cache is not None else None),
+            "durability": (self.dur.stats() if self.dur is not None
+                           else None),
         }
 
 
@@ -700,8 +951,14 @@ class FrontDoor:
     _DONE = object()
 
     def __init__(self, engine: Engine, batch_slots: int, *,
-                 completions_keep: int = 1024, **core_kw):
-        self.core = FrontDoorCore(engine, batch_slots, **core_kw)
+                 completions_keep: int = 1024,
+                 core: FrontDoorCore | None = None, **core_kw):
+        # ``core=`` accepts a prebuilt FrontDoorCore — the restart path
+        # (``durability.recover``) returns one with the journal's
+        # outstanding requests already queued/resumable.
+        if core is not None and core_kw:
+            raise ValueError("pass either core= or core kwargs, not both")
+        self.core = core or FrontDoorCore(engine, batch_slots, **core_kw)
         # All three maps are bounded for a long-lived server: futures and
         # stream queues are dropped as their request completes, finished
         # Completions are kept in a FIFO ring of ``completions_keep`` (the
@@ -714,6 +971,8 @@ class FrontDoor:
         self._wake: asyncio.Event | None = None
         self._task: asyncio.Task | None = None
         self._stopping = False
+        self._halt = False
+        self._parked = False
 
     async def __aenter__(self) -> "FrontDoor":
         self._wake = asyncio.Event()
@@ -751,6 +1010,16 @@ class FrontDoor:
     def completion(self, uid: int) -> Completion | None:
         return self._completions.get(uid)
 
+    @property
+    def quiesced(self) -> bool:
+        """True when the pump is parked on an EMPTY core. ``core.idle``
+        alone is not enough for an outside observer: mid-``step()`` the
+        admit path holds entries in neither queue nor slot for seconds
+        (prefill), so the core looks idle while work is in flight.
+        ``_parked`` is only set while the pump coroutine is suspended
+        between steps, when ``core.idle`` is stable."""
+        return self._parked and self.core.idle
+
     def _remember(self, uid: int, comp: Completion) -> None:
         """Record a completion in the bounded FIFO ring."""
         self._completions[uid] = comp
@@ -778,14 +1047,26 @@ class FrontDoor:
         if task is not None:
             await task
 
+    async def halt(self) -> None:
+        """Stop the pump after the in-flight segment WITHOUT draining:
+        unfinished requests stay live/queued in the core so a follow-up
+        ``core.shutdown(checkpoint=True)`` can journal + checkpoint them
+        for restart recovery. This is the SIGTERM graceful-drain path."""
+        self._halt = True
+        await self.stop()
+
     async def _loop(self) -> None:
         loop = asyncio.get_running_loop()
         while True:
+            if self._halt:
+                break
             if self.core.idle:
                 if self._stopping:
                     break
                 self._wake.clear()
+                self._parked = True
                 await self._wake.wait()
+                self._parked = False
                 continue
             events, dones = await loop.run_in_executor(None, self.core.step)
             for uid, toks in events:

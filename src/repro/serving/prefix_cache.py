@@ -42,6 +42,7 @@ it under Zipfian prefix popularity.
 from __future__ import annotations
 
 import hashlib
+import json
 import time
 from dataclasses import dataclass, field
 from typing import Callable
@@ -154,6 +155,7 @@ class PrefixCache:
         self.n_evictions_ttl = 0
         self.n_evictions_lru = 0
         self.n_too_large = 0
+        self.n_load_skipped = 0
 
     # ---- hashing ----------------------------------------------------------
 
@@ -248,6 +250,75 @@ class PrefixCache:
             self._evict(d, ttl=True)
         return len(dead)
 
+    # ---- disk persistence (checkpoint/ckpt.py bit-exact pack) -------------
+
+    def save(self, path: str) -> int:
+        """Persist every entry to ``<path>.npz`` + ``<path>.meta.json``
+        through the same bit-exact pack the durability checkpoints use —
+        a warm prefix tier survives a serving restart instead of being
+        rebuilt one cold prefill at a time. Returns entries written."""
+        from repro.checkpoint import ckpt
+        arrays: dict = {}
+        entries_meta = []
+        for i, e in enumerate(self._entries.values()):
+            a, meta = ckpt.pack_bitexact(e.rows, prefix=f"e{i}/")
+            arrays.update(a)
+            entries_meta.append({
+                "digest": e.digest.hex(), "prefix_len": e.prefix_len,
+                "first_token": e.first_token, "nbytes": e.nbytes,
+                "access_count": e.access_count, "rows_meta": meta,
+            })
+        np.savez(path + ".npz", **arrays)
+        with open(path + ".meta.json", "w") as f:
+            json.dump({"entries": entries_meta}, f)
+        return len(entries_meta)
+
+    def load(self, path: str, donor_row) -> int:
+        """Merge persisted entries back into the store. ``donor_row`` is a
+        single-row ``extract_slots`` of a fresh decode state under the
+        loading engine's config (the structure donor for the bit-exact
+        unpack); entries packed under an incompatible leaf layout (e.g. an
+        int8 store loaded by a bf16 engine, whose rows lack scale leaves)
+        are skipped, not coerced — their fingerprints could never hit this
+        engine's lookups anyway. Recency restarts at load time (host
+        clocks do not survive a restart); hit counts, and therefore TTLs,
+        carry over. Returns entries loaded."""
+        from repro.checkpoint import ckpt
+        with open(path + ".meta.json") as f:
+            meta = json.load(f)
+        with np.load(path + ".npz") as data:
+            arrays = dict(data)
+        now = self.clock()
+        loaded = 0
+        donor_keys = {k for k, _ in ckpt._flatten_with_paths(donor_row)}
+        for em in meta["entries"]:
+            digest = bytes.fromhex(em["digest"])
+            if digest in self._entries:
+                continue
+            rm = em["rows_meta"]
+            keys = {k[len(rm.get("prefix", "")):] for k in rm["keys"]}
+            if keys != donor_keys:      # strict: unpack would silently
+                self.n_load_skipped += 1  # drop donor-absent leaves
+                continue
+            try:
+                rows = ckpt.unpack_bitexact(arrays, rm, donor_row)
+            except (KeyError, TypeError, ValueError):
+                self.n_load_skipped += 1
+                continue
+            e = PrefixEntry(digest=digest, prefix_len=em["prefix_len"],
+                            rows=rows, first_token=em["first_token"],
+                            nbytes=em["nbytes"], created=now,
+                            last_access=now,
+                            access_count=em["access_count"])
+            e.ttl_s = self.compute_ttl(e)
+            self._entries[digest] = e
+            self.bytes_used += e.nbytes
+            loaded += 1
+        while self.bytes_used > self.cfg.max_bytes and self._entries:
+            lru = min(self._entries.values(), key=lambda e: e.last_access)
+            self._evict(lru.digest, ttl=False)
+        return loaded
+
     # ---- telemetry --------------------------------------------------------
 
     def __len__(self) -> int:
@@ -271,4 +342,5 @@ class PrefixCache:
             "evictions_ttl": self.n_evictions_ttl,
             "evictions_lru": self.n_evictions_lru,
             "too_large": self.n_too_large,
+            "load_skipped": self.n_load_skipped,
         }

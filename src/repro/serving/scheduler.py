@@ -56,6 +56,18 @@ FINISHED = "finished"
 #                the rest of the batch keeps decoding
 FINISH_REASONS = ("eos", "length", "timeout", "shed", "rejected", "failed")
 
+# Typed failure taxonomy (``Completion.failure_detail``; set only when
+# ``finish_reason == "failed"``). Chaos/robustness tests assert on these
+# instead of string-matching a bare "failed":
+#   nan_logits        — non-finite decode logits (real or chaos-injected)
+#   row_fault         — flagged per-row kernel fault mid-segment
+#   retry_exhausted   — transient-fault retry ladder hit its cap; the
+#                       slot was quarantined
+#   prefill_nonfinite — poisoned prompt: non-finite logits at prefill,
+#                       the row never went live
+FAILURE_DETAILS = ("nan_logits", "row_fault", "retry_exhausted",
+                   "prefill_nonfinite")
+
 
 @dataclasses.dataclass
 class Request:
@@ -89,6 +101,10 @@ class Completion:
     #                             "full" (stored rows inserted, no prefill),
     #                             "partial" (suffix-only resumed prefill),
     #                             or "miss" (cold prefill / store disabled)
+    failure_detail: str | None = None   # one of FAILURE_DETAILS when
+    #                             finish_reason == "failed"; None otherwise
+    retries: int = 0            # transient-fault snapshot-rollback retries
+    #                             this request survived (front door only)
 
 
 @dataclasses.dataclass
@@ -203,9 +219,13 @@ class Scheduler:
         shared with the front door so benchmark config blocks can record
         overload behavior uniformly."""
         by_reason = {r: 0 for r in FINISH_REASONS}
+        details: dict[str, int] = {}
         for c in self.completed:
             by_reason[c.finish_reason] = by_reason.get(c.finish_reason,
                                                        0) + 1
+            if c.failure_detail is not None:
+                details[c.failure_detail] = details.get(c.failure_detail,
+                                                        0) + 1
         return {
             "completed": len(self.completed),
             "finish_reasons": by_reason,
@@ -213,6 +233,8 @@ class Scheduler:
             "preempted": sum(c.preemptions for c in self.completed),
             "timeout": by_reason["timeout"],
             "failed": by_reason["failed"],
+            "failure_details": details,
+            "retries": sum(c.retries for c in self.completed),
             "rejected": by_reason["rejected"],
             "max_queue_depth": self.max_queue_depth,
             "decode_steps": self._decode_steps,

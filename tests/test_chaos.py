@@ -19,6 +19,8 @@ from repro.serving.engine import Engine
 from repro.serving.frontdoor import (AdmissionConfig, ChaosConfig,
                                      FrontDoorCore, ServeRequest)
 
+pytestmark = pytest.mark.chaos
+
 INF = float("inf")
 
 
@@ -52,22 +54,26 @@ def _run(eng, reqs, *, slots, chaos=None):
     return {c.uid: c for c in core.run()}, core.run_summary()
 
 
-@pytest.mark.parametrize("field,kind", [("nan_logits_at", "nan-logits"),
-                                        ("fault_at", "row-fault")])
-def test_injected_fault_kills_exactly_one_request(setup, field, kind):
+@pytest.mark.parametrize("field,detail", [("nan_logits_at", "nan_logits"),
+                                          ("fault_at", "row_fault")])
+def test_injected_fault_kills_exactly_one_request(setup, field, detail):
     """A fault at generated-token index k terminates only the poisoned
-    request (typed ``failed``) after exactly k clean tokens; every
-    survivor is bit-identical to the fault-free run."""
+    request (typed ``failed`` + failure_detail) after exactly k clean
+    tokens; every survivor is bit-identical to the fault-free run."""
     cfg, model, params, eng = setup
     reqs = _reqs(cfg, [(8, 10), (10, 10), (12, 10)], seed=0)
     clean, clean_sum = _run(eng, reqs, slots=3)
     assert clean_sum["failed"] == 0
+    assert clean_sum["failure_details"] == {}
+    assert all(c.failure_detail is None for c in clean.values())
 
     k = 5
     chaos = ChaosConfig(**{field: {1: k}})
     faulted, s = _run(eng, reqs, slots=3, chaos=chaos)
 
-    assert faulted[1].finish_reason == "failed", kind
+    assert faulted[1].finish_reason == "failed", detail
+    assert faulted[1].failure_detail == detail    # typed taxonomy
+    assert s["failure_details"] == {detail: 1}
     assert len(faulted[1].tokens) == k            # clean prefix preserved
     np.testing.assert_array_equal(faulted[1].tokens,
                                   clean[1].tokens[:k])
@@ -88,6 +94,7 @@ def test_fault_mid_refill_wave(setup):
     faulted, s = _run(eng, reqs, slots=2,
                       chaos=ChaosConfig(nan_logits_at={3: 4}))
     assert faulted[3].finish_reason == "failed"
+    assert faulted[3].failure_detail == "nan_logits"
     assert len(faulted[3].tokens) == 4
     assert s["failed"] == 1 and s["completed"] == 4
     for uid in (0, 1, 2):

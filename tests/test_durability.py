@@ -1,0 +1,654 @@
+"""Crash-safe serving battery (DESIGN.md §Durability).
+
+Four layers, cheapest first:
+
+  * journal unit tests — checksummed JSONL append/read, torn-tail
+    truncation, digest watermarks, offset-gap detection;
+  * checkpoint unit tests — atomic tmp+rename visibility (a simulated
+    crash between rows and manifest leaves only an ignored partial),
+    keep-last-K pruning, fingerprint compatibility gating;
+  * serialization matrix — ``ckpt.save_rows``/``load_rows`` round-trips
+    slot snapshots bitwise for EVERY policy family (LazyEviction armed
+    counters, G-KV undecayed scores, int8 payload+scales) without
+    touching a model, plus a mesh-sharded extract on multi-device hosts;
+  * end-to-end kill-point harness — a run is crashed deterministically at
+    each instrumented boundary (after_admit, mid_segment, after_harvest,
+    mid_checkpoint), recovered in a fresh core, and the client-reconnect
+    stream (journal's durable tokens + post-recovery live emission) must
+    be bitwise identical to an undisturbed run: no token lost, none
+    emitted twice, exactly one terminal per request. The transient-fault
+    retry ladder and quarantine ride the same fixtures.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs import get_arch
+from repro.core import cache as cache_lib
+from repro.core.policy import make_policy
+from repro.models.api import build_model
+from repro.serving import durability as dur_lib
+from repro.serving.engine import Engine
+from repro.serving.frontdoor import (AdmissionConfig, ChaosConfig,
+                                     FrontDoorCore, RetryConfig,
+                                     ServeRequest)
+from repro.serving.prefix_cache import PrefixCache, PrefixCacheConfig
+
+pytestmark = pytest.mark.durability
+
+INF = float("inf")
+SPEC = [(8, 26), (10, 30), (12, 24)]
+KILL_POINTS = ("after_admit", "mid_segment", "after_harvest",
+               "mid_checkpoint")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("qwen2.5-32b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def eng(setup):
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2, sparse_ratio=4.0)
+    return Engine(model, params, pol)
+
+
+@pytest.fixture(scope="module")
+def baseline(setup, eng):
+    """Fault-free tokens for SPEC — every durability run must reproduce
+    these bitwise."""
+    cfg, _, _ = setup
+    core = FrontDoorCore(eng, batch_slots=2, segment_len=4,
+                         admission=_transparent())
+    core.submit(_reqs(cfg, SPEC))
+    return {c.uid: list(c.tokens) for c in core.run()}
+
+
+def _reqs(cfg, spec, seed=0):
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(uid=i,
+                         prompt=rng.integers(0, cfg.vocab_size,
+                                             size=s).astype(np.int32),
+                         max_new_tokens=n)
+            for i, (s, n) in enumerate(spec)]
+
+
+def _transparent():
+    return AdmissionConfig(compress_at=INF, shed_at=INF, reject_at=INF)
+
+
+def _rand_fill(tree, seed=0):
+    """Random host values in each leaf's own dtype — bf16 leaves get real
+    bf16 bit patterns, int8 payloads random bytes, int32 cursors random
+    ints — so a round-trip that survives is exercising every dtype the
+    pool actually stores."""
+    rng = np.random.default_rng(seed)
+
+    def one(x):
+        x = np.asarray(x)
+        if np.issubdtype(x.dtype, np.integer):
+            lo, hi = (0, 127) if x.dtype == np.int8 else (-5, 1000)
+            return rng.integers(lo, hi, size=x.shape).astype(x.dtype)
+        return rng.standard_normal(x.shape).astype(x.dtype)
+    return jax.tree.map(one, tree)
+
+
+def _tree_equal(a, b, msg=""):
+    la = jax.tree.leaves(a)
+    lb = jax.tree.leaves(b)
+    assert len(la) == len(lb), msg
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype, f"{msg}: {x.dtype} != {y.dtype}"
+        np.testing.assert_array_equal(x, y, err_msg=msg)
+
+
+# --------------------------------------------------------------------------
+# Journal
+# --------------------------------------------------------------------------
+
+def test_journal_append_read_roundtrip(tmp_path):
+    path = str(tmp_path / "j.log")
+    j = dur_lib.Journal(path)
+    recs = [{"ev": "open", "fp": "ab" * 16},
+            {"ev": "submit", "uid": 0, "prompt": [1, 2, 3], "n": 4,
+             "pri": 0, "dl": None, "dt": None},
+            {"ev": "tok", "uid": 0, "off": 0, "toks": [7, 8]}]
+    for r in recs:
+        j.append(r)
+    j.close()
+    got, good = dur_lib.read_journal(path)
+    assert got == recs
+    assert good == os.path.getsize(path)
+
+
+def test_journal_torn_tail_truncated(tmp_path):
+    path = str(tmp_path / "j.log")
+    j = dur_lib.Journal(path)
+    j.append({"ev": "open", "fp": "00"})
+    j.append({"ev": "tok", "uid": 0, "off": 0, "toks": [1]})
+    j.close()
+    clean = os.path.getsize(path)
+    with open(path, "ab") as f:       # torn append: no newline, no checksum
+        f.write(b'{"ev": "tok", "uid": 0, "off"')
+    recs, good = dur_lib.read_journal(path)
+    assert len(recs) == 2 and good == clean
+
+
+def test_journal_corrupt_line_stops_read(tmp_path):
+    path = str(tmp_path / "j.log")
+    j = dur_lib.Journal(path)
+    for i in range(4):
+        j.append({"ev": "tok", "uid": 0, "off": i, "toks": [i]})
+    j.close()
+    raw = open(path, "rb").read()
+    lines = raw.splitlines(keepends=True)
+    # flip a payload byte of line 2: its checksum no longer matches, so
+    # it AND everything after it is discarded (append-only semantics)
+    bad = bytearray(lines[2])
+    bad[10] ^= 0xFF
+    open(path, "wb").write(b"".join(lines[:2]) + bytes(bad) + lines[3])
+    recs, good = dur_lib.read_journal(path)
+    assert len(recs) == 2
+    assert good == len(lines[0]) + len(lines[1])
+
+
+def test_digest_watermark_terminals_outstanding():
+    recs = [
+        {"ev": "open", "fp": "00"},
+        {"ev": "submit", "uid": 0, "prompt": [1], "n": 8, "pri": 0,
+         "dl": None, "dt": None},
+        {"ev": "submit", "uid": 1, "prompt": [2], "n": 8, "pri": 0,
+         "dl": None, "dt": None},
+        {"ev": "admit", "uid": 0},
+        {"ev": "tok", "uid": 0, "off": 0, "toks": [5, 6]},
+        {"ev": "tok", "uid": 0, "off": 2, "toks": [7]},
+        # idempotent overlap: a recovered run re-journals an old suffix
+        {"ev": "tok", "uid": 0, "off": 1, "toks": [6, 7, 8]},
+        {"ev": "end", "uid": 1, "reason": "rejected", "detail": None},
+    ]
+    dig = dur_lib.digest_journal(recs)
+    assert dig.tokens[0] == [5, 6, 7, 8]
+    assert dig.watermark(0) == 4 and dig.watermark(1) == 0
+    assert dig.terminal[1] == ("rejected", None)
+    assert dig.outstanding() == [0]
+    assert not dig.sealed
+
+
+def test_digest_offset_gap_is_typed_error():
+    recs = [{"ev": "submit", "uid": 0, "prompt": [1], "n": 8, "pri": 0,
+             "dl": None, "dt": None},
+            {"ev": "tok", "uid": 0, "off": 0, "toks": [5]},
+            {"ev": "tok", "uid": 0, "off": 3, "toks": [9]}]   # hole at 1-2
+    with pytest.raises(ValueError, match="gap"):
+        dur_lib.digest_journal(recs)
+
+
+# --------------------------------------------------------------------------
+# Checkpoints (no model: synthetic pool rows)
+# --------------------------------------------------------------------------
+
+def _fake_rows(kind="lethe", kv_format="bf16", seed=0):
+    pol = make_policy(kind, capacity=8, kv_format=kv_format)
+    state = cache_lib.init_cache(n_layers=2, batch=1, n_kv_heads=2,
+                                 capacity=8, d_head=4, policy=pol)
+    return _rand_fill(cache_lib.extract_slots(state, [0]), seed=seed)
+
+
+def _entry(uid, seed):
+    return (uid, _fake_rows(seed=seed), 7 + uid, 11 + uid, 3 + uid)
+
+
+def test_checkpoint_roundtrip_and_prune(tmp_path):
+    root = str(tmp_path)
+    fp = b"\x01" * 16
+    for seq in (1, 2, 3):
+        dur_lib.write_checkpoint(root, seq, fp,
+                                 [_entry(0, seq), _entry(1, seq + 10)],
+                                 keep=2)
+    assert dur_lib.list_checkpoints(root) == [2, 3]   # keep-last-K
+    donor = _fake_rows()
+    ck = dur_lib.load_checkpoint(root, 3, donor)
+    assert ck.seq == 3 and set(ck.uids) == {0, 1}
+    assert ck.tok[1] == 8 and ck.pos[1] == 12 and ck.n_tokens[1] == 4
+    _tree_equal(ck.row_for(0), _fake_rows(seed=3), "uid0 row")
+    _tree_equal(ck.row_for(1), _fake_rows(seed=13), "uid1 row")
+
+
+def test_checkpoint_mid_crash_leaves_no_visible_partial(tmp_path):
+    root = str(tmp_path)
+    fp = b"\x02" * 16
+    dur_lib.write_checkpoint(root, 1, fp, [_entry(0, 0)], keep=4)
+
+    def crash(point):
+        if point == "mid_checkpoint":
+            raise dur_lib.SimulatedCrash(point)
+    with pytest.raises(dur_lib.SimulatedCrash):
+        dur_lib.write_checkpoint(root, 2, fp, [_entry(0, 1)], keep=4,
+                                 crash=crash)
+    assert dur_lib.list_checkpoints(root) == [1]      # partial invisible
+    ck = dur_lib.latest_compatible_checkpoint(root, fp, _fake_rows())
+    assert ck is not None and ck.seq == 1
+
+
+def test_checkpoint_fingerprint_gates_compat(tmp_path):
+    root = str(tmp_path)
+    dur_lib.write_checkpoint(root, 1, b"\x03" * 16, [_entry(0, 0)], keep=4)
+    dur_lib.write_checkpoint(root, 2, b"\x04" * 16, [_entry(0, 1)], keep=4)
+    donor = _fake_rows()
+    # newest wins among matches; a mismatched newer one is skipped
+    ck = dur_lib.latest_compatible_checkpoint(root, b"\x03" * 16, donor)
+    assert ck is not None and ck.seq == 1
+    assert dur_lib.latest_compatible_checkpoint(root, b"\x05" * 16,
+                                                donor) is None
+
+
+# --------------------------------------------------------------------------
+# Snapshot serialization matrix: every policy family x kv_format
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_format", ["bf16", "int8"])
+@pytest.mark.parametrize("kind", ["fullkv", "lethe", "h2o", "streaming",
+                                  "pyramidkv", "lazyeviction", "gkv"])
+def test_rows_disk_roundtrip_every_policy(tmp_path, kind, kv_format):
+    """extract_slots rows -> save_rows -> load_rows must be BITWISE for
+    every policy family's aux state (LazyEviction (budget, evict_at)
+    armed pairs, G-KV undecayed score mass, int8 payload+scales) — this
+    is what makes checkpoint-resume indistinguishable from never having
+    crashed."""
+    rows = _fake_rows(kind, kv_format, seed=17)
+    path = str(tmp_path / "rows")
+    ckpt.save_rows(path, rows)
+    back = ckpt.load_rows(path, _fake_rows(kind, kv_format, seed=0))
+    _tree_equal(back, rows, f"{kind}/{kv_format}")
+
+
+@pytest.mark.skipif(jax.device_count() < 4,
+                    reason="mesh round-trip needs >= 4 devices; run under "
+                           "XLA_FLAGS=--xla_force_host_platform_device"
+                           "_count=8")
+def test_rows_disk_roundtrip_under_mesh(tmp_path, setup):
+    """A mesh-sharded live state extracts to host rows that round-trip
+    bitwise — checkpoints taken on a sharded server restore on any
+    topology whose fingerprint matches."""
+    from repro.serving.meshing import ServingMesh
+    cfg, model, params = setup
+    pol = make_policy("lethe", capacity=24, sink_len=2, sparse_ratio=4.0)
+    mesh = ServingMesh.build("2,2")
+    eng = Engine(model, params, pol, mesh=mesh)
+    core = FrontDoorCore(eng, batch_slots=2, segment_len=4,
+                         admission=_transparent())
+    core.submit(_reqs(cfg, [(8, 6), (10, 6)]))
+    core.step()
+    core.step()
+    rows = cache_lib.extract_slots(core.state, [0, 1])
+    path = str(tmp_path / "rows")
+    ckpt.save_rows(path, rows)
+    donor = cache_lib.extract_slots(eng.new_decode_state(2), [0, 1])
+    _tree_equal(ckpt.load_rows(path, donor), rows, "mesh rows")
+
+
+# --------------------------------------------------------------------------
+# End-to-end: durable run, kill points, recovery
+# --------------------------------------------------------------------------
+
+def test_durable_run_matches_baseline_and_journal(tmp_path, setup, eng,
+                                                  baseline):
+    cfg, _, _ = setup
+    root = str(tmp_path / "dur")
+    core = FrontDoorCore(eng, batch_slots=2, segment_len=4,
+                         admission=_transparent(),
+                         durability=dur_lib.DurabilityConfig(
+                             root=root, checkpoint_every=2))
+    core.submit(_reqs(cfg, SPEC))
+    out = {c.uid: c for c in core.run()}
+    for u in baseline:
+        np.testing.assert_array_equal(out[u].tokens, baseline[u])
+    recs, _ = dur_lib.read_journal(os.path.join(root,
+                                                dur_lib.JOURNAL_NAME))
+    dig = dur_lib.digest_journal(recs)
+    assert len(dig.terminal) == len(SPEC)
+    for u in baseline:           # write-ahead: journal == emitted stream
+        np.testing.assert_array_equal(dig.tokens[u], baseline[u],
+                                      err_msg=f"journal uid {u}")
+    assert dur_lib.list_checkpoints(root)
+    s = core.run_summary()["durability"]
+    assert s["checkpoints_written"] > 0 and not s["sealed"]
+
+
+def _crash_and_recover(cfg, eng, root, point, baseline, *, pre_steps=3,
+                       expect_ckpt=True):
+    """Run SPEC under durability, SIGKILL-simulate at ``point``, recover
+    in a fresh core, and assert the client-reconnect stream contract."""
+    d = dur_lib.Durability(dur_lib.DurabilityConfig(root=root,
+                                                    checkpoint_every=2))
+    core = FrontDoorCore(eng, batch_slots=2, segment_len=4,
+                         admission=_transparent(), durability=d)
+    core.submit(_reqs(cfg, SPEC))
+    emitted: dict[int, list[int]] = {}
+    for _ in range(pre_steps):       # get past a completed checkpoint
+        ev, _ = core.step()
+        for uid, toks in ev:
+            emitted.setdefault(uid, []).extend(toks)
+    if expect_ckpt:
+        assert dur_lib.list_checkpoints(root), point
+    d.crash_points.add(point)
+    with pytest.raises(dur_lib.SimulatedCrash):
+        while not core.idle:
+            ev, _ = core.step()
+            for uid, toks in ev:
+                emitted.setdefault(uid, []).extend(toks)
+
+    core2, report = dur_lib.recover(eng, root, batch_slots=2,
+                                    segment_len=4,
+                                    admission=_transparent())
+    assert report["journal_truncated_bytes"] == 0
+    # client reconnect: everything observed pre-crash is a prefix of the
+    # journal's durable stream (nothing acked was lost) ...
+    streams: dict[int, list[int]] = {}
+    for u, durable in report["durable_tokens"].items():
+        pre = emitted.get(u, [])
+        assert durable[:len(pre)] == pre, (point, u)
+        streams[u] = list(durable)
+    # ... and live emission continues from the watermark, no overlap
+    while not core2.idle:
+        ev, _ = core2.step()
+        for uid, toks in ev:
+            streams.setdefault(uid, []).extend(toks)
+    recovered = {c.uid for c in core2.completed}
+    pre_terms = {c.uid for c in core.completed}
+    assert not (pre_terms & recovered), point      # exactly-once terminal
+    assert pre_terms | recovered == set(baseline), point
+    for u, toks in baseline.items():
+        np.testing.assert_array_equal(streams[u], toks,
+                                      err_msg=f"{point}: stream uid {u}")
+    return report
+
+
+@pytest.mark.parametrize("point", KILL_POINTS)
+def test_kill_point_stream_bitexact(tmp_path, setup, eng, baseline, point):
+    cfg, _, _ = setup
+    report = _crash_and_recover(cfg, eng, str(tmp_path / point), point,
+                                baseline)
+    assert (report["resumed_from_checkpoint"]
+            + report["replayed_from_prompt"]) == report["outstanding"]
+    assert report["resumed_from_checkpoint"] > 0    # checkpoint was used
+
+
+@pytest.mark.parametrize("kind,kv_format,point", [
+    ("h2o", "bf16", "mid_segment"),
+    ("lazyeviction", "bf16", "after_admit"),
+    ("lethe", "int8", "after_harvest"),
+    ("h2o", "int8", "mid_checkpoint"),
+    ("lazyeviction", "int8", "mid_segment"),
+])
+def test_kill_point_policy_matrix(tmp_path, setup, kind, kv_format, point):
+    """Crash-recovery is policy-blind: the checkpoint carries whatever aux
+    state the family keeps (H2O accumulators, LazyEviction armed pairs,
+    int8 scales) and the recovered stream is still bitwise identical."""
+    cfg, model, params = setup
+    pol = make_policy(kind, capacity=24, sink_len=2, sparse_ratio=4.0,
+                      kv_format=kv_format)
+    eng = Engine(model, params, pol)
+    core = FrontDoorCore(eng, batch_slots=2, segment_len=4,
+                         admission=_transparent())
+    core.submit(_reqs(cfg, SPEC))
+    base = {c.uid: list(c.tokens) for c in core.run()}
+    _crash_and_recover(cfg, eng, str(tmp_path / "d"), point, base)
+
+
+def test_recover_after_graceful_seal_is_clean(tmp_path, setup, eng):
+    """shutdown() mid-run journals + checkpoints + seals; recover() then
+    resumes the outstanding half and finishes it bitwise."""
+    cfg, _, _ = setup
+    core = FrontDoorCore(eng, batch_slots=2, segment_len=4,
+                         admission=_transparent())
+    core.submit(_reqs(cfg, SPEC))
+    base = {c.uid: list(c.tokens) for c in core.run()}
+
+    root = str(tmp_path / "dur")
+    core = FrontDoorCore(eng, batch_slots=2, segment_len=4,
+                         admission=_transparent(),
+                         durability=dur_lib.DurabilityConfig(
+                             root=root, checkpoint_every=2))
+    core.submit(_reqs(cfg, SPEC))
+    streams: dict[int, list[int]] = {}
+    for _ in range(3):
+        ev, _ = core.step()
+        for uid, toks in ev:
+            streams.setdefault(uid, []).extend(toks)
+    info = core.shutdown(checkpoint=True)          # SIGTERM path
+    assert info["checkpoint_seq"] is not None
+    assert info["live"] + info["queued"] > 0
+
+    core2, report = dur_lib.recover(eng, root, batch_slots=2,
+                                    segment_len=4,
+                                    admission=_transparent())
+    assert report["sealed"]
+    assert report["resumed_from_checkpoint"] == info["live"]
+    while not core2.idle:
+        ev, _ = core2.step()
+        for uid, toks in ev:
+            streams.setdefault(uid, []).extend(toks)
+    done = {c.uid for c in core.completed} | {c.uid
+                                              for c in core2.completed}
+    assert done == set(base)
+    for u, toks in base.items():
+        np.testing.assert_array_equal(streams[u], toks,
+                                      err_msg=f"uid {u}")
+
+
+def test_double_crash_recovery_still_bitexact(tmp_path, setup, eng,
+                                              baseline):
+    """Crash DURING recovery's own serving run: absolute token offsets
+    mean the watermark survives any number of crashes."""
+    cfg, _, _ = setup
+    root = str(tmp_path / "dur")
+    d = dur_lib.Durability(dur_lib.DurabilityConfig(root=root,
+                                                    checkpoint_every=2))
+    core = FrontDoorCore(eng, batch_slots=2, segment_len=4,
+                         admission=_transparent(), durability=d)
+    core.submit(_reqs(cfg, SPEC))
+    streams: dict[int, list[int]] = {}
+    for _ in range(3):
+        ev, _ = core.step()
+        for uid, toks in ev:
+            streams.setdefault(uid, []).extend(toks)
+    d.crash_points.add("after_harvest")
+    with pytest.raises(dur_lib.SimulatedCrash):
+        while not core.idle:
+            core.step()          # post-crash emissions lost on the wire
+
+    core2, rep2 = dur_lib.recover(eng, root, batch_slots=2, segment_len=4,
+                                  admission=_transparent())
+    core2.dur.crash_points.add("mid_segment")
+    with pytest.raises(dur_lib.SimulatedCrash):
+        while not core2.idle:
+            core2.step()
+
+    core3, rep3 = dur_lib.recover(eng, root, batch_slots=2, segment_len=4,
+                                  admission=_transparent())
+    streams = {u: list(t) for u, t in rep3["durable_tokens"].items()}
+    while not core3.idle:
+        ev, _ = core3.step()
+        for uid, toks in ev:
+            streams.setdefault(uid, []).extend(toks)
+    done = ({c.uid for c in core.completed}
+            | {c.uid for c in core2.completed}
+            | {c.uid for c in core3.completed})
+    assert done == set(baseline)
+    for u, toks in baseline.items():
+        np.testing.assert_array_equal(streams[u], toks,
+                                      err_msg=f"uid {u}")
+
+
+# --------------------------------------------------------------------------
+# Transient-fault retry ladder
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("field", ["nan_logits_at", "fault_at"])
+def test_transient_fault_retries_to_bitexact_completion(setup, eng,
+                                                        baseline, field):
+    """A one-shot fault rolls the row back to its pre-segment snapshot and
+    the retry completes the request with IDENTICAL tokens — the fault is
+    invisible except in the retry counters."""
+    cfg, _, _ = setup
+    core = FrontDoorCore(eng, batch_slots=3, segment_len=4,
+                         admission=_transparent(),
+                         chaos=ChaosConfig(**{field: {1: 5}}),
+                         retry=RetryConfig(max_retries=3))
+    core.submit(_reqs(cfg, SPEC))
+    out = {c.uid: c for c in core.run()}
+    s = core.run_summary()
+    assert out[1].finish_reason in ("eos", "length")
+    assert out[1].retries == 1 and s["retries"] == 1
+    assert s["failed"] == 0 and not s["quarantined_slots"]
+    for u in baseline:
+        np.testing.assert_array_equal(out[u].tokens, baseline[u],
+                                      err_msg=f"uid {u}")
+
+
+def test_persistent_fault_exhausts_retries_and_quarantines(setup, eng,
+                                                           baseline):
+    cfg, _, _ = setup
+    core = FrontDoorCore(eng, batch_slots=3, segment_len=4,
+                         admission=_transparent(),
+                         chaos=ChaosConfig(fault_at={1: 5},
+                                           persistent=True),
+                         retry=RetryConfig(max_retries=2))
+    core.submit(_reqs(cfg, SPEC))
+    out = {c.uid: c for c in core.run()}
+    s = core.run_summary()
+    assert out[1].finish_reason == "failed"
+    assert out[1].failure_detail == "retry_exhausted"
+    assert out[1].retries == 2 == s["retries"]
+    assert s["failure_details"] == {"retry_exhausted": 1}
+    assert s["quarantined_slots"]          # broken slot out of rotation
+    for u in (0, 2):                       # survivors untouched
+        np.testing.assert_array_equal(out[u].tokens, baseline[u],
+                                      err_msg=f"survivor uid {u}")
+
+
+def test_retry_disabled_fails_fast_with_typed_detail(setup, eng):
+    cfg, _, _ = setup
+    core = FrontDoorCore(eng, batch_slots=3, segment_len=4,
+                         admission=_transparent(),
+                         chaos=ChaosConfig(nan_logits_at={1: 5}))
+    core.submit(_reqs(cfg, SPEC))
+    out = {c.uid: c for c in core.run()}
+    s = core.run_summary()
+    assert out[1].finish_reason == "failed"
+    assert out[1].failure_detail == "nan_logits"
+    assert s["failure_details"] == {"nan_logits": 1}
+    assert s["retries"] == 0 and not s["quarantined_slots"]
+
+
+# --------------------------------------------------------------------------
+# Prefix-store disk persistence
+# --------------------------------------------------------------------------
+
+def test_prefix_store_save_load_roundtrip(tmp_path):
+    store = PrefixCache(PrefixCacheConfig(max_bytes=1 << 24, block_size=4,
+                                          min_tokens=4))
+    fp = b"\x07" * 16
+    toks_a = np.arange(8, dtype=np.int32)
+    toks_b = np.arange(100, 112, dtype=np.int32)
+    rows_a = _fake_rows(seed=1)
+    rows_b = _fake_rows("h2o", seed=2)
+    assert store.insert(fp, toks_a, rows_a, first_token=42)
+    assert store.insert(fp, toks_b, rows_b, first_token=43)
+    path = str(tmp_path / "prefixes")
+    assert store.save(path) == 2
+
+    fresh = PrefixCache(PrefixCacheConfig(max_bytes=1 << 24, block_size=4,
+                                          min_tokens=4))
+    assert fresh.load(path, _fake_rows(seed=0)) == 2
+    for toks, rows, first in ((toks_a, rows_a, 42), (toks_b, rows_b, 43)):
+        hit = fresh.lookup(fp, toks)
+        assert hit is not None and hit.full
+        assert hit.entry.first_token == first
+        _tree_equal(hit.entry.rows, rows, "entry")
+    assert fresh.stats()["load_skipped"] == 0
+    # idempotent: loading again adds nothing
+    assert fresh.load(path, _fake_rows(seed=0)) == 0
+
+
+def test_prefix_store_load_skips_incompatible(tmp_path):
+    """An int8 store loaded by a bf16 engine (or a mangled meta) must be
+    SKIPPED, never coerced — a structure-blind unpack would silently drop
+    the scale leaves and poison later admissions."""
+    store = PrefixCache(PrefixCacheConfig(max_bytes=1 << 24, block_size=4,
+                                          min_tokens=4))
+    store.insert(b"\x08" * 16, np.arange(8, dtype=np.int32),
+                 _fake_rows(kv_format="int8", seed=3), first_token=5)
+    path = str(tmp_path / "prefixes")
+    store.save(path)
+    fresh = PrefixCache(PrefixCacheConfig(max_bytes=1 << 24))
+    assert fresh.load(path, _fake_rows(seed=0)) == 0   # bf16 donor
+    assert fresh.stats()["load_skipped"] == 1
+
+    meta = json.load(open(path + ".meta.json"))
+    meta["entries"][0]["rows_meta"]["keys"] = ["e0/nonexistent"]
+    json.dump(meta, open(path + ".meta.json", "w"))
+    fresh2 = PrefixCache(PrefixCacheConfig(max_bytes=1 << 24))
+    assert fresh2.load(path, _fake_rows(kv_format="int8", seed=0)) == 0
+    assert fresh2.stats()["load_skipped"] == 1
+
+
+# --------------------------------------------------------------------------
+# Process-level: SIGTERM graceful drain + --recover restart
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_serve_sigterm_drain_then_recover(tmp_path):
+    """Real signals against the real launcher: SIGTERM mid-decode exits 0
+    after checkpoint+seal; ``--recover`` finishes every outstanding
+    request in a new process."""
+    root = str(tmp_path / "dur")
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    args = [sys.executable, "-u", "-m", "repro.launch.serve",
+            "--arch", "qwen2.5-32b", "--reduced", "--policy", "lethe",
+            "--capacity", "24", "--slots", "2", "--segment-len", "4",
+            "--prompt-len", "8", "--gen", "400", "--requests", "4",
+            "--durability-dir", root, "--checkpoint-every", "2"]
+    p = subprocess.Popen(args, env=env, stdout=subprocess.PIPE,
+                         stderr=subprocess.STDOUT, text=True)
+    out, deadline = [], time.monotonic() + 300
+    for line in p.stdout:            # wait for live decode, then SIGTERM
+        out.append(line)
+        if "tok[" in line:
+            p.send_signal(signal.SIGTERM)
+            break
+        assert time.monotonic() < deadline
+    rest, _ = p.communicate(timeout=300)
+    out = "".join(out) + rest
+    assert p.returncode == 0, out
+    assert "graceful drain" in out and "drained:" in out, out
+    assert dur_lib.list_checkpoints(root), out
+
+    r = subprocess.run(args + ["--recover", "--requests", "0"], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "recovery:" in r.stdout, r.stdout
+    recs, _ = dur_lib.read_journal(os.path.join(root,
+                                                dur_lib.JOURNAL_NAME))
+    dig = dur_lib.digest_journal(recs)
+    assert len(dig.terminal) == 4            # every request terminated
+    assert dig.outstanding() == [] and dig.sealed
+    for u, (reason, _) in dig.terminal.items():
+        assert reason == "length", (u, reason)
+        assert len(dig.tokens[u]) == 400
